@@ -1,0 +1,33 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def make_blobs(n, d, k, seed=0, sparse_frac=0.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-4, 4, (k, d))
+    lab = rng.integers(0, k, n)
+    x = centers[lab] + rng.normal(0, 0.4, (n, d))
+    if sparse_frac:
+        x = x * (rng.random((n, d)) >= sparse_frac)
+    return x
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,32 @@
+"""Paper Fig. 2: per-step (S1 distance / S2 assignment / S3 update)
+online-vs-offline runtime and communication, WAN, n=1000 d=2 k=4 t=20."""
+from __future__ import annotations
+
+from benchmarks.common import make_blobs
+from repro.core.channel import WAN
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+
+
+def run():
+    x = make_blobs(1000, 2, 4, seed=2)
+    res = SecureKMeans(KMeansConfig(k=4, iters=20, seed=3)
+                       ).fit(x[:, :1], x[:, 1:])
+    rows = []
+    for step in ("S1", "S2", "S3"):
+        on_b, on_r = res.log.by_tag("online").get(step, (0, 0))
+        off_b, off_r = res.log.by_tag("offline").get(step, (0, 0))
+        rows.append({
+            "step": step,
+            "online_MB": round(on_b / 2**20, 2),
+            "online_rounds": on_r,
+            "offline_MB": round(off_b / 2**20, 2),
+            "online_wan_s": round(WAN.time_s(on_b, on_r), 2),
+            "offline_wan_s": round(WAN.time_s(off_b, off_r), 2),
+        })
+    return rows
+
+
+def derived(rows):
+    on = sum(r["online_wan_s"] for r in rows)
+    off = sum(r["offline_wan_s"] for r in rows)
+    return off / max(on, 1e-9)   # paper: offline dominates heavily

@@ -1,0 +1,75 @@
+"""Paper Fig. 4: sparse-optimization study.
+
+(a) online cost vs feature dimension with/without Protocol 2 (measured run
+    at a documented scale-down: n=10^5 vs the paper's 10^6 — single host,
+    python; the comparison structure is dimension scaling, which is
+    preserved).
+(b) analytic online traffic vs sparsity degree {0, .5, .9, .99} and sample
+    size 1e6..5e6 for the distance step (paper's choice), using the exact
+    closed forms of both paths (sparse_matmul_comm_bytes is
+    nnz-independent; the HE *time* model is nnz-proportional).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_blobs
+from repro.core.channel import WAN
+from repro.core.he import OU_COST_S
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+from repro.core.sparse import (dense_ss_matmul_comm_bytes,
+                               sparse_matmul_comm_bytes)
+
+
+def run_a(quick: bool = False):
+    rows = []
+    n = 10**4 if quick else 10**5
+    for d in (64, 128, 256):
+        x = make_blobs(n, d, 2, seed=4, sparse_frac=0.2)
+        half = d // 2
+        out = {}
+        for sparse in (False, True):
+            res = SecureKMeans(KMeansConfig(k=2, iters=2, seed=3,
+                                            sparse=sparse)
+                               ).fit(x[:, :half], x[:, half:])
+            b = res.log.total_bytes("online")
+            r = res.log.total_rounds("online")
+            t = WAN.time_s(b, r) + res.online_seconds + res.he_seconds
+            out["sparse" if sparse else "dense"] = (b, t)
+        rows.append({"n": n, "d": d,
+                     "dense_online_MB": round(out["dense"][0] / 2**20, 1),
+                     "sparse_online_MB": round(out["sparse"][0] / 2**20, 1),
+                     "dense_online_wan_s": round(out["dense"][1], 1),
+                     "sparse_online_wan_s": round(out["sparse"][1], 1)})
+    return rows
+
+
+def run_b():
+    rows = []
+    k, d = 2, 1024
+    for n in (10**6, 2 * 10**6, 5 * 10**6):
+        for sparsity in (0.0, 0.5, 0.9, 0.99):
+            nnz = int(n * d * (1 - sparsity))
+            dense_b = dense_ss_matmul_comm_bytes(n, d, k)
+            sparse_b = sparse_matmul_comm_bytes(n, d, k)
+            he_s = (d * k * OU_COST_S["enc"] + nnz * k * OU_COST_S["pmul"]
+                    + nnz * k * OU_COST_S["add"]
+                    + np.ceil(n * k / 8) * OU_COST_S["dec"])
+            rows.append({
+                "n": n, "sparsity": sparsity,
+                "dense_online_GB": round(dense_b / 2**30, 1),
+                "sparse_online_GB": round(sparse_b / 2**30, 2),
+                "sparse_he_cpu_s": round(float(he_s), 0),
+                "dense_wan_s": round(WAN.time_s(dense_b, 2), 0),
+                "sparse_wan_s": round(WAN.time_s(sparse_b, 2)
+                                      + float(he_s), 0)})
+    return rows
+
+
+def derived(rows_b):
+    """Headline: traffic ratio dense/sparse at the paper's deployment point
+    (n=1e6, sparsity .9)."""
+    for r in rows_b:
+        if r["n"] == 10**6 and r["sparsity"] == 0.9:
+            return r["dense_online_GB"] / max(r["sparse_online_GB"], 1e-9)
+    return float("nan")

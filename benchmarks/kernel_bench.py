@@ -1,0 +1,49 @@
+"""Microbenchmarks of the Pallas kernels (interpret mode on CPU — relative
+structure only; the roofline story for TPU lives in launch/roofline.py) and
+of the secure primitives' throughput."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    n, d, k = 1024, 512, 128
+    a64 = jnp.asarray(rng.integers(0, 1 << 64, (n, d), dtype=np.uint64))
+    b64 = jnp.asarray(rng.integers(0, 1 << 64, (d, k), dtype=np.uint64))
+    rows.append({"kernel": "ring_matmul_u64", "shape": f"{n}x{d}x{k}",
+                 "us_per_call": round(_time(ops.ring_matmul, a64, b64), 0)})
+    x = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    mu = jnp.asarray(rng.normal(0, 1, (k, d)), jnp.float32)
+    rows.append({"kernel": "fused_esd", "shape": f"{n}x{d}x{k}",
+                 "us_per_call": round(_time(ops.esd, x, mu), 0)})
+    dmat = jnp.asarray(rng.normal(0, 1, (n, k)), jnp.float32)
+    rows.append({"kernel": "argmin_onehot", "shape": f"{n}x{k}",
+                 "us_per_call": round(_time(ops.argmin_onehot, dmat), 0)})
+    xs = np.asarray(rng.normal(0, 1, (256, 2048)) *
+                    (rng.random((256, 2048)) > 0.9), np.float32)
+    y = jnp.asarray(rng.normal(0, 1, (2048, 8)), jnp.float32)
+    t0 = time.perf_counter()
+    ops.spmm_from_dense(xs, y).block_until_ready()
+    rows.append({"kernel": "spmm_ell(0.9 sparse)", "shape": "256x2048x8",
+                 "us_per_call": round((time.perf_counter() - t0) * 1e6, 0)})
+    return rows
+
+
+def derived(rows):
+    return rows[0]["us_per_call"]

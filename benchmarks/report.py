@@ -1,0 +1,67 @@
+"""Format dryrun/roofline JSON into the EXPERIMENTS.md markdown tables.
+
+    PYTHONPATH=src python -m benchmarks.report dryrun_results.json \
+        roofline_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt(v, nd=3):
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1000 or abs(v) < 0.001:
+            return f"{v:.2e}"
+        return f"{v:.{nd}g}"
+    return str(v)
+
+
+def dryrun_table(path: str) -> str:
+    rs = json.load(open(path))
+    lines = ["| arch | shape | mesh | status | compile s | GFLOP/dev | "
+             "arg GB/dev | peak GB/dev | link GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rs:
+        mem = r.get("memory", {})
+        peak = mem.get("peak_memory_in_bytes") or (
+            mem.get("argument_size_in_bytes", 0)
+            + mem.get("temp_size_in_bytes", 0)
+            + mem.get("output_size_in_bytes", 0))
+        lines.append(
+            f"| {r['arch']} | {r.get('shape','-')} "
+            f"| {r.get('mesh_name', r.get('mesh','-'))} | {r['status']} "
+            f"| {r.get('compile_s','-')} "
+            f"| {fmt(r.get('flops_per_device', 0)/1e9)} "
+            f"| {fmt(mem.get('argument_size_in_bytes', 0)/2**30)} "
+            f"| {fmt(peak/2**30)} "
+            f"| {fmt(r.get('collectives',{}).get('link_bytes',0)/2**30)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(path: str) -> str:
+    rs = json.load(open(path))
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful ratio | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rs:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"{r.get('status')} | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(r['compute_s'])} "
+            f"| {fmt(r['memory_s'])} | {fmt(r['collective_s'])} "
+            f"| **{r['dominant']}** | {fmt(r['useful_ratio'], 2)} "
+            f"| {r['roofline_fraction']*100:.1f}% |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1:
+        print(dryrun_table(sys.argv[1]))
+    if len(sys.argv) > 2:
+        print()
+        print(roofline_table(sys.argv[2]))

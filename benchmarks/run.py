@@ -1,0 +1,68 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # full
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized
+
+Prints one ``name,seconds,derived`` CSV line per suite plus the per-row
+tables, and writes benchmarks/results.json consumed by EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_online_offline, fig3_vectorization,
+                            fig4_sparse, kernel_bench, q5_fraud, table1_2)
+
+    suites = {
+        "table1_2_runtime_comm": lambda: table1_2.run(quick=args.quick),
+        "fig2_online_offline": fig2_online_offline.run,
+        "fig3_vectorization": fig3_vectorization.run,
+        "fig4a_sparse_dim": lambda: fig4_sparse.run_a(quick=args.quick),
+        "fig4b_sparse_degree": fig4_sparse.run_b,
+        "q5_fraud_jaccard": lambda: q5_fraud.run(quick=args.quick),
+        "kernels_interpret": kernel_bench.run,
+    }
+    derived_fns = {
+        "table1_2_runtime_comm": table1_2.derived,
+        "fig2_online_offline": fig2_online_offline.derived,
+        "fig3_vectorization": fig3_vectorization.derived,
+        "fig4b_sparse_degree": fig4_sparse.derived,
+        "q5_fraud_jaccard": q5_fraud.derived,
+        "kernels_interpret": kernel_bench.derived,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    all_results = {}
+    print("name,seconds,derived")
+    for name, fn in suites.items():
+        t0 = time.perf_counter()
+        rows = fn()
+        dt = time.perf_counter() - t0
+        d = derived_fns.get(name, lambda r: "")(rows)
+        all_results[name] = {"rows": rows, "seconds": round(dt, 1),
+                             "derived": d}
+        print(f"{name},{dt:.1f},{d}")
+        for row in rows:
+            print("   ", row)
+
+    out = os.path.join(os.path.dirname(__file__), "results.json")
+    with open(out, "w") as f:
+        json.dump(all_results, f, indent=1, default=str)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

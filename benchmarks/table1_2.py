@@ -1,0 +1,62 @@
+"""Paper Tables 1 & 2: runtime (min) and communication (MB) vs M-Kmeans,
+synthetic data, d=2, t=10, l=64, LAN.
+
+Our columns are measured (online wall-clock on this host + exact protocol
+traffic; offline = trusted-dealer wall + OT-modelled traffic/time). The
+M-Kmeans column reproduces the paper's reported numbers for reference — its
+artifact is C++/network-bound and not runnable here; the comparison target
+is the ratio structure (online ~5-6x cheaper than total, same order overall).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_blobs
+from repro.core.channel import LAN
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+
+# paper-reported M-Kmeans totals (Table 1: minutes, Table 2: MB)
+PAPER_MKMEANS_TIME = {(10**4, 2): 1.92, (10**4, 5): 5.81,
+                      (10**5, 2): 18.02, (10**5, 5): 58.09}
+PAPER_MKMEANS_COMM = {(10**4, 2): 5118, (10**4, 5): 18632,
+                      (10**5, 2): 47342, (10**5, 5): 192192}
+PAPER_OURS_TIME = {(10**4, 2): (0.33, 1.61), (10**4, 5): (0.94, 4.70),
+                   (10**5, 2): (3.12, 15.19), (10**5, 5): (9.06, 48.39)}
+PAPER_OURS_COMM = {(10**4, 2): (1084, 3660), (10**4, 5): (3156, 12900),
+                   (10**5, 2): (14147, 32598), (10**5, 5): (33572, 131243)}
+
+
+def run(quick: bool = False):
+    rows = []
+    sizes = [10**4] if quick else [10**4, 10**5]
+    for n in sizes:
+        for k in (2, 5):
+            x = make_blobs(n, 2, k, seed=1)
+            res = SecureKMeans(KMeansConfig(k=k, iters=10, seed=3)
+                               ).fit(x[:, :1], x[:, 1:])
+            online_b = res.log.total_bytes("online")
+            offline_b = res.log.total_bytes("offline")
+            est = res.wan_lan_estimate(LAN)
+            rows.append({
+                "n": n, "k": k,
+                "online_s_meas": round(res.online_seconds, 2),
+                "offline_dealer_s": round(res.offline_dealer_seconds, 2),
+                "offline_ot_model_s": round(
+                    res.offline_modelled_ot_seconds, 2),
+                "online_MB": round(online_b / 2**20, 1),
+                "offline_MB": round(offline_b / 2**20, 1),
+                "lan_online_s": round(est["online_s"], 2),
+                "lan_total_s": round(est["total_s"], 2),
+                "paper_ours_time_min": PAPER_OURS_TIME[(n, k)],
+                "paper_mkmeans_time_min": PAPER_MKMEANS_TIME[(n, k)],
+                "paper_ours_comm_MB": PAPER_OURS_COMM[(n, k)],
+                "paper_mkmeans_comm_MB": PAPER_MKMEANS_COMM[(n, k)],
+            })
+    return rows
+
+
+def derived(rows):
+    """Headline: online share of total traffic (paper: offline dominates)."""
+    fracs = [r["online_MB"] / max(r["online_MB"] + r["offline_MB"], 1e-9)
+             for r in rows]
+    return float(np.mean(fracs))

@@ -1,0 +1,28 @@
+"""Paper Sec 5.6 deployment: payment company + merchant jointly detect
+fraudulent transactions with secure K-means; nothing but the output is
+revealed. Shows the single-party vs joint-modelling gap.
+
+    PYTHONPATH=src python examples/fraud_detection.py
+"""
+from repro.core.fraud import (FraudDataset, run_plaintext_fraud,
+                              run_secure_fraud)
+
+
+def main():
+    ds = FraudDataset.synthesize(n=4000, d_a=18, d_b=24, n_clusters=5,
+                                 frac_outlier=0.02, seed=3)
+    j_joint, res = run_secure_fraud(ds, k=5, iters=10, seed=3)
+    j_plain = run_plaintext_fraud(ds, k=5, iters=10, seed=3)
+    j_single = run_plaintext_fraud(ds, k=5, iters=10, seed=3,
+                                   party_a_only=True)
+    print("Jaccard vs ground-truth fraud set")
+    print(f"  secure joint (ours)      : {j_joint:.3f}")
+    print(f"  plaintext joint (oracle) : {j_plain:.3f}")
+    print(f"  payment-company only     : {j_single:.3f}")
+    print(f"(paper: ours 0.86, M-Kmeans 0.83, single-party 0.62)")
+    print(f"online traffic {res.log.total_bytes('online')/2**20:.1f} MB "
+          f"in {res.log.total_rounds('online')} rounds")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Privacy-preserving K-means core (the paper's contribution).
+
+Importing this package enables jax x64 so the l=64 ring (paper's choice,
+Z_{2^64} with f=20 fractional bits) runs on native uint64 lanes. All LM-side
+model code in repro.models is dtype-explicit, so flipping x64 here is safe.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

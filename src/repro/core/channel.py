@@ -1,0 +1,71 @@
+"""Communication accounting + network cost models for the 2PC protocols.
+
+The simulated two parties live in one process, so "sending" is a no-op; what
+matters for reproducing the paper's Tables 1-2 / Figures 2-4 is an *exact*
+count of bytes and rounds, which are fully determined by tensor shapes. Every
+protocol op reports its traffic here, tagged by Lloyd step (S1 distance /
+S2 assignment / S3 update) and phase (online / offline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+
+@dataclasses.dataclass(frozen=True)
+class NetModel:
+    """One-way latency is rtt/2; paper quotes round-trip latency."""
+
+    name: str
+    bandwidth_bps: float
+    rtt_s: float
+
+    def time_s(self, nbytes: int, rounds: int) -> float:
+        return nbytes * 8.0 / self.bandwidth_bps + rounds * self.rtt_s
+
+
+# Paper Sec 5.1: LAN 10 Gbps / 0.02 ms RTT; WAN 20 Mbps / 40 ms RTT.
+LAN = NetModel("LAN", 10e9, 0.02e-3)
+WAN = NetModel("WAN", 20e6, 40e-3)
+
+
+class CommLog:
+    """Byte/round tallies keyed by (phase, tag)."""
+
+    def __init__(self) -> None:
+        self.bytes = defaultdict(int)   # (phase, tag) -> bytes
+        self.rounds = defaultdict(int)  # (phase, tag) -> rounds
+
+    def send(self, nbytes: int, *, tag: str = "misc", phase: str = "online",
+             rounds: int = 1) -> None:
+        self.bytes[(phase, tag)] += int(nbytes)
+        self.rounds[(phase, tag)] += int(rounds)
+
+    # ---- queries -------------------------------------------------------
+    def total_bytes(self, phase: str | None = None) -> int:
+        return sum(v for (p, _), v in self.bytes.items()
+                   if phase is None or p == phase)
+
+    def total_rounds(self, phase: str | None = None) -> int:
+        return sum(v for (p, _), v in self.rounds.items()
+                   if phase is None or p == phase)
+
+    def by_tag(self, phase: str) -> dict:
+        out = defaultdict(lambda: [0, 0])
+        for (p, t), v in self.bytes.items():
+            if p == phase:
+                out[t][0] += v
+        for (p, t), v in self.rounds.items():
+            if p == phase:
+                out[t][1] += v
+        return {t: tuple(v) for t, v in out.items()}
+
+    def time_estimate(self, net: NetModel, phase: str | None = None) -> float:
+        return net.time_s(self.total_bytes(phase), self.total_rounds(phase))
+
+    def snapshot(self) -> dict:
+        return {"bytes": dict(self.bytes), "rounds": dict(self.rounds)}
+
+    def reset(self) -> None:
+        self.bytes.clear()
+        self.rounds.clear()

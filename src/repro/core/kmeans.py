@@ -1,0 +1,373 @@
+"""Privacy-preserving (sparse) K-means — paper Algorithm 3, both partitions.
+
+Secure Lloyd iteration (Sec 4.2):
+  S1 F_ESD  — vectorized distances  D' = U - 2 X mu^T  (Eq. 3-5); the
+              ||X_i||^2 term is dropped (constant per row under argmin) and
+              U is computed once per iteration with ONE batched SMUL.
+  S2 F_min  — tournament argmin over k (Fig. 1), vectorized over all n.
+  S3 F_SCU  — mu = C^T X / 1^T C with Newton-Raphson secure division and a
+              secure empty-cluster guard (CMP + MUX keep the old centroid).
+  F_CSC     — secure convergence check, only the stop bit is revealed.
+
+Vertical:   X = [X_A | X_B]   (Eq. 4, Alg. 3)      n x (dA + dB)
+Horizontal: X = [X_A ; X_B]   (Eq. 5)              (nA + nB) x d
+
+`sparse=True` swaps every joint public-x-share product for Protocol 2
+(HE + HE2SS, core/sparse.py) — X never leaves its owner, traffic is
+independent of nnz and of the big n*d dimension.
+
+`vectorized=False` keeps results identical but *accounts* communication the
+way the pre-vectorization protocol would ship it (one interaction per scalar
+product / per comparison — "the total number of interactions in each
+iteration is nk", Sec 4.2). This is the Fig. 3 baseline and the M-Kmeans
+cost proxy; wall-clock on a real WAN is dominated by rounds x RTT which the
+NetModel turns into Fig. 3's curves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Literal
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protocol as P
+from repro.core import ring
+from repro.core.channel import CommLog, NetModel
+from repro.core.he import OU_COST_S, SimulatedPHE
+from repro.core.sharing import AShare, rec, rec_real, share
+from repro.core.sparse import CSRMatrix, secure_sparse_matmul
+from repro.core.triples import TrustedDealer
+
+
+@dataclasses.dataclass
+class KMeansConfig:
+    k: int
+    iters: int = 10
+    partition: Literal["vertical", "horizontal"] = "vertical"
+    sparse: bool = False
+    vectorized: bool = True
+    f: int = ring.F
+    seed: int = 0
+    init: Literal["random_data", "random_uniform"] = "random_data"
+    tol: float | None = None        # if set, F_CSC early-stops
+    he_backend: object | None = None  # default: SimulatedPHE()
+
+
+@dataclasses.dataclass
+class KMeansResult:
+    centroids: AShare                 # (k, d) shares, scale f
+    assignment: AShare                # (n, k) one-hot shares, scale 1
+    iters_run: int
+    log: CommLog
+    dealer: TrustedDealer
+    online_seconds: float
+    offline_dealer_seconds: float
+    offline_modelled_ot_seconds: float
+    he_seconds: float
+
+    # -- convenience reconstructions (the protocol's single final Rec) -----
+    def centroids_plain(self, f: int = ring.F) -> np.ndarray:
+        return np.asarray(rec_real(self.centroids, f))
+
+    def labels_plain(self) -> np.ndarray:
+        oh = np.asarray(rec(self.assignment), np.uint64).astype(np.int64)
+        return oh.argmax(1)
+
+    def wan_lan_estimate(self, net: NetModel) -> dict:
+        online = self.log.time_estimate(net, "online") + self.online_seconds \
+            + self.he_seconds
+        offline = self.log.time_estimate(net, "offline") \
+            + self.offline_modelled_ot_seconds
+        return {"online_s": online, "offline_s": offline,
+                "total_s": online + offline}
+
+
+class SecureKMeans:
+    """Two-party secure K-means. Party data stays plaintext at its owner;
+    centroids/assignments are secret-shared end to end."""
+
+    def __init__(self, cfg: KMeansConfig):
+        self.cfg = cfg
+        self.he = cfg.he_backend or SimulatedPHE()
+
+    # ------------------------------------------------------------------ #
+    def fit(self, x_a: np.ndarray, x_b: np.ndarray) -> KMeansResult:
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed)
+        ctx = P.make_ctx(cfg.seed)
+        ctx.vectorized = cfg.vectorized
+        x_a = np.asarray(x_a, np.float64)
+        x_b = np.asarray(x_b, np.float64)
+        if cfg.partition == "vertical":
+            assert x_a.shape[0] == x_b.shape[0]
+            n, d = x_a.shape[0], x_a.shape[1] + x_b.shape[1]
+        else:
+            assert x_a.shape[1] == x_b.shape[1]
+            n, d = x_a.shape[0] + x_b.shape[0], x_a.shape[1]
+        enc_a = _encode_np(x_a, cfg.f)
+        enc_b = _encode_np(x_b, cfg.f)
+        csr_a = CSRMatrix.from_dense(enc_a) if cfg.sparse else None
+        csr_b = CSRMatrix.from_dense(enc_b) if cfg.sparse else None
+
+        mu = self._init_centroids(ctx, rng, x_a, x_b)
+
+        t_start = time.perf_counter()
+        it = 0
+        for it in range(1, cfg.iters + 1):
+            mu_old = mu
+            ctx.tag = "S1"
+            dist = self._distances(ctx, enc_a, enc_b, csr_a, csr_b, mu)
+            ctx.tag = "S2"
+            r_before = ctx.log.total_rounds("online")
+            c = P.argmin_onehot(ctx, dist)            # (n, k) scale 1
+            if not cfg.vectorized:
+                # pre-vectorization: each of the n samples runs its own
+                # tournament (n separate interaction chains per round)
+                dr = ctx.log.total_rounds("online") - r_before
+                _naive_extra_rounds(ctx, (n - 1) * dr + 1)
+            ctx.tag = "S3"
+            mu = self._update(ctx, enc_a, enc_b, csr_a, csr_b, c, mu_old, n)
+            if cfg.tol is not None:
+                ctx.tag = "CSC"
+                if self._converged(ctx, mu_old, mu, cfg.tol):
+                    break
+        jnp.asarray(mu.s0).block_until_ready()
+        wall = time.perf_counter() - t_start
+        dealer = ctx.dealer
+        return KMeansResult(
+            centroids=mu, assignment=c, iters_run=it, log=ctx.log,
+            dealer=dealer,
+            online_seconds=max(0.0, wall - dealer.dealer_seconds),
+            offline_dealer_seconds=dealer.dealer_seconds,
+            offline_modelled_ot_seconds=dealer.modelled_ot_seconds,
+            he_seconds=getattr(ctx, "he_seconds", 0.0),
+        )
+
+    # ------------------------------------------------------------------ #
+    def _init_centroids(self, ctx, rng, x_a, x_b) -> AShare:
+        """Jointly negotiated random sample indexes (paper Sec 4.2); each
+        party secret-shares its slice of the chosen rows."""
+        cfg = self.cfg
+        if cfg.partition == "vertical":
+            n = x_a.shape[0]
+            idx = rng.choice(n, cfg.k, replace=False)
+            mu_a = _encode_np(x_a[idx], cfg.f)        # A shares its columns
+            mu_b = _encode_np(x_b[idx], cfg.f)
+            sh = _share_cat(ctx, rng, [mu_a, mu_b], axis=1)
+        else:
+            n = x_a.shape[0] + x_b.shape[0]
+            idx = rng.choice(n, cfg.k, replace=False)
+            mask = idx < x_a.shape[0]
+            rows_a = _encode_np(x_a[idx[mask]], cfg.f)
+            rows_b = _encode_np(x_b[idx[~mask] - x_a.shape[0]], cfg.f)
+            sh = _share_cat(ctx, rng, [rows_a, rows_b], axis=0)
+            # restore the jointly-negotiated index order (A rows then B rows
+            # were concatenated; undo that permutation)
+            perm = np.concatenate([np.where(mask)[0], np.where(~mask)[0]])
+            inv = np.argsort(perm)
+            sh = AShare(sh.s0[inv], sh.s1[inv])
+        ctx.log.send(2 * ring.nbytes(sh.shape), tag="init", phase="online")
+        return sh
+
+    # ------------------------------------------------------------------ #
+    def _distances(self, ctx, enc_a, enc_b, csr_a, csr_b, mu: AShare) -> AShare:
+        """F_ESD: D' = U - 2 X mu^T at scale f (one final truncation)."""
+        cfg = self.cfg
+        k = cfg.k
+        # U_j = ||mu_j||^2 : one batched SMUL + row-sum  (scale 2f)
+        mu_sq = P.smul(ctx, mu, mu)
+        u = AShare(mu_sq.s0.sum(1), mu_sq.s1.sum(1))          # (k,)
+        if not cfg.vectorized:
+            _naive_extra_rounds(ctx, k * mu.shape[1])
+        xmu = self._x_mut(ctx, enc_a, enc_b, csr_a, csr_b, mu)  # (n,k) 2f
+        d2 = P.sub(AShare(u.s0[None, :], u.s1[None, :]), P.lshift(xmu, 1))
+        return P.trunc(d2, cfg.f)
+
+    def _x_mut(self, ctx, enc_a, enc_b, csr_a, csr_b, mu: AShare) -> AShare:
+        """X @ mu^T as shares, splitting local vs joint blocks (Eq. 4/5)."""
+        cfg = self.cfg
+        if cfg.partition == "vertical":
+            da = enc_a.shape[1]
+            mut = AShare(mu.s0.T, mu.s1.T)                    # (d, k)
+            # local: A's data x A's share slice; B's data x B's share slice
+            loc_a = jnp.matmul(jnp.asarray(enc_a), mut.s0[:da])
+            loc_b = jnp.matmul(jnp.asarray(enc_b), mut.s1[da:])
+            # joint: A's data x B's share slice (and vice versa)
+            j1 = self._pub_times_share(ctx, enc_a, csr_a,
+                                       AShare(jnp.zeros_like(mut.s1[:da]),
+                                              mut.s1[:da]), owner="A")
+            j2 = self._pub_times_share(ctx, enc_b, csr_b,
+                                       AShare(mut.s0[da:],
+                                              jnp.zeros_like(mut.s0[da:])),
+                                       owner="B")
+            return AShare(loc_a + j1.s0 + j2.s0, loc_b + j1.s1 + j2.s1)
+        # horizontal: rows split; each party's rows hit BOTH mu shares
+        mut = AShare(mu.s0.T, mu.s1.T)
+        loc_a = jnp.matmul(jnp.asarray(enc_a), mut.s0)        # A x own share
+        loc_b = jnp.matmul(jnp.asarray(enc_b), mut.s1)
+        j_a = self._pub_times_share(ctx, enc_a, csr_a,
+                                    AShare(jnp.zeros_like(mut.s1), mut.s1),
+                                    owner="A")                 # A x B's share
+        j_b = self._pub_times_share(ctx, enc_b, csr_b,
+                                    AShare(mut.s0, jnp.zeros_like(mut.s0)),
+                                    owner="B")                 # B x A's share
+        top = AShare(loc_a + j_a.s0, j_a.s1)
+        bot = AShare(j_b.s0, loc_b + j_b.s1)
+        return AShare(jnp.concatenate([top.s0, bot.s0], 0),
+                      jnp.concatenate([top.s1, bot.s1], 0))
+
+    def _pub_times_share(self, ctx, enc, csr, other_share: AShare,
+                         owner: str) -> AShare:
+        """One party's plaintext matrix x the OTHER party's share matrix.
+
+        Dense path: Beaver matmul with the plaintext embedded as a degenerate
+        share (this is what ships X-sized masked matrices).
+        Sparse path: Protocol 2 — nnz-proportional HE compute, X never moves.
+        """
+        cfg = self.cfg
+        if cfg.sparse:
+            b_mat = np.asarray(other_share.s1 if owner == "A" else other_share.s0)
+            z = secure_sparse_matmul(ctx, csr, b_mat, self.he,
+                                     time_model=OU_COST_S)
+            return z if owner == "A" else AShare(z.s1, z.s0)
+        pub = AShare(jnp.asarray(enc), jnp.zeros_like(jnp.asarray(enc))) \
+            if owner == "A" else \
+            AShare(jnp.zeros_like(jnp.asarray(enc)), jnp.asarray(enc))
+        out = P.smatmul(ctx, pub, other_share)
+        if not cfg.vectorized:
+            _naive_extra_rounds(ctx, enc.shape[0] * other_share.shape[1])
+        return out
+
+    # ------------------------------------------------------------------ #
+    def _update(self, ctx, enc_a, enc_b, csr_a, csr_b, c: AShare,
+                mu_old: AShare, n: int) -> AShare:
+        """F_SCU: mu = C^T X / 1^T C with empty-cluster MUX guard."""
+        cfg = self.cfg
+        k = cfg.k
+        num = self._ct_x(ctx, enc_a, enc_b, csr_a, csr_b, c)   # (k, d) scale f
+        den = AShare(c.s0.sum(0), c.s1.sum(0))                 # (k,) scale 1
+        one = AShare(jnp.full((k,), 1, ring.DTYPE), jnp.zeros((k,), ring.DTYPE))
+        is_empty = P.cmp_lt(ctx, den, one)                     # [den < 1]
+        den_safe = P.mux(ctx, is_empty, one, den)
+        # Balanced-split division (see DESIGN.md numerics note): computing
+        # num * (2^f/den) naively either loses den*2^-f relative precision
+        # (plain reciprocal) or pushes the pre-truncation product to
+        # ~2^(2f+m) bits, where SecureML local truncation fails with
+        # probability 2^(bits+1-l) — at m=12 that is 2^-7 PER ELEMENT with
+        # a +-2^(l-t) error (observed!). Split the 2^m rescale: shift num
+        # down by s=m//2 and keep 2^s/den in the reciprocal; the product is
+        # (num/2^s)*(2^s/den) = mean at ~2^(2f+4) bits -> failure 2^-19,
+        # absolute error <= 2^(m-s)*|x|*2^-f ~ 1e-3.
+        m = int(np.ceil(np.log2(max(2, n))))
+        s = m // 2
+        num_s = P.trunc(num, s)
+        r = P.reciprocal(ctx, den_safe, max_den=n, f=cfg.f, extra_bits=s)
+        mu_new = P.smul(ctx, num_s, AShare(r.s0[:, None], r.s1[:, None]),
+                        trunc_f=cfg.f)
+        guard = AShare(is_empty.s0[:, None], is_empty.s1[:, None])
+        return P.mux(ctx, guard, mu_old, mu_new)
+
+    def _ct_x(self, ctx, enc_a, enc_b, csr_a, csr_b, c: AShare) -> AShare:
+        """C^T X -> (k, d) shares at scale f (C is scale-1 one-hot)."""
+        cfg = self.cfg
+        ct = AShare(c.s0.T, c.s1.T)                            # (k, n)
+        if cfg.partition == "vertical":
+            # [C^T X_A | C^T X_B]; each block: share x one party's plaintext
+            za = self._share_times_pub(ctx, ct, enc_a, csr_a, owner="A")
+            zb = self._share_times_pub(ctx, ct, enc_b, csr_b, owner="B")
+            return AShare(jnp.concatenate([za.s0, zb.s0], 1),
+                          jnp.concatenate([za.s1, zb.s1], 1))
+        na = enc_a.shape[0]
+        ct_a = AShare(ct.s0[:, :na], ct.s1[:, :na])
+        ct_b = AShare(ct.s0[:, na:], ct.s1[:, na:])
+        za = self._share_times_pub(ctx, ct_a, enc_a, csr_a, owner="A")
+        zb = self._share_times_pub(ctx, ct_b, enc_b, csr_b, owner="B")
+        return P.add(za, zb)
+
+    def _share_times_pub(self, ctx, ct: AShare, enc, csr, owner: str) -> AShare:
+        """<C>^T @ X_owner: the owner's share-product is local; the other
+        party's requires a joint product (Beaver dense / Protocol 2 sparse,
+        via the transpose identity <C>_other^T X = (X^T <C>_other)^T)."""
+        cfg = self.cfg
+        x = jnp.asarray(enc)
+        if owner == "A":
+            local = jnp.matmul(ct.s0, x)                       # A local
+            if cfg.sparse:
+                xt = CSRMatrix.from_dense(np.asarray(x).T)
+                z = secure_sparse_matmul(ctx, xt, np.asarray(ct.s1.T),
+                                         self.he, time_model=OU_COST_S)
+                joint = AShare(z.s0.T, z.s1.T)
+            else:
+                joint = P.smatmul(ctx, AShare(jnp.zeros_like(ct.s1), ct.s1),
+                                  AShare(x, jnp.zeros_like(x)))
+                if not cfg.vectorized:
+                    _naive_extra_rounds(ctx, ct.shape[0] * x.shape[1])
+            return AShare(local + joint.s0, joint.s1)
+        local = jnp.matmul(ct.s1, x)                           # B local
+        if cfg.sparse:
+            xt = CSRMatrix.from_dense(np.asarray(x).T)
+            z = secure_sparse_matmul(ctx, xt, np.asarray(ct.s0.T), self.he,
+                                     time_model=OU_COST_S)
+            joint = AShare(z.s1.T, z.s0.T)
+        else:
+            joint = P.smatmul(ctx, AShare(ct.s0, jnp.zeros_like(ct.s0)),
+                              AShare(jnp.zeros_like(x), x))
+            if not cfg.vectorized:
+                _naive_extra_rounds(ctx, ct.shape[0] * x.shape[1])
+        return AShare(joint.s0, local + joint.s1)
+
+    # ------------------------------------------------------------------ #
+    def _converged(self, ctx, mu_old: AShare, mu_new: AShare, tol: float) -> bool:
+        """F_CSC: reveal only CMP(ESD(mu_t, mu_t+1), eps)."""
+        diff = P.sub(mu_new, mu_old)
+        sq = P.smul(ctx, diff, diff)                           # scale 2f
+        tot = AShare(sq.s0.sum(), sq.s1.sum())
+        eps = ring.encode(tol, 2 * self.cfg.f).reshape(())
+        bit = P.cmp_lt(ctx, tot, AShare(eps, jnp.zeros((), ring.DTYPE)))
+        ctx.log.send(8, tag="CSC", phase="online")             # reveal stop bit
+        return bool(np.asarray(rec(bit)) == 1)
+
+
+# ---------------------------------------------------------------------------
+# Plaintext oracle (same init, same ESD criterion) + fraud-detection utils
+# ---------------------------------------------------------------------------
+
+def plaintext_kmeans(x: np.ndarray, k: int, iters: int, seed: int = 0,
+                     tol: float | None = None):
+    """Float Lloyd with the same joint-random-row init as SecureKMeans."""
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(x.shape[0], k, replace=False)
+    mu = x[idx].copy()
+    labels = np.zeros(x.shape[0], np.int64)
+    for _ in range(iters):
+        d = (mu ** 2).sum(1)[None, :] - 2 * x @ mu.T           # same D'
+        labels = d.argmin(1)
+        mu_old = mu.copy()
+        for j in range(k):
+            m = labels == j
+            if m.any():
+                mu[j] = x[m].mean(0)
+        if tol is not None and ((mu - mu_old) ** 2).sum() < tol:
+            break
+    return mu, labels
+
+
+def _encode_np(x: np.ndarray, f: int) -> np.ndarray:
+    return np.round(np.asarray(x, np.float64) * (1 << f)) \
+        .astype(np.int64).astype(np.uint64)
+
+
+def _share_cat(ctx, rng, mats, axis):
+    parts = [share(m, rng) for m in mats]
+    return AShare(jnp.concatenate([p.s0 for p in parts], axis),
+                  jnp.concatenate([p.s1 for p in parts], axis))
+
+
+def _naive_extra_rounds(ctx, n_interactions: int) -> None:
+    """Pre-vectorization accounting: the same payload would be shipped in
+    `n_interactions` round-trips instead of 1 (paper Sec 4.2). Bytes are
+    already logged by the vectorized op; only rounds differ (+ per-message
+    framing overhead which we ignore, making the naive baseline *favorable*)."""
+    ctx.log.send(0, tag=ctx.tag, phase="online", rounds=int(n_interactions) - 1)

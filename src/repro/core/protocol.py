@@ -1,0 +1,328 @@
+"""2PC protocol ops over additive shares (paper Sec 3.1 / 4.2).
+
+Implemented: SADD (local), SMUL (elementwise + vectorized matmul via Beaver
+triples), SecureML local truncation, A2B via a bit-packed Kogge-Stone adder
+(log_2 l AND rounds instead of the naive l-round ripple carry), MSB, CMP,
+B2A, MUX, the tournament argmin F^k_min (Fig. 1), and a Newton-Raphson
+secure reciprocal used by the centroid-update division (paper: "secret
+sharing division which is converted to SADD & SMUL operations").
+
+Everything is vectorized: one CMP call compares whole (n, k/2) tensors, one
+matmul call moves whole matrices — this IS the paper's vectorization claim.
+
+All ops take a `Ctx` that carries the triple provider (offline phase) and the
+communication log. Per-op traffic is shape-determined and exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ring
+from repro.core.channel import CommLog
+from repro.core.sharing import AShare, BShare
+from repro.core.triples import TrustedDealer
+
+
+FUSE_BEAVER = True
+# P0's Beaver recombination z0 = z + u0@F + e@v0 + e@F folds into
+# z + u0@F + e@(v0 + F): one fewer ring matmul on the online critical path
+# (pure local algebra, no protocol/security change). Toggled off by the
+# §Perf harness to measure the paper-faithful baseline.
+
+
+@dataclasses.dataclass
+class Ctx:
+    dealer: TrustedDealer
+    log: CommLog
+    tag: str = "misc"  # current Lloyd step: S1 / S2 / S3
+
+    def send(self, nbytes: int, rounds: int = 1) -> None:
+        self.log.send(nbytes, tag=self.tag, phase="online", rounds=rounds)
+
+
+def make_ctx(seed: int = 0) -> Ctx:
+    log = CommLog()
+    return Ctx(dealer=TrustedDealer(seed=seed, log=log), log=log)
+
+
+# ---------------------------------------------------------------------------
+# Linear ops — local, no communication (paper SADD)
+# ---------------------------------------------------------------------------
+
+def add(a: AShare, b: AShare) -> AShare:
+    return AShare(a.s0 + b.s0, a.s1 + b.s1)
+
+
+def sub(a: AShare, b: AShare) -> AShare:
+    return AShare(a.s0 - b.s0, a.s1 - b.s1)
+
+
+def add_pub(a: AShare, c) -> AShare:
+    """a + c with public ring tensor c (added to one share only)."""
+    c = jnp.asarray(c, ring.DTYPE)
+    return AShare(a.s0 + c, a.s1)
+
+
+def pub_sub(c, a: AShare) -> AShare:
+    c = jnp.asarray(c, ring.DTYPE)
+    return AShare(c - a.s0, ring.neg(a.s1))
+
+
+def mul_pub(a: AShare, c) -> AShare:
+    """a * c with public *integer* ring tensor c (scale-preserving)."""
+    c = jnp.asarray(c, ring.DTYPE)
+    return AShare(a.s0 * c, a.s1 * c)
+
+
+def lshift(a: AShare, n: int) -> AShare:
+    return AShare(a.s0 << n, a.s1 << n)
+
+
+def neg(a: AShare) -> AShare:
+    return AShare(ring.neg(a.s0), ring.neg(a.s1))
+
+
+def matmul_pub_l(x_pub, a: AShare) -> AShare:
+    """Public X @ shared A — local at the party that owns X."""
+    x_pub = jnp.asarray(x_pub, ring.DTYPE)
+    return AShare(_ring_mm(x_pub, a.s0), _ring_mm(x_pub, a.s1))
+
+
+def matmul_pub_r(a: AShare, y_pub) -> AShare:
+    y_pub = jnp.asarray(y_pub, ring.DTYPE)
+    return AShare(_ring_mm(a.s0, y_pub), _ring_mm(a.s1, y_pub))
+
+
+def _ring_mm(a, b):
+    """uint64 matmul mod 2^64 (jnp dot on uint64 wraps)."""
+    return jnp.matmul(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Truncation (SecureML local truncation; error <= 2^-f w.h.p.)
+# ---------------------------------------------------------------------------
+
+def trunc(a: AShare, f: int = ring.F) -> AShare:
+    """SecureML local truncation: P0 logically shifts its share; P1
+    negates-shifts-negates. Off-by-2^-f LSB error w.h.p.; failure probability
+    2^{f+1-l} per lane for |x| < 2^{l-f-1} (SecureML Thm. 1)."""
+    if f == 0:
+        return a
+    s0 = a.s0 >> f                                   # logical shift (uint64)
+    s1 = ring.neg(ring.neg(a.s1) >> f)
+    return AShare(s0, s1)
+
+
+# ---------------------------------------------------------------------------
+# SMUL — Beaver multiplication (elementwise and matmul forms)
+# ---------------------------------------------------------------------------
+
+def smul(ctx: Ctx, a: AShare, b: AShare, *, trunc_f: int | None = None) -> AShare:
+    """Elementwise product (broadcasting). One round: exchange E, F."""
+    shape = jnp.broadcast_shapes(a.shape, b.shape)
+    t = ctx.dealer.mul_triple(shape, tag=ctx.tag)
+    a = AShare(jnp.broadcast_to(a.s0, shape), jnp.broadcast_to(a.s1, shape))
+    b = AShare(jnp.broadcast_to(b.s0, shape), jnp.broadcast_to(b.s1, shape))
+    e = (a.s0 - t.u.s0) + (a.s1 - t.u.s1)  # Rec(a - u)
+    f = (b.s0 - t.v.s0) + (b.s1 - t.v.s1)  # Rec(b - v)
+    # Both parties exchange their local (E,F) halves: 2 tensors each way.
+    ctx.send(2 * 2 * ring.nbytes(shape), rounds=1)
+    # ab = uv + u*f + e*v + e*f ;  z_i = z_t_i + u_i*f + e*v_i + [i==0]*e*f
+    if FUSE_BEAVER:
+        z0 = t.z.s0 + t.u.s0 * f + e * (t.v.s0 + f)
+    else:
+        z0 = t.z.s0 + t.u.s0 * f + e * t.v.s0 + e * f
+    z1 = t.z.s1 + t.u.s1 * f + e * t.v.s1
+    out = AShare(z0, z1)
+    return trunc(out, trunc_f) if trunc_f else out
+
+
+def smatmul(ctx: Ctx, a: AShare, b: AShare, *, trunc_f: int | None = None) -> AShare:
+    """Secret-shared matrix product (paper's vectorized SMUL). One round."""
+    (n, d), (d2, k) = a.shape, b.shape
+    assert d == d2
+    t = ctx.dealer.matmul_triple((n, d), (d, k), tag=ctx.tag)
+    e = (a.s0 - t.u.s0) + (a.s1 - t.u.s1)
+    f = (b.s0 - t.v.s0) + (b.s1 - t.v.s1)
+    ctx.send(2 * (ring.nbytes((n, d)) + ring.nbytes((d, k))), rounds=1)
+    # AB = UV + U F + E V + E F
+    if FUSE_BEAVER:  # P0: E@(V0 + F) fuses the public E@F term (see flag)
+        z0 = t.z.s0 + _ring_mm(t.u.s0, f) + _ring_mm(e, t.v.s0 + f)
+    else:
+        z0 = t.z.s0 + _ring_mm(t.u.s0, f) + _ring_mm(e, t.v.s0) \
+            + _ring_mm(e, f)
+    z1 = t.z.s1 + _ring_mm(t.u.s1, f) + _ring_mm(e, t.v.s1)
+    out = AShare(z0, z1)
+    return trunc(out, trunc_f) if trunc_f else out
+
+
+def square(ctx: Ctx, a: AShare, *, trunc_f: int | None = None) -> AShare:
+    return smul(ctx, a, a, trunc_f=trunc_f)
+
+
+# ---------------------------------------------------------------------------
+# Boolean layer: bit-packed AND / XOR, Kogge-Stone adder, MSB, CMP
+# ---------------------------------------------------------------------------
+
+def bxor(x: BShare, y: BShare) -> BShare:
+    return BShare(x.b0 ^ y.b0, x.b1 ^ y.b1)
+
+
+def bxor_pub(x: BShare, c) -> BShare:
+    return BShare(x.b0 ^ jnp.asarray(c, ring.DTYPE), x.b1)
+
+
+def band(ctx: Ctx, x: BShare, y: BShare) -> BShare:
+    """Bit-packed AND via binary Beaver triple. One round, 64 gates/lane."""
+    shape = jnp.broadcast_shapes(x.shape, y.shape)
+    t = ctx.dealer.bin_triple(shape, tag=ctx.tag)
+    x = BShare(jnp.broadcast_to(x.b0, shape), jnp.broadcast_to(x.b1, shape))
+    y = BShare(jnp.broadcast_to(y.b0, shape), jnp.broadcast_to(y.b1, shape))
+    e = (x.b0 ^ t.u.b0) ^ (x.b1 ^ t.u.b1)
+    f = (y.b0 ^ t.v.b0) ^ (y.b1 ^ t.v.b1)
+    ctx.send(2 * 2 * ring.nbytes(shape), rounds=1)
+    # xy = (u^e)&(v^f) = uv ^ u&f ^ e&v ^ e&f
+    z0 = t.z.b0 ^ (t.u.b0 & f) ^ (e & (t.v.b0 ^ f))
+    z1 = t.z.b1 ^ (t.u.b1 & f) ^ (e & t.v.b1)
+    return BShare(z0, z1)
+
+
+def _bshift_l(x: BShare, s: int) -> BShare:
+    return BShare(x.b0 << s, x.b1 << s)
+
+
+def msb_carry(ctx: Ctx, a: AShare) -> BShare:
+    """B-share of MSB(a.s0 + a.s1 mod 2^64) via Kogge-Stone carry network.
+
+    Each party's arithmetic share is a *local plaintext* input to a boolean
+    adder: X = (s0, 0), Y = (0, s1) as B-shares. log2(64)=6 AND rounds; the
+    two ANDs per level (G and P updates) are batched into ONE round by
+    stacking, so the whole MSB costs 7 rounds (1 initial + 6 levels).
+    """
+    x = BShare(a.s0, jnp.zeros_like(a.s0))
+    y = BShare(jnp.zeros_like(a.s1), a.s1)
+    g = band(ctx, x, y)                     # generate
+    p = bxor(x, y)                          # propagate (free)
+    p_orig = p
+    for s in (1, 2, 4, 8, 16, 32):
+        # one batched AND round: [p & (g<<s), p & (p<<s)]
+        lhs = BShare(jnp.stack([p.b0, p.b0]), jnp.stack([p.b1, p.b1]))
+        rhs_g, rhs_p = _bshift_l(g, s), _bshift_l(p, s)
+        rhs = BShare(jnp.stack([rhs_g.b0, rhs_p.b0]), jnp.stack([rhs_g.b1, rhs_p.b1]))
+        both = band(ctx, lhs, rhs)
+        g = bxor(g, BShare(both.b0[0], both.b1[0]))  # g | (p & g<<s); disjoint => xor
+        p = BShare(both.b0[1], both.b1[1])
+    # sum bit 63 = p_orig[63] ^ carry_in[63];  carry_in[63] = G[62]
+    msb = bxor(BShare((p_orig.b0 >> 63) & jnp.uint64(1),
+                      (p_orig.b1 >> 63) & jnp.uint64(1)),
+               BShare((g.b0 >> 62) & jnp.uint64(1),
+                      (g.b1 >> 62) & jnp.uint64(1)))
+    return msb  # single-bit B-share (values in {0,1})
+
+
+def b2a_bit(ctx: Ctx, b: BShare) -> AShare:
+    """Single-bit B-share -> A-share: b = b0 + b1 - 2*b0*b1.
+
+    Each party arithmetically shares its own boolean share (one message each,
+    half a round: batched into 1 round), then one Beaver product.
+    """
+    shape = b.shape
+    one = jnp.uint64(1)
+    b0, b1 = b.b0 & one, b.b1 & one     # LSB view of the packed share
+    r0 = ctx.dealer.rand(shape)
+    r1 = ctx.dealer.rand(shape)
+    a0 = AShare(b0 - r0, r0)            # P0 shares its bit b0
+    a1 = AShare(r1, b1 - r1)            # P1 shares its bit b1
+    ctx.send(2 * ring.nbytes(shape), rounds=1)
+    prod = smul(ctx, a0, a1)            # scale-1 bits: no truncation
+    return sub(add(a0, a1), lshift(prod, 1))
+
+
+def cmp_lt(ctx: Ctx, a: AShare, b: AShare) -> AShare:
+    """CMP: A-share of the indicator [a < b] (signed fixed-point compare)."""
+    shape = jnp.broadcast_shapes(a.shape, b.shape)
+    a = AShare(jnp.broadcast_to(a.s0, shape), jnp.broadcast_to(a.s1, shape))
+    b = AShare(jnp.broadcast_to(b.s0, shape), jnp.broadcast_to(b.s1, shape))
+    diff = sub(a, b)
+    return b2a_bit(ctx, msb_carry(ctx, diff))
+
+
+def mux(ctx: Ctx, z: AShare, x: AShare, y: AShare) -> AShare:
+    """MUX(z, x, y) = z*x + (1-z)*y = z*(x-y) + y (z is a 0/1 A-share)."""
+    return add(smul(ctx, z, sub(x, y)), y)
+
+
+# ---------------------------------------------------------------------------
+# F^k_min — tournament argmin (paper Fig. 1), fully vectorized over n
+# ---------------------------------------------------------------------------
+
+def argmin_onehot(ctx: Ctx, d: AShare) -> AShare:
+    """Secret-shared one-hot argmin along the last axis of (n, k) distances.
+
+    ceil(log2 k) rounds of [CMP + 2 MUX], each round vectorized over all
+    surviving pairs of all n samples at once — k-1 CMPMs total, exactly the
+    binary-tree reduction of Fig. 1.
+    """
+    n, k = d.shape
+    eye = jnp.eye(k, dtype=ring.DTYPE)
+    vals = d
+    ohs = AShare(jnp.broadcast_to(eye[None], (n, k, k)),
+                 jnp.zeros((n, k, k), ring.DTYPE))  # public one-hots as shares
+    m = k
+    while m > 1:
+        half, odd = m // 2, m % 2
+        l_v = AShare(vals.s0[:, 0:2 * half:2], vals.s1[:, 0:2 * half:2])
+        r_v = AShare(vals.s0[:, 1:2 * half:2], vals.s1[:, 1:2 * half:2])
+        l_o = AShare(ohs.s0[:, 0:2 * half:2], ohs.s1[:, 0:2 * half:2])
+        r_o = AShare(ohs.s0[:, 1:2 * half:2], ohs.s1[:, 1:2 * half:2])
+        b = cmp_lt(ctx, l_v, r_v)                       # [l < r]  (n, half)
+        v_min = mux(ctx, b, l_v, r_v)
+        b_oh = AShare(b.s0[..., None], b.s1[..., None])  # broadcast over k
+        o_min = mux(ctx, b_oh, l_o, r_o)
+        if odd:
+            v_min = AShare(jnp.concatenate([v_min.s0, vals.s0[:, -1:]], 1),
+                           jnp.concatenate([v_min.s1, vals.s1[:, -1:]], 1))
+            o_min = AShare(jnp.concatenate([o_min.s0, ohs.s0[:, -1:]], 1),
+                           jnp.concatenate([o_min.s1, ohs.s1[:, -1:]], 1))
+        vals, ohs, m = v_min, o_min, half + odd
+    return AShare(ohs.s0[:, 0], ohs.s1[:, 0])  # (n, k)
+
+
+# ---------------------------------------------------------------------------
+# Secure reciprocal (division -> SADD/SMUL, paper Sec 4.2 F_SCU)
+# ---------------------------------------------------------------------------
+
+def reciprocal(ctx: Ctx, den: AShare, max_den: float, *, f: int = ring.F,
+               iters: int | None = None, extra_bits: int = 0) -> AShare:
+    """Newton-Raphson 1/den, den an *integer-valued* share (scale 1) in
+    [1, max_den]; returns a share of 1/den at scale f + extra_bits.
+
+    Normalize d' = den / 2^m in (0, 1] (m = ceil(log2 max_den); exact local
+    shift when m <= f), iterate x <- x(2 - d'x) from x0 = 2 - d'
+    (error e0 = (1-d')^2 < 1 converges for ALL d' in (0,1]), then unscale
+    by >> (m - extra_bits). Error doubles bits per iter: ~m + log2(f) iters.
+
+    extra_bits trades headroom for precision: the plain scale-f output has
+    absolute error ~2^-f, i.e. *relative* error ~2^-f * den; keeping
+    extra_bits <= m of the internal scale recovers 2^-(f+extra-m)-relative
+    precision (the centroid update uses this — the subsequent num*recip
+    product cancels den so the product still fits the ring).
+    """
+    m = max(0, int(np.ceil(np.log2(max_den))))
+    extra_bits = min(extra_bits, m)
+    if iters is None:
+        iters = m + 6
+    if m <= f:
+        dp = lshift(den, f - m)                   # exact local rescale
+    else:
+        dp = trunc(mul_pub(den, jnp.uint64(1 << (2 * f - m))), f)
+    two = ring.encode(2.0, f)
+    x = pub_sub(two, dp)                          # x0 = 2 - d'
+    for _ in range(iters):
+        dx = smul(ctx, dp, x, trunc_f=f)
+        x = smul(ctx, x, pub_sub(two, dx), trunc_f=f)
+    # x ~ 2^(f+m)/den; drop (m - extra_bits) to land at scale f + extra_bits
+    return trunc(x, m - extra_bits) if m > extra_bits else x

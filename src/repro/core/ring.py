@@ -1,0 +1,54 @@
+"""Z_{2^l} ring arithmetic with fixed-point encoding (paper: l=64, f=20).
+
+Values live in uint64; two's-complement wraparound is the ring reduction.
+XLA integer ops have defined mod-2^64 wraparound semantics, so `+ - *` on
+uint64 arrays are exactly the ring ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+L = 64                    # ring bit width (paper Sec 5.1: l = 64)
+F = 20                    # fractional bits  (paper Sec 5.1: 20 of 64 bits)
+DTYPE = jnp.uint64
+NP_DTYPE = np.uint64
+MASK = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def encode(x, f: int = F):
+    """Real -> fixed-point ring element (two's complement mod 2^64)."""
+    x = jnp.asarray(x, jnp.float64)
+    return jnp.round(x * np.float64(1 << f)).astype(jnp.int64).astype(DTYPE)
+
+
+def decode(u, f: int = F):
+    """Fixed-point ring element -> real (interpret high bit as sign)."""
+    return jnp.asarray(u, DTYPE).astype(jnp.int64).astype(jnp.float64) / np.float64(1 << f)
+
+
+def neg(u):
+    return (jnp.uint64(0) - jnp.asarray(u, DTYPE)).astype(DTYPE)
+
+
+def arith_rshift(u, f: int):
+    """Arithmetic (sign-extending) right shift on the two's-complement view."""
+    return (jnp.asarray(u, DTYPE).astype(jnp.int64) >> f).astype(DTYPE)
+
+
+def from_int(x):
+    """Integer -> ring element at scale 1 (no fractional bits)."""
+    return jnp.asarray(x, jnp.int64).astype(DTYPE)
+
+
+def rand_np(rng: np.random.Generator, shape) -> np.ndarray:
+    """Uniform ring elements (numpy; used for share/triple generation)."""
+    return rng.integers(0, 1 << 64, size=shape, dtype=np.uint64)
+
+
+def nbytes(shape, l: int = L) -> int:
+    """Bytes on the wire for a ring tensor of `shape`."""
+    return int(np.prod(shape, dtype=np.int64)) * (l // 8)

@@ -1,0 +1,40 @@
+"""Pallas TPU kernel: fused row-argmin -> one-hot (paper F^k_min, Fig. 1).
+
+The secure path evaluates the tournament with CMP/MUX rounds (protocol.py);
+this kernel is its plaintext-path / dealer-assisted counterpart: for a
+(bm, k) distance tile it emits the (bm, k) one-hot assignment matrix C in a
+single fused pass (min-reduce + broadcast-compare + first-hit mask), which is
+exactly the C consumed by the centroid update C^T X. First minimum wins ties,
+matching np.argmin and the tournament's left-preference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(d_ref, o_ref):
+    d = d_ref[...]                                      # (bm, k) f32
+    k = d.shape[1]
+    mins = d.min(axis=1, keepdims=True)
+    hit = (d == mins)
+    # first-hit mask: one-hot even when duplicates exist
+    col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    first = jnp.min(jnp.where(hit, col, k), axis=1, keepdims=True)
+    o_ref[...] = (col == first).astype(jnp.int32)
+
+
+def argmin_onehot(d: jnp.ndarray, *, bm: int = 128,
+                  interpret: bool = True) -> jnp.ndarray:
+    """(n, k) f32 distances -> (n, k) int32 one-hot (n % bm == 0; ops pads)."""
+    n, k = d.shape
+    assert n % bm == 0, d.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.int32),
+        interpret=interpret,
+    )(d.astype(jnp.float32))

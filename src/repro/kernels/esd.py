@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused Euclidean-squared distance (paper Eq. 3, F_ESD).
+
+Computes  D'[i, j] = ||mu_j||^2 - 2 * <x_i, mu_j>  in ONE VMEM pass: the
+centroid-norm term U is accumulated from the same mu tiles that feed the
+matmul, so mu is read from HBM exactly once and the (n, k) distance tile is
+produced directly — no separate norm pass, no intermediate X@mu^T buffer.
+
+Used by the plaintext oracle path, centroid init, and the dealer-assisted
+deployment mode; the secret-shared online path runs the same shape through
+kernels/modmatmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, mu_ref, o_ref, acc_ref, u_ref, *, n_kblocks: int):
+    """Grid (n_blocks, k_blocks, d_blocks). acc: -2*X@mu^T; u: ||mu||^2."""
+    db = pl.program_id(2)
+
+    @pl.when(db == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    x = x_ref[...]                       # (bm, bd) f32
+    mu = mu_ref[...]                     # (bn, bd) f32  (k-major tile)
+    acc_ref[...] += jax.lax.dot_general(
+        x, mu, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    u_ref[...] += (mu * mu).sum(axis=1, keepdims=True).T  # (1, bn)
+
+    @pl.when(db == n_kblocks - 1)
+    def _flush():
+        o_ref[...] = u_ref[...] - 2.0 * acc_ref[...]
+
+
+def esd(x: jnp.ndarray, mu: jnp.ndarray, *, bm: int = 128, bd: int = 128,
+        bn: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """x: (n, d) f32, mu: (k, d) f32 -> (n, k) f32 distances (ops.py pads)."""
+    n, d = x.shape
+    k, d2 = mu.shape
+    assert d == d2
+    assert n % bm == 0 and d % bd == 0 and k % bn == 0, (x.shape, mu.shape)
+    grid = (n // bm, k // bn, d // bd)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_kblocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, j, db: (i, db)),
+            pl.BlockSpec((bn, bd), lambda i, j, db: (j, db)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, db: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((1, bn), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), mu.astype(jnp.float32))

@@ -1,0 +1,82 @@
+"""Jit'd public wrappers for the Pallas kernels: padding to block multiples,
+dtype dispatch, VMEM-budget checks, and un-padding of results."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import argmin as _argmin
+from repro.kernels import esd as _esd
+from repro.kernels import modmatmul as _modmatmul
+from repro.kernels import spmm as _spmm
+
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # conservative v5e VMEM working budget
+
+
+def _pad2(x, bm, bn):
+    pm, pn = (-x.shape[0]) % bm, (-x.shape[1]) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def ring_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128,
+                bk: int = 128, bn: int = 128,
+                interpret: bool = True) -> jnp.ndarray:
+    """Ring matmul mod 2^32/2^64 with auto-padding (zero rows/cols are
+    ring-neutral, so padding is exact)."""
+    n, k = a.shape[0], b.shape[1]
+    ap, bp = _pad2(a, bm, bk), _pad2(b, bk, bn)
+    out = _modmatmul.modmatmul(ap, bp, bm=bm, bk=bk, bn=bn,
+                               interpret=interpret)
+    return out[:n, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "bn", "interpret"))
+def esd(x: jnp.ndarray, mu: jnp.ndarray, *, bm: int = 128, bd: int = 128,
+        bn: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """Fused distances. Padding mu rows with zeros adds fake centroids with
+    U=0 at columns >= k which are sliced away; padding d is exact."""
+    n, k = x.shape[0], mu.shape[0]
+    xp = _pad2(x.astype(jnp.float32), bm, bd)
+    mup = _pad2(mu.astype(jnp.float32), bn, bd)
+    out = _esd.esd(xp, mup, bm=bm, bd=bd, bn=bn, interpret=interpret)
+    return out[:n, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def argmin_onehot(d: jnp.ndarray, *, bm: int = 128,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Fused argmin->one-hot; pad rows with zeros (their one-hot is sliced
+    away) — columns are NOT padded (k stays exact so the argmin is exact)."""
+    n = d.shape[0]
+    pm = (-n) % bm
+    dp = jnp.pad(d.astype(jnp.float32), ((0, pm), (0, 0)),
+                 constant_values=jnp.inf) if pm else d.astype(jnp.float32)
+    return _argmin.argmin_onehot(dp, bm=bm, interpret=interpret)[:n]
+
+
+def spmm(blocks, idx, counts, y, *, interpret: bool = True) -> jnp.ndarray:
+    """Blocked-ELL sparse x dense. Asserts the dense operand fits VMEM
+    (kernel keeps all of Y resident — DESIGN.md §4)."""
+    d, k = y.shape
+    kp = (-k) % 128
+    itemsize = 4
+    assert d * (k + kp) * itemsize <= VMEM_BUDGET_BYTES, \
+        f"Y ({d}x{k}) exceeds the VMEM-resident budget; shard k or d first"
+    yp = jnp.pad(y, ((0, 0), (0, kp))) if kp else y
+    out = _spmm.spmm_ell(blocks, idx, counts, yp, interpret=interpret)
+    return out[:, :k]
+
+
+def spmm_from_dense(x_dense: np.ndarray, y, *, bm: int = 8, bk: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Convenience: host-side ELL pack + kernel call; returns (n, k)."""
+    blocks, idx, counts = _spmm.dense_to_ell(np.asarray(x_dense), bm=bm, bk=bk)
+    out = spmm(jnp.asarray(blocks), jnp.asarray(idx), jnp.asarray(counts),
+               jnp.asarray(y), interpret=interpret)
+    return out[: x_dense.shape[0]]

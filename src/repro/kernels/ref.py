@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def modmatmul_u32(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Ring matmul mod 2^32 (uint32 wraparound is the reduction)."""
+    return jnp.matmul(a.astype(jnp.uint32), b.astype(jnp.uint32))
+
+
+def modmatmul_u64(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Ring matmul mod 2^64."""
+    return jnp.matmul(a.astype(jnp.uint64), b.astype(jnp.uint64))
+
+
+def esd(x: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """Fused distance D' = ||mu_j||^2 - 2 x_i . mu_j   (paper Eq. 3).
+
+    x: (n, d) f32, mu: (k, d) f32 -> (n, k) f32.
+    """
+    u = (mu.astype(jnp.float32) ** 2).sum(-1)
+    return u[None, :] - 2.0 * x.astype(jnp.float32) @ mu.astype(jnp.float32).T
+
+
+def argmin_onehot(d: jnp.ndarray) -> jnp.ndarray:
+    """(n, k) distances -> (n, k) one-hot of the row argmin (first-min wins,
+    matching the tournament's tie-break used in the plaintext path)."""
+    idx = jnp.argmin(d, axis=-1)
+    return (jnp.arange(d.shape[-1])[None, :] == idx[:, None]).astype(jnp.int32)
+
+
+def spmm_ell(blocks: jnp.ndarray, idx: jnp.ndarray, counts: jnp.ndarray,
+             y: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Blocked-ELL sparse x dense oracle.
+
+    blocks: (nrb, maxb, bm, bk)  non-empty tiles of X, row-block major
+    idx:    (nrb, maxb) int32    column-block index of each tile
+    counts: (nrb,) int32         how many tiles are real in each row block
+    y:      (d, k)
+    returns (nrb*bm, k)[:n_rows]
+    """
+    nrb, maxb, bm, bk = blocks.shape
+    k = y.shape[1]
+    out = jnp.zeros((nrb, bm, k), y.dtype)
+    for i in range(nrb):
+        acc = jnp.zeros((bm, k), y.dtype)
+        for j in range(maxb):
+            yb = jax.lax.dynamic_slice(
+                y, (idx[i, j].astype(jnp.int32) * jnp.int32(bk), jnp.int32(0)),
+                (bk, k))
+            contrib = blocks[i, j].astype(y.dtype) @ yb
+            acc = acc + jnp.where(j < counts[i], 1, 0).astype(y.dtype) * contrib
+        out = out.at[i].set(acc)
+    return out.reshape(nrb * bm, k)[:n_rows]

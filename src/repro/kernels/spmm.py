@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: blocked-ELL sparse x dense matmul (paper Sec 4.3).
+
+TPU adaptation of the paper's sparsity optimization (DESIGN.md §3): CSR
+gathers are GPU-idiomatic; the TPU-native layout is *blocked-ELL* — the
+sparse matrix is cut into (bm x bk) tiles, only non-empty tiles are stored
+(row-block major, padded to max_blocks per row block), and each tile is a
+dense MXU-aligned matmul. HBM->VMEM traffic and MXU work are proportional to
+the number of NON-EMPTY blocks, which is the paper's nnz-proportional-cost
+insight transplanted to the TPU memory hierarchy.
+
+The dense operand Y (the small k x d centroid block in K-means; the paper's
+"shape of Y is much smaller than X") is held fully in VMEM and indexed
+dynamically with the tile's column-block id — valid while d*k*4B fits the
+~16 MB VMEM budget, which `ops.spmm` asserts.
+
+Supports f32 (plaintext path) and the u32 ring via the same 16-bit limb
+trick as kernels/modmatmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _kernel(idx_ref, cnt_ref, blocks_ref, y_ref, o_ref, *, bk: int,
+            max_blocks: int, ring_u32: bool):
+    i = pl.program_id(0)
+    bm = blocks_ref.shape[2]
+    k = y_ref.shape[1]
+    if ring_u32:
+        acc0 = jnp.zeros((bm, k), jnp.uint32)
+    else:
+        acc0 = jnp.zeros((bm, k), jnp.float32)
+
+    def body(j, acc):
+        start = idx_ref[0, j].astype(jnp.int32) * jnp.int32(bk)
+        yb = pl.load(y_ref, (pl.ds(start, bk), slice(None)))
+        xb = blocks_ref[0, j]
+        if ring_u32:
+            mask16 = jnp.uint32(0xFFFF)
+            x_lo = (xb & mask16).astype(jnp.int32)
+            x_hi = (xb >> 16).astype(jnp.int32)
+            y_lo = (yb & mask16).astype(jnp.int32)
+            y_hi = (yb >> 16).astype(jnp.int32)
+            dot = functools.partial(
+                jax.lax.dot_general,
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            contrib = dot(x_lo, y_lo).astype(jnp.uint32) \
+                + ((dot(x_lo, y_hi) + dot(x_hi, y_lo)).astype(jnp.uint32) << 16)
+        else:
+            contrib = jax.lax.dot_general(
+                xb, yb, dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        keep = (j < cnt_ref[0]).astype(contrib.dtype)
+        return acc + keep * contrib
+
+    o_ref[...] = jax.lax.fori_loop(0, max_blocks, body, acc0)
+
+
+def spmm_ell(blocks: jnp.ndarray, idx: jnp.ndarray, counts: jnp.ndarray,
+             y: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """blocks (nrb, maxb, bm, bk), idx (nrb, maxb) i32, counts (nrb,) i32,
+    y (d, k) -> (nrb*bm, k)."""
+    nrb, maxb, bm, bk = blocks.shape
+    d, k = y.shape
+    ring_u32 = blocks.dtype == jnp.uint32
+    out_dtype = jnp.uint32 if ring_u32 else jnp.float32
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=bk, max_blocks=maxb, ring_u32=ring_u32),
+        grid=(nrb,),
+        in_specs=[
+            pl.BlockSpec((1, maxb), lambda i: (i, 0)),          # idx
+            pl.BlockSpec((1,), lambda i: (i,)),                 # counts
+            pl.BlockSpec((1, maxb, bm, bk), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),             # whole Y
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nrb * bm, k), out_dtype),
+        interpret=interpret,
+    )(idx, counts, blocks, y.astype(out_dtype))
+
+
+# ---------------------------------------------------------------------------
+# layout conversion: dense / CSR -> blocked-ELL
+# ---------------------------------------------------------------------------
+
+def dense_to_ell(x: np.ndarray, bm: int = 8, bk: int = 128):
+    """Pack a dense matrix into blocked-ELL (numpy, host-side, offline)."""
+    n, d = x.shape
+    n_pad = (-n) % bm
+    d_pad = (-d) % bk
+    xp = np.pad(x, ((0, n_pad), (0, d_pad)))
+    nrb, ncb = xp.shape[0] // bm, xp.shape[1] // bk
+    tiles = xp.reshape(nrb, bm, ncb, bk).transpose(0, 2, 1, 3)  # (nrb,ncb,bm,bk)
+    nonempty = (tiles != 0).any(axis=(2, 3))                    # (nrb, ncb)
+    counts = nonempty.sum(1).astype(np.int32)
+    maxb = max(1, int(counts.max()))
+    blocks = np.zeros((nrb, maxb, bm, bk), x.dtype)
+    idx = np.zeros((nrb, maxb), np.int32)
+    for i in range(nrb):
+        cols = np.flatnonzero(nonempty[i])
+        blocks[i, :len(cols)] = tiles[i, cols]
+        idx[i, :len(cols)] = cols
+    return blocks, idx, counts

@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+# Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+# production meshes and dump memory/cost/collective analyses.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+#       --shape train_4k --mesh multi
+#
+# Cells: 10 archs x 4 shapes (skips recorded with reasons, DESIGN.md §5)
+# + the paper's own kmeans-fraud online iteration. Meshes: single pod
+# (16 data x 16 model = 256 chips) and 2 pods (2 x 16 x 16 = 512).
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)  # uint64 ring for the kmeans cell
+
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import SHAPES, all_archs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+BF16 = jnp.bfloat16
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+# Per-cell training microbatch counts (activation-memory control; see
+# EXPERIMENTS.md §Perf for the derivation).
+MICROBATCHES = {("llama3-405b", "train_4k"): 8,
+                ("deepseek-v2-236b", "train_4k"): 2,
+                ("command-r-35b", "train_4k"): 2}
+# >=100B params: bf16 Adam moments (DESIGN.md §6)
+BF16_MOMENT_ARCHS = {"llama3-405b", "deepseek-v2-236b"}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device result-buffer bytes of every collective in the
+    post-partitioning HLO. '-start' async forms count once ('-done' skipped).
+    Returns {op_kind: bytes} + derived per-device link traffic where
+    all-reduce counts 2x (ring reduce-scatter + all-gather)."""
+    kinds = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    out = {k: 0 for k in kinds}
+    shape_re = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(\(?[^=]*?)\s+([a-z\-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in kinds or op.endswith("-done"):
+            continue
+        sizes = []
+        for dt, dims in shape_re.findall(m.group(1)):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for tok in dims.split(","):
+                if tok:
+                    n *= int(tok)
+            sizes.append(n * _DTYPE_BYTES[dt])
+        if not sizes:
+            continue
+        # async start ops return (operand_alias, result): count the result
+        out[base] += max(sizes) if op.endswith("-start") else sum(sizes)
+    out["link_bytes"] = sum(v * (2 if k == "all-reduce" else 1)
+                            for k, v in out.items() if k in kinds)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch, shape)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch_id: str, shape_name: str, *, cfg=None,
+                global_batch: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    spec = all_archs()[arch_id]
+    cfg = cfg or spec.config
+    sh = SHAPES[shape_name]
+    b, s = global_batch or sh.global_batch, sh.seq_len
+    ii = lambda *sp: jax.ShapeDtypeStruct(sp, np.int32)
+    bb = lambda *sp: jax.ShapeDtypeStruct(sp, BF16)
+    if sh.kind == "train":
+        batch = {"tokens": ii(b, s), "labels": ii(b, s)}
+        if cfg.enc_dec:
+            batch["enc_inputs"] = bb(b, s, cfg.d_model)
+        if cfg.frontend == "vlm":
+            batch["patch_embeds"] = bb(b, cfg.n_patches, cfg.d_model)
+        return batch
+    if sh.kind == "prefill":
+        batch = {"tokens": ii(b, s)}
+        if cfg.enc_dec:
+            batch["enc_inputs"] = bb(b, s, cfg.d_model)
+        if cfg.frontend == "vlm":
+            batch["patch_embeds"] = bb(b, cfg.n_patches, cfg.d_model)
+        return batch
+    return {"token": ii(b, 1), "pos": jax.ShapeDtypeStruct((), np.int32)}
+
+
+def _opt_state_shardings(param_sh, mesh):
+    rep = NamedSharding(mesh, P())
+    return {"adam": {"m": param_sh, "v": param_sh, "step": rep}}
+
+
+def _prefill_step(cfg):
+    from repro.models.lm import forward
+
+    def prefill(params, batch):
+        hidden = forward(params, cfg, tokens=batch.get("tokens"),
+                         enc_inputs=batch.get("enc_inputs"),
+                         patch_embeds=batch.get("patch_embeds"))
+        return (hidden[:, -1].astype(BF16) @ params["head"]).astype(
+            jnp.float32)
+    return prefill
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, *, cfg=None,
+               micro: int | None = None,
+               global_batch: int | None = None,
+               sharding_mode: str = "2d") -> dict:
+    """Lower + compile one cell; return analysis record. cfg/micro/batch/
+    sharding_mode overrides support the roofline probes and the §Perf
+    hillclimb variants (launch/roofline.py, launch/perf.py)."""
+    from repro.models import sharding as S
+    from repro.models.lm import init_params
+    from repro.serving.decode import init_cache
+    from repro.training.adamw import AdamWConfig
+    from repro.training.train_step import init_state, make_train_step
+
+    spec = all_archs()[arch_id]
+    cfg = cfg or spec.config
+    sh = SHAPES[shape_name]
+    t0 = time.perf_counter()
+
+    # pin activation batch axes inside layer scans (DESIGN.md §6; without
+    # this pure-FSDP lets GSPMD replicate the scan carry)
+    act_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if sharding_mode == "fsdp":
+        act_axes = act_axes + ("model",)
+    if sharding_mode == "repl_act" or sh.kind == "decode":
+        # decode §Perf: tiny token batches — replicated activations let the
+        # contraction partial-sum instead of all-gathering FSDP weights
+        # (2.02 s -> 1.31 s on llama3 decode_32k)
+        act_axes = ()
+    gb_eff = global_batch or sh.global_batch
+    n_batch_shards = int(np.prod([mesh.shape[a] for a in act_axes]) or 1)
+    if act_axes and gb_eff % n_batch_shards != 0:
+        act_axes = ()                       # e.g. long_500k's global_batch=1
+    cfg = dataclasses.replace(cfg, act_axes=act_axes)
+
+    params_shape = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+    param_sh = S.param_shardings(mesh, params_shape, sharding_mode)
+    batch = input_specs(arch_id, shape_name, cfg=cfg,
+                        global_batch=global_batch)
+    rep = NamedSharding(mesh, P())
+
+    if sh.kind == "train":
+        opt_cfg = AdamWConfig(
+            moment_dtype=BF16 if arch_id in BF16_MOMENT_ARCHS
+            else jnp.float32)
+        micro = micro if micro is not None \
+            else MICROBATCHES.get((arch_id, shape_name), 1)
+        step = make_train_step(cfg, opt_cfg, microbatches=micro)
+        state_shape = jax.eval_shape(
+            lambda: init_state(params_shape_to_zeros(params_shape), opt_cfg))
+        state_sh = _opt_state_shardings(param_sh, mesh)
+        batch_sh = S.batch_shardings(mesh, batch, sharding_mode)
+        jitted = jax.jit(step,
+                         in_shardings=(param_sh, state_sh, batch_sh),
+                         out_shardings=(param_sh, state_sh,
+                                        {"loss": rep, "grad_norm": rep}),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_shape, state_shape, batch)
+    elif sh.kind == "prefill":
+        prefill = _prefill_step(cfg)
+        batch_sh = S.batch_shardings(mesh, batch, sharding_mode)
+        jitted = jax.jit(prefill, in_shardings=(param_sh, batch_sh),
+                         out_shardings=S.batch_shardings(
+                             mesh, jax.ShapeDtypeStruct(
+                                 (global_batch or sh.global_batch,
+                                  cfg.vocab_padded), np.float32)))
+        lowered = jitted.lower(params_shape, batch)
+    else:  # decode
+        from repro.serving.decode import serve_step
+        b = global_batch or sh.global_batch
+        cache_shape = jax.eval_shape(
+            lambda: init_cache(cfg, b, sh.seq_len,
+                               enc_len=sh.seq_len if cfg.enc_dec else 0))
+        cache_sh = S.cache_shardings(mesh, cache_shape)
+        tok_sh = S.batch_shardings(mesh, batch["token"])
+
+        def decode(params, cache, token, pos):
+            return serve_step(params, cfg, cache, token, pos)
+
+        jitted = jax.jit(decode,
+                         in_shardings=(param_sh, cache_sh, tok_sh, rep),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params_shape, cache_shape, batch["token"],
+                               batch["pos"])
+
+    compiled = lowered.compile()
+    rec = analyze(compiled)
+    rec.update(arch=arch_id, shape=shape_name,
+               mesh="x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+               status="ok", compile_s=round(time.perf_counter() - t0, 1))
+    return rec
+
+
+def params_shape_to_zeros(params_shape):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_shape)
+
+
+def analyze(compiled) -> dict:
+    rec = {}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        rec["flops_per_device"] = float(ca.get("flops", -1))
+        rec["bytes_per_device"] = float(ca.get("bytes accessed", -1))
+    except Exception as e:  # pragma: no cover
+        rec["cost_error"] = str(e)[:200]
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+        if hasattr(ma, "peak_memory_in_bytes"):
+            rec["memory"]["peak_memory_in_bytes"] = int(ma.peak_memory_in_bytes)
+    except Exception as e:  # pragma: no cover
+        rec["memory_error"] = str(e)[:200]
+    try:
+        rec["collectives"] = parse_collectives(compiled.as_text())
+    except Exception as e:  # pragma: no cover
+        rec["collective_error"] = str(e)[:200]
+    return rec
+
+
+def lower_kmeans_cell(mesh) -> dict:
+    """The paper's own config: one online Lloyd iteration on shares."""
+    from repro.configs.kmeans_fraud import FULL as KCFG
+    from repro.launch.kmeans_step import arg_shardings, online_iteration_fn
+    t0 = time.perf_counter()
+    fn, args = online_iteration_fn(KCFG.n, KCFG.d, KCFG.k, KCFG.d_a)
+    shardings = arg_shardings(mesh, args, KCFG.n)
+    jitted = jax.jit(fn, in_shardings=shardings,
+                     out_shardings=NamedSharding(mesh, P()))
+    compiled = jitted.lower(*args).compile()
+    rec = analyze(compiled)
+    rec.update(arch="kmeans-fraud", shape=f"n{KCFG.n}_d{KCFG.d}_k{KCFG.k}",
+               mesh="x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+               status="ok", compile_s=round(time.perf_counter() - t0, 1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--kmeans", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    cells = []
+    if args.all or args.kmeans:
+        cells.append(("kmeans-fraud", None))
+    if args.all:
+        for arch_id in all_archs():
+            for shape_name in SHAPES:
+                cells.append((arch_id, shape_name))
+    elif args.arch and args.arch != "kmeans-fraud":
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        cells += [(args.arch, s) for s in shapes]
+    elif args.arch == "kmeans-fraud" and not (args.all or args.kmeans):
+        cells.append(("kmeans-fraud", None))
+
+    results = []
+    for arch_id, shape_name in cells:
+        for mesh_name, mesh in meshes:
+            label = f"{arch_id}/{shape_name}/{mesh_name}"
+            if arch_id != "kmeans-fraud":
+                spec = all_archs()[arch_id]
+                if shape_name in spec.skip_shapes:
+                    results.append({"arch": arch_id, "shape": shape_name,
+                                    "mesh": mesh_name, "status": "skip",
+                                    "reason": spec.skip_reason})
+                    print(f"[skip] {label}: {spec.skip_reason[:60]}")
+                    continue
+            try:
+                with mesh:
+                    rec = (lower_kmeans_cell(mesh) if arch_id == "kmeans-fraud"
+                           else lower_cell(arch_id, shape_name, mesh))
+                rec["mesh_name"] = mesh_name
+                results.append(rec)
+                mem = rec.get("memory", {})
+                print(f"[ok] {label}: compile {rec['compile_s']}s, "
+                      f"flops/dev {rec.get('flops_per_device', -1):.3g}, "
+                      f"argbytes/dev {mem.get('argument_size_in_bytes', -1):.3g}, "
+                      f"link {rec.get('collectives', {}).get('link_bytes', -1):.3g}")
+            except Exception as e:
+                results.append({"arch": arch_id, "shape": shape_name,
+                                "mesh": mesh_name, "status": "error",
+                                "error": f"{type(e).__name__}: {e}"[:500]})
+                print(f"[ERR] {label}: {type(e).__name__}: {str(e)[:160]}")
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_err} error -> {args.out}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

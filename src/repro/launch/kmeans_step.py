@@ -1,0 +1,253 @@
+"""The paper's online Lloyd iteration as a pjit-able pure function.
+
+The offline phase (Beaver triples, B2A randomness) is materialized as
+*function inputs*: a RecordingDealer first traces the protocol to enumerate
+every correlated-randomness tensor the iteration consumes (their shapes are
+data-independent — that's WHY the offline phase exists), then the real
+lowering consumes them from the argument list via a ListDealer.
+
+Sharding: sample-major tensors (n, ...) are sharded over ('pod','data') —
+each MPC *party* owns a slice of the pod in production, and its sample rows
+are data-parallel within it. Centroid-sized tensors replicate. C^T X lowers
+to a psum over the sample axis: the paper's vectorized F_SCU is literally a
+data-parallel reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protocol as P
+from repro.core import ring
+from repro.core.channel import CommLog
+from repro.core.sharing import AShare, BShare
+from repro.core.triples import BinTriple, MatmulTriple, MulTriple
+
+
+class RecordingDealer:
+    """Enumerates the offline-phase tensors (kind, shape) in consumption
+    order; hands back zeros so tracing proceeds."""
+
+    def __init__(self):
+        self.requests: list[tuple[str, tuple]] = []
+
+    def _z(self, shape):
+        return jnp.zeros(shape, ring.DTYPE)
+
+    def matmul_triple(self, sa, sb, *, tag="x"):
+        self.requests.append(("matmul", (tuple(sa), tuple(sb))))
+        n, d = sa
+        _, k = sb
+        return MatmulTriple(AShare(self._z((n, d)), self._z((n, d))),
+                            AShare(self._z((d, k)), self._z((d, k))),
+                            AShare(self._z((n, k)), self._z((n, k))))
+
+    def mul_triple(self, shape, *, tag="x"):
+        self.requests.append(("mul", tuple(shape)))
+        z = self._z(shape)
+        return MulTriple(AShare(z, z), AShare(z, z), AShare(z, z))
+
+    def bin_triple(self, shape, *, tag="x"):
+        self.requests.append(("bin", tuple(shape)))
+        z = self._z(shape)
+        return BinTriple(BShare(z, z), BShare(z, z), BShare(z, z))
+
+    def rand(self, shape):
+        self.requests.append(("rand", tuple(shape)))
+        return self._z(shape)
+
+
+class ListDealer:
+    """Consumes pre-materialized offline tensors (jnp arrays) in order."""
+
+    def __init__(self, flat: list):
+        self.flat = list(flat)
+        self.i = 0
+
+    def _pop(self):
+        v = self.flat[self.i]
+        self.i += 1
+        return v
+
+    def matmul_triple(self, sa, sb, *, tag="x"):
+        return MatmulTriple(AShare(self._pop(), self._pop()),
+                            AShare(self._pop(), self._pop()),
+                            AShare(self._pop(), self._pop()))
+
+    def mul_triple(self, shape, *, tag="x"):
+        return MulTriple(AShare(self._pop(), self._pop()),
+                         AShare(self._pop(), self._pop()),
+                         AShare(self._pop(), self._pop()))
+
+    def bin_triple(self, shape, *, tag="x"):
+        return BinTriple(BShare(self._pop(), self._pop()),
+                         BShare(self._pop(), self._pop()),
+                         BShare(self._pop(), self._pop()))
+
+    def rand(self, shape):
+        return self._pop()
+
+
+def _iteration(xa_enc, xb_enc, mu: AShare, dealer, n: int, k: int,
+               d_a: int, he_results: tuple | None = None) -> AShare:
+    """One vertical-partition online Lloyd iteration on shares (Alg. 3).
+
+    he_results=None  -> dense-SS path: joint products via Beaver matmuls.
+    he_results=(...) -> sparsity-aware path (paper Sec 4.3): the four joint
+    products are computed host-side by Protocol 2 (HE over the plaintext
+    sparse X) and enter the mesh program as fresh share INPUTS — the
+    nnz-independent n*d Beaver traffic and its triple matmuls vanish from
+    the TPU roofline, which is exactly the paper's claim mapped onto the
+    accelerator."""
+    ctx = P.Ctx(dealer=dealer, log=CommLog())
+    f = ring.F
+    # ---- S1: distances ---------------------------------------------------
+    mu_sq = P.smul(ctx, mu, mu)
+    u = AShare(mu_sq.s0.sum(1), mu_sq.s1.sum(1))
+    mut = AShare(mu.s0.T, mu.s1.T)
+    loc_a = jnp.matmul(xa_enc, mut.s0[:d_a])
+    loc_b = jnp.matmul(xb_enc, mut.s1[d_a:])
+    if he_results is None:
+        j1 = P.smatmul(ctx, AShare(xa_enc, jnp.zeros_like(xa_enc)),
+                       AShare(jnp.zeros_like(mut.s1[:d_a]), mut.s1[:d_a]))
+        j2 = P.smatmul(ctx, AShare(jnp.zeros_like(xb_enc), xb_enc),
+                       AShare(mut.s0[d_a:], jnp.zeros_like(mut.s0[d_a:])))
+    else:
+        j1, j2 = he_results[0], he_results[1]
+    xmu = AShare(loc_a + j1.s0 + j2.s0, loc_b + j1.s1 + j2.s1)
+    d2 = P.sub(AShare(u.s0[None, :], u.s1[None, :]), P.lshift(xmu, 1))
+    dist = P.trunc(d2, f)
+    # ---- S2: assignment --------------------------------------------------
+    c = P.argmin_onehot(ctx, dist)
+    # ---- S3: update ------------------------------------------------------
+    ct = AShare(c.s0.T, c.s1.T)
+    za = AShare(jnp.matmul(ct.s0, xa_enc), jnp.zeros((k, d_a), ring.DTYPE))
+    zb = AShare(jnp.zeros((k, xb_enc.shape[1]), ring.DTYPE),
+                jnp.matmul(ct.s1, xb_enc))
+    if he_results is None:
+        ja = P.smatmul(ctx, AShare(jnp.zeros_like(ct.s1), ct.s1),
+                       AShare(xa_enc, jnp.zeros_like(xa_enc)))
+        jb = P.smatmul(ctx, AShare(ct.s0, jnp.zeros_like(ct.s0)),
+                       AShare(jnp.zeros_like(xb_enc), xb_enc))
+    else:
+        ja, jb = he_results[2], he_results[3]
+    num = AShare(jnp.concatenate([za.s0 + ja.s0, zb.s0 + jb.s0], 1),
+                 jnp.concatenate([za.s1 + ja.s1, zb.s1 + jb.s1], 1))
+    den = AShare(c.s0.sum(0), c.s1.sum(0))
+    one = AShare(jnp.full((k,), 1, ring.DTYPE), jnp.zeros((k,), ring.DTYPE))
+    is_empty = P.cmp_lt(ctx, den, one)
+    den_safe = P.mux(ctx, is_empty, one, den)
+    # balanced-split division (see core/kmeans.py for the derivation)
+    m = int(np.ceil(np.log2(max(2, n))))
+    s = m // 2
+    num_s = P.trunc(num, s)
+    r = P.reciprocal(ctx, den_safe, max_den=n, f=f, extra_bits=s)
+    mu_new = P.smul(ctx, num_s, AShare(r.s0[:, None], r.s1[:, None]),
+                    trunc_f=f)
+    guard = AShare(is_empty.s0[:, None], is_empty.s1[:, None])
+    return P.mux(ctx, guard, mu, mu_new)
+
+
+def record_offline_shapes(n: int, d: int, k: int, d_a: int):
+    """Trace the iteration once to enumerate the offline tensor list."""
+    dealer = RecordingDealer()
+
+    def run():
+        z = jnp.zeros((n, d_a), ring.DTYPE)
+        zb = jnp.zeros((n, d - d_a), ring.DTYPE)
+        mu = AShare(jnp.zeros((k, d), ring.DTYPE),
+                    jnp.zeros((k, d), ring.DTYPE))
+        return _iteration(z, zb, mu, dealer, n, k, d_a)
+
+    jax.eval_shape(run)
+    return dealer.requests
+
+
+def offline_tensor_specs(requests, n: int):
+    """Flat list of ShapeDtypeStructs mirroring ListDealer consumption."""
+    flat = []
+    for kind, shape in requests:
+        if kind == "matmul":
+            (nn, d), (d2, k) = shape
+            flat += [jax.ShapeDtypeStruct(s, ring.NP_DTYPE)
+                     for s in [(nn, d), (nn, d), (d, k), (d, k),
+                               (nn, k), (nn, k)]]
+        elif kind in ("mul", "bin"):
+            flat += [jax.ShapeDtypeStruct(shape, ring.NP_DTYPE)] * 6
+        else:  # rand
+            flat.append(jax.ShapeDtypeStruct(shape, ring.NP_DTYPE))
+    return flat
+
+
+def online_iteration_fn(n: int, d: int, k: int, d_a: int,
+                        sparse: bool = False):
+    """(fn, arg ShapeDtypeStructs) with fn(xa, xb, mu0, mu1, *he, *flat).
+    sparse=True adds the 8 Protocol-2 result shares as inputs and drops the
+    joint Beaver matmuls (paper Sec 4.3 on-mesh)."""
+    n_he = 0
+    he_shapes = []
+    if sparse:
+        he_shapes = [(n, k), (n, k), (k, d_a), (k, d - d_a)]
+        n_he = 8  # 4 AShares = 8 tensors
+
+    def _he_args(flat):
+        if not sparse:
+            return None, flat
+        he = [AShare(flat[2 * i], flat[2 * i + 1]) for i in range(4)]
+        return tuple(he), flat[n_he:]
+
+    class _Rec(RecordingDealer):
+        pass
+
+    dealer = _Rec()
+
+    def run():
+        z = jnp.zeros((n, d_a), ring.DTYPE)
+        zb = jnp.zeros((n, d - d_a), ring.DTYPE)
+        mu = AShare(jnp.zeros((k, d), ring.DTYPE),
+                    jnp.zeros((k, d), ring.DTYPE))
+        he = tuple(AShare(jnp.zeros(s, ring.DTYPE), jnp.zeros(s, ring.DTYPE))
+                   for s in he_shapes) if sparse else None
+        return _iteration(z, zb, mu, dealer, n, k, d_a, he_results=he)
+
+    jax.eval_shape(run)
+    flat_specs = offline_tensor_specs(dealer.requests, n)
+
+    def fn(xa_enc, xb_enc, mu_s0, mu_s1, *flat):
+        he, rest = _he_args(list(flat))
+        out = _iteration(xa_enc, xb_enc, AShare(mu_s0, mu_s1),
+                         ListDealer(rest), n, k, d_a, he_results=he)
+        return out.s0, out.s1
+
+    he_specs = []
+    for s in he_shapes:
+        he_specs += [jax.ShapeDtypeStruct(s, ring.NP_DTYPE)] * 2
+    args = (jax.ShapeDtypeStruct((n, d_a), ring.NP_DTYPE),
+            jax.ShapeDtypeStruct((n, d - d_a), ring.NP_DTYPE),
+            jax.ShapeDtypeStruct((k, d), ring.NP_DTYPE),
+            jax.ShapeDtypeStruct((k, d), ring.NP_DTYPE)) \
+        + tuple(he_specs) + tuple(flat_specs)
+    return fn, args
+
+
+def arg_shardings(mesh, args, n: int):
+    """Shard the sample axis over ('pod','data') WHEREVER it appears —
+    including dim-1 of the transposed (k, n) Beaver triples. (§Perf
+    iteration 1: leaving those replicated made GSPMD reconstruct E
+    replicated and ALL-GATHER the 4 GB F operands of C^T X instead of
+    partial-summing — 8.6 GB/device/step of pure waste.)"""
+    from jax.sharding import NamedSharding, PartitionSpec as Pspec
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    out = []
+    for a in args:
+        spec = [None] * len(a.shape)
+        for dim, sz in enumerate(a.shape):
+            if sz == n:
+                spec[dim] = axes
+                break
+        out.append(NamedSharding(mesh, Pspec(*spec)))
+    return tuple(out)

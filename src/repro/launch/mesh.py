@@ -1,0 +1,19 @@
+"""Production mesh builders (functions, not module constants: importing this
+module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16). Multi-pod: 2 pods =
+    512 chips as (pod=2, data=16, model=16); 'pod' is the DCN-crossing pure-DP
+    axis (gradient all-reduce only, optionally int8-compressed)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh():
+    """1-device mesh with the production axis names (CPU tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

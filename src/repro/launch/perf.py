@@ -1,0 +1,186 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# §Perf hillclimb driver: baseline -> variant -> measure, per EXPERIMENTS.md.
+# Three cells (chosen from the roofline table): the paper's own
+# kmeans-fraud iteration, the most collective-bound train cell, and the
+# flagship decode cell. Each variant is an explicit hypothesis; the output
+# JSON is the iteration log.
+#
+#   PYTHONPATH=src python -m repro.launch.perf --cell kmeans --out perf.json
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+import jax  # noqa: E402
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.launch import dryrun  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import (CHIPS, HBM_BW, LINK_BW, PEAK_FLOPS,  # noqa: E402
+                                   corrected_totals, model_flops)
+
+MESH = None
+
+
+def _terms(f, b, l):
+    t = {"compute_s": f / PEAK_FLOPS, "memory_s": b / HBM_BW,
+         "collective_s": l / LINK_BW}
+    t["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                        key=lambda k: t[k])
+    t["step_s"] = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    return t
+
+
+def measure_kmeans(sparse: bool, fuse: bool) -> dict:
+    from repro.configs.kmeans_fraud import FULL as K
+    from repro.core import protocol
+    from repro.launch.kmeans_step import arg_shardings, online_iteration_fn
+    old = protocol.FUSE_BEAVER
+    protocol.FUSE_BEAVER = fuse
+    try:
+        fn, args = online_iteration_fn(K.n, K.d, K.k, K.d_a, sparse=sparse)
+        shardings = arg_shardings(MESH, args, K.n)
+        with MESH:
+            compiled = jax.jit(fn, in_shardings=shardings,
+                               out_shardings=NamedSharding(MESH, P())
+                               ).lower(*args).compile()
+        rec = dryrun.analyze(compiled)
+    finally:
+        protocol.FUSE_BEAVER = old
+    f = rec["flops_per_device"]
+    b = rec["bytes_per_device"]
+    l = float(rec["collectives"]["link_bytes"])
+    out = _terms(f, b, l)
+    mf = (2.0 * K.n * K.d * K.k + 4.0 * K.n * K.k + 2.0 * K.n * K.d) / CHIPS
+    out.update(flops_dev=f, bytes_dev=b, link_dev=l,
+               useful_ratio=mf / max(f, 1.0),
+               roofline_fraction=(mf / PEAK_FLOPS) / max(out["step_s"], 1e-12),
+               variant=f"sparse={sparse},fuse={fuse}")
+    return out
+
+
+def measure_lm(arch: str, shape: str, *, sharding_mode="2d",
+               micro=None, cfg_patch: dict | None = None) -> dict:
+    import dataclasses
+
+    from repro.configs.base import all_archs
+    cfg_base = None
+    if cfg_patch:
+        cfg_base = dataclasses.replace(all_archs()[arch].config, **cfg_patch)
+    old_micro = dict(dryrun.MICROBATCHES)
+    if micro is not None:
+        dryrun.MICROBATCHES[(arch, shape)] = micro
+    try:
+        old_lower = dryrun.lower_cell
+        if sharding_mode != "2d":
+            def lower_patched(*a, **kw):
+                kw["sharding_mode"] = sharding_mode
+                return old_lower(*a, **kw)
+            dryrun.lower_cell = lower_patched
+        try:
+            with MESH:
+                tot = corrected_totals(arch, shape, MESH, cfg_base=cfg_base)
+        finally:
+            dryrun.lower_cell = old_lower
+    finally:
+        dryrun.MICROBATCHES.clear()
+        dryrun.MICROBATCHES.update(old_micro)
+    out = _terms(tot["flops_dev"], tot["bytes_dev"], tot["link_bytes_dev"])
+    mf = model_flops(arch, shape, cfg_base=cfg_base) / CHIPS
+    out.update(flops_dev=tot["flops_dev"], bytes_dev=tot["bytes_dev"],
+               link_dev=tot["link_bytes_dev"],
+               useful_ratio=mf / max(tot["flops_dev"], 1.0),
+               roofline_fraction=(mf / PEAK_FLOPS) / max(out["step_s"], 1e-12),
+               variant=f"mode={sharding_mode},micro={micro},"
+                       f"patch={cfg_patch}")
+    return out
+
+
+def main():
+    global MESH
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    choices=["kmeans", "train", "moe", "decode"])
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    MESH = make_production_mesh(multi_pod=False)
+
+    results = []
+    if args.cell == "kmeans":
+        variants = [("baseline (paper-faithful dense SS)",
+                     dict(sparse=False, fuse=False)),
+                    ("fused Beaver recombination", dict(sparse=False,
+                                                        fuse=True)),
+                    ("sparsity-aware: joint matmuls -> host HE (Protocol 2)",
+                     dict(sparse=True, fuse=True))]
+        if args.variant:
+            variants = [v for v in variants if args.variant in v[0]]
+        for name, kw in variants:
+            rec = measure_kmeans(**kw)
+            rec["name"] = name
+            results.append(rec)
+            print(f"[{name}] dom={rec['dominant']} step={rec['step_s']:.4f}s "
+                  f"flops/dev={rec['flops_dev']:.3e} "
+                  f"link/dev={rec['link_dev']:.3e}")
+    else:
+        defaults = {"train": ("granite-34b", "train_4k"),
+                    "moe": ("granite-moe-3b-a800m", "train_4k"),
+                    "decode": ("llama3-405b", "decode_32k")}
+        arch = args.arch or defaults[args.cell][0]
+        shape = args.shape or defaults[args.cell][1]
+        variants = [("baseline 2D (FSDP x TP)", dict(sharding_mode="2d")),
+                    ("pure FSDP (no TP)", dict(sharding_mode="fsdp"))]
+        if args.cell == "decode":
+            variants = [
+                ("baseline 2D, batch-sharded activations",
+                 dict(sharding_mode="2d")),
+                ("replicated activations (partial-sum MLPs)",
+                 dict(sharding_mode="repl_act")),
+            ]
+        if args.cell == "moe":
+            variants += [
+                ("FSDP + unpadded experts (40, d-sharded)",
+                 dict(sharding_mode="fsdp",
+                      cfg_patch={"expert_pad_multiple": 1})),
+                ("FSDP + unpadded + capacity 1.0",
+                 dict(sharding_mode="fsdp",
+                      cfg_patch={"expert_pad_multiple": 1,
+                                 "capacity_factor": 1.0})),
+                ("2D + per-example dispatch (local sorts)",
+                 dict(cfg_patch={"moe_dispatch": "per_example"})),
+            ]
+        if args.cell == "train":
+            variants.append(("FSDP + save-dots remat",
+                             dict(sharding_mode="fsdp",
+                                  cfg_patch={"remat_policy": "dots"})))
+        if args.cell == "train" and arch == "llama3-405b":
+            variants.append(("2D + microbatch=4", dict(micro=4)))
+        if args.variant:
+            variants = [v for v in variants if args.variant in v[0]]
+        for name, kw in variants:
+            try:
+                rec = measure_lm(arch, shape, **kw)
+                rec["name"] = f"{arch}/{shape}: {name}"
+                results.append(rec)
+                print(f"[{name}] dom={rec['dominant']} "
+                      f"step={rec['step_s']:.4f}s "
+                      f"roofline={rec['roofline_fraction']:.2%}")
+            except Exception as e:
+                results.append({"name": name, "error": str(e)[:300]})
+                print(f"[{name}] ERROR {str(e)[:160]}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

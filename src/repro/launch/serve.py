@@ -1,0 +1,90 @@
+"""Batched serving driver: prefill + decode loop over the serve_step path.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-34b \
+        --reduced --batch 4 --prompt-len 32 --gen 64
+
+Serves a (reduced by default) model with a static batch of requests:
+prefill fills the KV cache token-by-token through the same serve_step used
+by the dry-run (so the exercised code path is exactly the production one),
+then greedy-decodes `gen` tokens. Reports per-phase latency and tokens/s.
+Production differences (continuous batching, paged caches) are design-noted
+in DESIGN.md §6 — the cache layouts here already support ring-buffer
+windows and compressed MLA entries.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import all_archs
+from repro.models.lm import init_params
+from repro.serving.decode import init_cache, serve_step
+
+
+def serve(arch: str, *, reduced: bool = True, batch: int = 4,
+          prompt_len: int = 32, gen: int = 64, seed: int = 0,
+          verbose: bool = True) -> dict:
+    spec = all_archs()[arch]
+    cfg = spec.reduced if reduced else spec.config
+    rng = np.random.default_rng(seed)
+    params = init_params(cfg, jax.random.key(seed))
+    max_seq = prompt_len + gen
+    cache = init_cache(cfg, batch, max_seq,
+                       enc_len=prompt_len if cfg.enc_dec else 0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                       (batch, prompt_len)), jnp.int32)
+
+    step = jax.jit(lambda p, c, t, pos: serve_step(p, cfg, c, t, pos))
+
+    t0 = time.perf_counter()
+    logits = None
+    for pos in range(prompt_len):                  # prefill via decode path
+        logits, cache = step(params, cache, prompts[:, pos:pos + 1],
+                             jnp.int32(pos))
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    out_tokens = []
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    t0 = time.perf_counter()
+    for pos in range(prompt_len, prompt_len + gen):
+        out_tokens.append(np.asarray(tok))
+        logits, cache = step(params, cache, tok[:, None], jnp.int32(pos))
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    tok.block_until_ready()
+    t_decode = time.perf_counter() - t0
+
+    toks = np.stack(out_tokens, 1)                 # (batch, gen)
+    result = {
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "decode_tok_per_s": batch * gen / t_decode,
+        "tokens": toks,
+        "finite": bool(np.isfinite(np.asarray(logits)).all()),
+    }
+    if verbose:
+        print(f"{arch}: batch={batch} prompt={prompt_len} gen={gen}")
+        print(f"  prefill {t_prefill:.2f}s  decode {t_decode:.2f}s "
+              f"({result['decode_tok_per_s']:.1f} tok/s)")
+        print(f"  sample continuation: {toks[0, :16].tolist()}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=64)
+    args = ap.parse_args()
+    serve(args.arch, reduced=args.reduced, batch=args.batch,
+          prompt_len=args.prompt_len, gen=args.gen)
+
+
+if __name__ == "__main__":
+    main()

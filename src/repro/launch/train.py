@@ -1,0 +1,113 @@
+"""End-to-end fault-tolerant training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-34b \
+        --reduced --steps 300 --batch 16 --seq 128 --ckpt-dir /tmp/run1
+
+Features exercised (at laptop scale here; the same code paths drive the
+production mesh): auto-resume from the latest atomic checkpoint, keep-N GC,
+deterministic restartable data, straggler-tolerant synchronous steps
+(deadline metric), optional int8 error-feedback gradient compression, and a
+--simulate-preemption flag used by the fault-tolerance tests.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore, config_fingerprint
+from repro.configs.base import all_archs
+from repro.data.pipeline import DataConfig, SyntheticLMStream
+from repro.models.lm import init_params
+from repro.training.adamw import AdamWConfig
+from repro.training.train_step import init_state, make_train_step
+
+
+def run(arch: str, *, reduced: bool = True, steps: int = 100,
+        batch: int = 8, seq: int = 128, ckpt_dir: str | None = None,
+        ckpt_every: int = 50, keep: int = 3, lr: float = 3e-4,
+        compress: bool = False, simulate_preemption_at: int | None = None,
+        log_every: int = 10, seed: int = 0, verbose: bool = True) -> dict:
+    spec = all_archs()[arch]
+    cfg = spec.reduced if reduced else spec.config
+    opt_cfg = AdamWConfig(lr=lr)
+    params = init_params(cfg, jax.random.key(seed))
+    state = init_state(params, opt_cfg, compress_pod_grads=compress)
+    step0 = 0
+
+    store = None
+    if ckpt_dir:
+        store = CheckpointStore(ckpt_dir, keep=keep,
+                                fingerprint=config_fingerprint(cfg))
+        latest = store.latest_step()
+        if latest is not None:
+            restored = store.restore(latest, {"params": params,
+                                              "state": state})
+            params, state = restored["params"], restored["state"]
+            step0 = latest
+            if verbose:
+                print(f"[resume] restored step {latest} from {ckpt_dir}")
+
+    stream = SyntheticLMStream(DataConfig(cfg.vocab_size, seq, batch,
+                                          seed=seed))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg,
+                                      compress_pod_grads=compress))
+
+    losses, step_times = [], []
+    for s in range(step0, steps):
+        if simulate_preemption_at is not None and s == simulate_preemption_at:
+            if verbose:
+                print(f"[preempt] simulated kill at step {s}")
+            return {"preempted_at": s, "losses": losses}
+        t0 = time.perf_counter()
+        host = stream.batch(s)
+        b = {k: jnp.asarray(v) for k, v in host.items()}
+        params, state, metrics = step_fn(params, state, b)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        step_times.append(time.perf_counter() - t0)
+        if store and (s + 1) % ckpt_every == 0:
+            store.save(s + 1, {"params": params, "state": state})
+        if verbose and (s % log_every == 0 or s == steps - 1):
+            print(f"step {s:5d} loss {loss:.4f} "
+                  f"({step_times[-1]*1e3:.0f} ms)")
+    # straggler telemetry: p50/p95 step time (sync training's health metric)
+    result = {"losses": losses, "final_loss": losses[-1] if losses else None,
+              "p50_ms": float(np.percentile(step_times, 50) * 1e3)
+              if step_times else None,
+              "p95_ms": float(np.percentile(step_times, 95) * 1e3)
+              if step_times else None,
+              "steps_run": len(losses), "resumed_from": step0}
+    if store:
+        store.save(steps, {"params": params, "state": state})
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = run(args.arch, reduced=args.reduced, steps=args.steps,
+              batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
+              ckpt_every=args.ckpt_every, lr=args.lr,
+              compress=args.compress, seed=args.seed)
+    print(f"final loss: {out['final_loss']:.4f}  "
+          f"p50 {out['p50_ms']:.0f} ms  p95 {out['p95_ms']:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,285 @@
+"""Transformer layers: norms, RoPE, GQA/MLA attention (flash-chunked causal,
+banded local, softcap), dense GLU MLP, and sort-based sparse MoE.
+
+All compute is dtype-explicit: bf16 matmuls / f32 softmax-norm-router (safe
+under the MPC core's global x64 flag). Attention never materializes the full
+(S, S) score matrix — online-softmax over KV chunks (flash pattern), which is
+what makes prefill_32k fit HBM.
+
+The MoE dispatch is the paper's sparsity insight applied to the LM substrate
+(DESIGN.md §5): assignment one-hots are never multiplied as dense matrices;
+tokens are sorted by expert id and gathered into (E, C, D) — compute and
+traffic proportional to routed tokens, exactly like Protocol 2 vs dense SS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(F32)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + F32(eps))
+    return (y * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+def rope_freqs(positions: jnp.ndarray, dim: int, theta: float) -> tuple:
+    """positions: (...,) int32 -> cos/sin (..., dim/2) f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=F32) / dim))
+    ang = positions.astype(F32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., T, H, D); cos/sin: (..., T, D/2) broadcast over heads."""
+    xf = x.astype(F32)
+    x1, x2 = xf[..., ::2], xf[..., 1::2]
+    c, s = cos[..., None, :], sin[..., None, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu_sq": lambda v: jnp.square(jax.nn.relu(v))}[name]
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / F32(cap)) * F32(cap)
+
+
+# ---------------------------------------------------------------------------
+# flash-chunked attention (causal / banded-local), GQA
+# ---------------------------------------------------------------------------
+
+def _attn_chunk(q, k, v, mask, scale, cap):
+    """q (B,Tq,H,Dk) k (B,Tk,Hkv,Dk) v (B,Tk,Hkv,Dv) mask (Tq,Tk)."""
+    b, tq, h, dk = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qf = q.astype(F32).reshape(b, tq, hkv, g, dk)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(F32)) * F32(scale)
+    s = softcap(s, cap)
+    s = jnp.where(mask[None, None, None], s, F32(-1e30))
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(F32))
+    return m, l, o  # o: (b, tq, hkv, g, dv)
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int | None,
+                    scale: float, cap: float | None,
+                    q_offset: int = 0, kv_chunk: int = 2048,
+                    q_chunk: int = 2048) -> jnp.ndarray:
+    """Online-softmax attention over KV chunks. q (B,Tq,H,D), k/v (B,Tk,Hkv,D).
+    `q_offset` is the absolute position of q[0] relative to k[0] (decode /
+    banded use). Full (Tq,Tk) scores never materialize.
+
+    Long queries are processed in q_chunk slices so the static causal/window
+    chunk-skip below turns causal attention into ~T^2/2 and windowed local
+    attention into O(T*window) actual compute."""
+    if q.shape[1] > q_chunk:
+        outs = [flash_attention(q[:, i:i + q_chunk], k, v, causal=causal,
+                                window=window, scale=scale, cap=cap,
+                                q_offset=q_offset + i, kv_chunk=kv_chunk,
+                                q_chunk=q_chunk)
+                for i in range(0, q.shape[1], q_chunk)]
+        return jnp.concatenate(outs, axis=1)
+    b, tq, h, dk = q.shape
+    tk = k.shape[1]
+    hkv = k.shape[2]
+    dv = v.shape[3]
+    g = h // hkv
+    kv_chunk = min(kv_chunk, tk)
+    n_chunks = -(-tk // kv_chunk)
+    pad = n_chunks * kv_chunk - tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, hkv, dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(tq)
+
+    # Python-unrolled over KV chunks (NOT lax.scan): chunks whose mask is
+    # statically all-False (future-of-causal / outside-window) are SKIPPED
+    # entirely — banded local attention costs O(T*window), and XLA's cost
+    # analysis sees every surviving chunk (scan bodies are counted once,
+    # which would corrupt the roofline — see launch/roofline.py).
+    m_run = jnp.full((b, hkv, g, tq), -jnp.inf, F32)
+    l_run = jnp.zeros((b, hkv, g, tq), F32)
+    o_run = jnp.zeros((b, hkv, g, tq, dv), F32)
+    q_lo, q_hi = q_offset, q_offset + tq - 1
+    for ci in range(n_chunks):
+        k_lo, k_hi = ci * kv_chunk, ci * kv_chunk + kv_chunk - 1
+        if causal and k_lo > q_hi:
+            continue                          # chunk entirely in the future
+        if window is not None and k_hi <= q_lo - window:
+            continue                          # chunk entirely out of window
+        k_pos = k_lo + jnp.arange(kv_chunk)
+        mask = jnp.ones((tq, kv_chunk), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        mask &= (k_pos < tk)[None, :]
+        m_c, l_c, o_c = _attn_chunk(q, kc[ci], vc[ci], mask, scale, cap)
+        o_c = o_c.transpose(0, 2, 3, 1, 4)      # (b, hkv, g, tq, dv)
+        m_new = jnp.maximum(m_run, m_c)
+        a = jnp.exp(m_run - m_new)
+        bb = jnp.exp(m_c - m_new)
+        l_run = l_run * a + l_c * bb
+        o_run = o_run * a[..., None] + o_c * bb[..., None]
+        m_run = m_new
+    o = o_run / jnp.maximum(l_run, 1e-30)[..., None]
+    out = o.transpose(0, 3, 1, 2, 4).reshape(b, tq, h, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *, causal: bool,
+              window: int | None, positions: jnp.ndarray) -> jnp.ndarray:
+    """x (B,T,D) -> (B,T,D). p: wq (D,H*Dh), wk/wv (D,Hkv*Dh), wo (H*Dh,D)."""
+    b, t, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, t, h, dh)
+    k = (x @ p["wk"]).reshape(b, t, hkv, dh)
+    v = (x @ p["wv"]).reshape(b, t, hkv, dh)
+    cos, sin = rope_freqs(positions, dh, cfg.rope_theta)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        scale=1.0 / np.sqrt(dh), cap=cfg.attn_softcap)
+    return o.reshape(b, t, h * dh) @ p["wo"]
+
+
+def mla_attention(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                  positions: jnp.ndarray) -> jnp.ndarray:
+    """DeepSeek-V2 Multi-head Latent Attention (training/prefill form).
+
+    KV compressed to kv_lora (+ shared rope key); decode uses the absorbed
+    form over the compressed cache (serving/decode.py)."""
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    # queries through the low-rank bottleneck
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(b, t, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    # compressed kv + shared rope key
+    ckv_full = x @ p["wkv_a"]                       # (B,T,kv_lora+dr)
+    ckv = rms_norm(ckv_full[..., :cfg.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = ckv_full[..., cfg.kv_lora:].reshape(b, t, 1, dr)
+    kv = (ckv @ p["wkv_b"]).reshape(b, t, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    cos, sin = rope_freqs(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = jnp.broadcast_to(apply_rope(k_rope, cos, sin), (b, t, h, dr))
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    k_full = jnp.concatenate([k_nope, k_rope], -1)
+    o = flash_attention(q_full, k_full, v, causal=True, window=None,
+                        scale=1.0 / np.sqrt(dn + dr), cap=None)
+    return o.reshape(b, t, h * dv) @ p["wo"]
+
+
+def cross_attention(p: dict, x: jnp.ndarray, enc: jnp.ndarray,
+                    cfg: ModelConfig) -> jnp.ndarray:
+    b, t, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, t, h, dh)
+    k = (enc @ p["wk"]).reshape(b, enc.shape[1], hkv, dh)
+    v = (enc @ p["wv"]).reshape(b, enc.shape[1], hkv, dh)
+    o = flash_attention(q, k, v, causal=False, window=None,
+                        scale=1.0 / np.sqrt(dh), cap=None)
+    return o.reshape(b, t, h * dh) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# dense GLU MLP
+# ---------------------------------------------------------------------------
+
+def glu_mlp(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    g = act_fn(act)(x @ p["w_gate"])
+    return ((g * (x @ p["w_up"])) @ p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE with sort-based (sparsity-exploiting) dispatch
+# ---------------------------------------------------------------------------
+
+def moe_mlp(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x (B,T,D) -> (B,T,D). Router f32; tokens sorted by expert id and
+    gathered to (E, C, D); capacity drops overflow (cap_factor).
+
+    moe_dispatch='global' sorts all B*T tokens at once — under pjit with a
+    sharded batch that is a DISTRIBUTED sort (collective-bound, §Perf);
+    'per_example' vmaps the dispatch over the batch so every sort/scatter
+    stays local to its shard, with capacity budgeted per sequence."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    if cfg.moe_dispatch == "per_example":
+        cap = max(1, int(np.ceil(t * k / e * cfg.capacity_factor)))
+        out = jax.vmap(lambda xe: _moe_tokens(p, xe, cfg, cap))(x)
+        if cfg.n_shared_experts:
+            out = out + glu_mlp(p["shared"], x, cfg.act)
+        return out
+    n = b * t
+    cap = max(1, int(np.ceil(n * k / e * cfg.capacity_factor)))
+    out = _moe_tokens(p, x.reshape(n, d), cfg, cap).reshape(b, t, d)
+    if cfg.n_shared_experts:
+        out = out + glu_mlp(p["shared"], x, cfg.act)
+    return out
+
+
+def _moe_tokens(p: dict, xf: jnp.ndarray, cfg: ModelConfig,
+                cap: int) -> jnp.ndarray:
+    """Sort-based dispatch for a flat (N, D) token block."""
+    n, d = xf.shape
+    e, k = cfg.n_experts, cfg.top_k
+    ep = p["w_gate"].shape[-3]           # padded expert count (EP-divisible)
+    logits = (xf.astype(F32) @ p["router"].astype(F32))        # (N, E)
+    probs = jax.nn.softmax(logits, -1)
+    gate, ids = jax.lax.top_k(probs, k)                        # (N, K)
+    gate = (gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+            ) * F32(cfg.router_scale)
+    ids_f = ids.reshape(-1)                                    # (N*K,)
+    tok_f = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    gate_f = gate.reshape(-1)
+    order = jnp.argsort(ids_f)                                 # stable
+    ids_s, tok_s, gate_s = ids_f[order], tok_f[order], gate_f[order]
+    # position of each routed token inside its expert's queue
+    same = jnp.cumsum(jnp.ones_like(ids_s)) - 1
+    seg_start = jnp.searchsorted(ids_s, jnp.arange(e))         # (E,)
+    pos = same - seg_start[ids_s]
+    keep = pos < cap
+    dest = jnp.where(keep, ids_s * cap + pos, ep * cap)        # overflow slot
+    gathered = jnp.zeros((ep * cap + 1, d), xf.dtype).at[dest].set(xf[tok_s])
+    h = gathered[: ep * cap].reshape(ep, cap, d)
+    # expert FFN: (E,C,D) x (E,D,F) — E is the sharded (EP) axis; pad
+    # experts (>= e) receive no tokens, only the zero rows
+    gh = act_fn(cfg.act)(jnp.einsum("ecd,edf->ecf", h, p["w_gate"]))
+    uh = jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+    oh = jnp.einsum("ecf,efd->ecd", gh * uh, p["w_down"])
+    flat = jnp.concatenate([oh.reshape(ep * cap, d),
+                            jnp.zeros((1, d), xf.dtype)], 0)
+    contrib = flat[dest] * gate_s[:, None].astype(xf.dtype)
+    return jnp.zeros((n, d), xf.dtype).at[tok_s].add(
+        jnp.where(keep[:, None], contrib, 0))

@@ -1,0 +1,361 @@
+"""Model assembly: parameter init, scan-over-groups forward, chunked
+vocab-parallel CE loss, prefill, and KV-cache / recurrent-state decode.
+
+Layout invariants (see models/sharding.py):
+* every per-layer parameter is STACKED with a leading `repeats` dim and the
+  forward runs lax.scan over it -> the HLO holds ONE unit body per group
+  (compile time independent of depth; remat applied at unit level);
+* logits are never materialized (B, T, V): the loss scans over sequence
+  chunks with the head kept vocab-sharded (chunked vocab-parallel CE);
+* in-embedding is D-sharded (gather-friendly), out-head is V-sharded
+  (reduction-friendly) — stored separately even for tied archs (noted in
+  DESIGN.md; param counts use the analytic tied count).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ScanGroup
+from repro.models import layers as L
+from repro.models import recurrent as R
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _dense(key, fan_in, shape):
+    return (jax.random.normal(key, shape, F32) / np.sqrt(fan_in)).astype(BF16)
+
+
+def _zeros(shape):
+    return jnp.zeros(shape, BF16)
+
+
+def _init_mlp(key, d, f):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": _dense(k1, d, (d, f)), "w_up": _dense(k2, d, (d, f)),
+            "w_down": _dense(k3, f, (f, d))}
+
+
+def _init_attn(key, cfg: ModelConfig, window: bool = False):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = {"wq": _dense(ks[0], d, (d, h * dh)),
+         "wk": _dense(ks[1], d, (d, hkv * dh)),
+         "wv": _dense(ks[2], d, (d, hkv * dh)),
+         "wo": _dense(ks[3], h * dh, (h * dh, d)),
+         "ln1": _zeros((d,)), "ln2": _zeros((d,))}
+    p.update(_init_mlp(ks[4], d, cfg.d_ff))
+    if cfg.post_norms:
+        p["ln1_post"] = _zeros((d,))
+        p["ln2_post"] = _zeros((d,))
+    return p
+
+
+def _init_moe(key, cfg: ModelConfig):
+    d, fe = cfg.d_model, cfg.d_ff_expert
+    ep = padded_experts(cfg)
+    ks = jax.random.split(key, 5)
+    p = {"router": _dense(ks[0], d, (d, cfg.n_experts)),
+         "w_gate": _dense(ks[1], d, (ep, d, fe)),
+         "w_up": _dense(ks[2], d, (ep, d, fe)),
+         "w_down": _dense(ks[3], fe, (ep, fe, d))}
+    if cfg.n_shared_experts:
+        p["shared"] = _init_mlp(ks[4], d, cfg.n_shared_experts * fe)
+    return p
+
+
+def _init_mla(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {"wq_a": _dense(ks[0], d, (d, cfg.q_lora)),
+            "q_norm": _zeros((cfg.q_lora,)),
+            "wq_b": _dense(ks[1], cfg.q_lora, (cfg.q_lora, h * (dn + dr))),
+            "wkv_a": _dense(ks[2], d, (d, cfg.kv_lora + dr)),
+            "kv_norm": _zeros((cfg.kv_lora,)),
+            "wkv_b": _dense(ks[3], cfg.kv_lora, (cfg.kv_lora, h * (dn + dv))),
+            "wo": _dense(ks[4], h * dv, (h * dv, d)),
+            "ln1": _zeros((d,)), "ln2": _zeros((d,))}
+
+
+def _init_rwkv(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    ks = jax.random.split(key, 10)
+    return {"mix_rkvw": jnp.full((1, 1, d), 0.5, BF16),
+            "wr": _dense(ks[0], d, (d, d)), "wk": _dense(ks[1], d, (d, d)),
+            "wv": _dense(ks[2], d, (d, d)), "wg": _dense(ks[3], d, (d, d)),
+            "wo": _dense(ks[4], d, (d, d)),
+            "w_base": jnp.full((d,), -6.0, F32),
+            "w_lora_a": _dense(ks[5], d, (d, 64)).astype(F32),
+            "w_lora_b": _dense(ks[6], 64, (64, d)).astype(F32),
+            "u_bonus": jnp.zeros((d,), F32),
+            "ln_x_scale": jnp.ones((h, cfg.rwkv_head_dim), F32),
+            "ln1": _zeros((d,)), "ln2": _zeros((d,)),
+            "mix_ch": jnp.full((1, 1, d), 0.5, BF16),
+            "wk_ch": _dense(ks[7], d, (d, cfg.d_ff)),
+            "wv_ch": _dense(ks[8], cfg.d_ff, (cfg.d_ff, d)),
+            "wr_ch": _dense(ks[9], d, (d, d))}
+
+
+def _init_rglru(key, cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 7)
+    p = _init_mlp(ks[6], d, cfg.d_ff)
+    p.update({"w_gate_branch": _dense(ks[0], d, (d, w)),
+            "w_in": _dense(ks[1], d, (d, w)),
+            "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w), F32)
+                       * 0.1).astype(BF16),
+            "conv_b": _zeros((w,)),
+            "w_rg": _dense(ks[3], w, (w, w)).astype(F32),
+            "b_rg": jnp.zeros((w,), F32),
+            "w_ig": _dense(ks[4], w, (w, w)).astype(F32),
+            "b_ig": jnp.zeros((w,), F32),
+              "lambda": jnp.full((w,), 0.65, F32),
+              "w_out": _dense(ks[5], w, (w, d)),
+              "ln1": _zeros((d,)), "ln2": _zeros((d,))})
+    return p
+
+
+def _init_xattn(key, cfg: ModelConfig):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = _init_attn(ks[0], cfg)
+    p.update({"xq": _dense(ks[1], d, (d, h * dh)),
+              "xk": _dense(ks[2], d, (d, hkv * dh)),
+              "xv": _dense(ks[3], d, (d, hkv * dh)),
+              "xo": _dense(ks[4], h * dh, (h * dh, d)),
+              "ln3": _zeros((d,))})
+    return p
+
+
+_INIT = {"attn": _init_attn,
+         "attn_local": _init_attn,
+         "moe_attn": None,  # handled below
+         "mla": None,
+         "mla_dense": None,
+         "rwkv": _init_rwkv,
+         "rglru": _init_rglru,
+         "rglru_attn": _init_attn,
+         "xattn": _init_xattn}
+
+
+def padded_experts(cfg: ModelConfig, tp: int | None = None) -> int:
+    m = tp or cfg.expert_pad_multiple
+    return -(-cfg.n_experts // m) * m if cfg.n_experts else 0
+
+
+def _init_block(kind: str, key, cfg: ModelConfig):
+    if kind == "moe_attn":
+        k1, k2 = jax.random.split(key)
+        p = _init_attn(k1, cfg)
+        for name in ("w_gate", "w_up", "w_down"):
+            p.pop(name)
+        p["moe"] = _init_moe(k2, cfg)
+        return p
+    if kind in ("mla", "mla_dense"):
+        k1, k2 = jax.random.split(key)
+        p = _init_mla(k1, cfg)
+        if kind == "mla":
+            p["moe"] = _init_moe(k2, cfg)
+        else:
+            p.update(_init_mlp(k2, cfg.d_model, cfg.d_ff_dense_first
+                               or cfg.d_ff))
+        return p
+    return _INIT[kind](key, cfg)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, 8)
+    d, vp = cfg.d_model, cfg.vocab_padded
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (vp, d), F32) * 0.02).astype(BF16),
+        "head": _dense(keys[1], d, (d, vp)),
+        "final_norm": _zeros((d,)),
+        "groups": [],
+    }
+    gk = jax.random.split(keys[2], len(cfg.groups))
+    for gi, grp in enumerate(cfg.groups):
+        unit_params = {}
+        for bi, kind in enumerate(grp.unit):
+            bkeys = jax.random.split(jax.random.fold_in(gk[gi], bi),
+                                     grp.repeats)
+            unit_params[f"b{bi}"] = jax.vmap(
+                lambda k: _init_block(kind, k, cfg))(bkeys)
+        params["groups"].append(unit_params)
+    if cfg.enc_dec:
+        ek = jax.random.split(keys[3], cfg.n_enc_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: _init_block("attn", k, cfg))(ek)
+        params["enc_norm"] = _zeros((d,))
+    return params
+
+
+def init_params_shape_only(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# block application (train/prefill mode)
+# ---------------------------------------------------------------------------
+
+def _norm(p, name, x, cfg):
+    return L.rms_norm(x, p[name], cfg.norm_eps)
+
+
+def _pin_batch(x, cfg: ModelConfig):
+    """Pin the activation batch dim to the configured mesh axes. Without
+    this, pure-FSDP sharding lets GSPMD replicate the scan carry (observed:
+    19x flops). No-op when cfg.act_axes is empty (CPU tests/examples)."""
+    if not cfg.act_axes:
+        return x
+    from jax.sharding import PartitionSpec
+    spec = PartitionSpec(tuple(cfg.act_axes),
+                         *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def apply_block(kind: str, p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                positions: jnp.ndarray, enc: jnp.ndarray | None = None):
+    if kind in ("attn", "attn_local", "rglru_attn", "moe_attn", "xattn"):
+        window = cfg.window if kind in ("attn_local", "rglru_attn") else None
+        a = L.attention(p, _norm(p, "ln1", x, cfg), cfg, causal=True,
+                        window=window, positions=positions)
+        if cfg.post_norms:
+            a = _norm(p, "ln1_post", a, cfg)
+        x = x + a
+        if kind == "xattn":
+            x = x + L.cross_attention(
+                {"wq": p["xq"], "wk": p["xk"], "wv": p["xv"], "wo": p["xo"]},
+                _norm(p, "ln3", x, cfg), enc, cfg)
+        h = _norm(p, "ln2", x, cfg)
+        m = L.moe_mlp(p["moe"], h, cfg) if kind == "moe_attn" \
+            else L.glu_mlp(p, h, cfg.act)
+        if cfg.post_norms:
+            m = _norm(p, "ln2_post", m, cfg)
+        return x + m
+    if kind in ("mla", "mla_dense"):
+        x = x + L.mla_attention(p, _norm(p, "ln1", x, cfg), cfg, positions)
+        h = _norm(p, "ln2", x, cfg)
+        m = L.moe_mlp(p["moe"], h, cfg) if kind == "mla" \
+            else L.glu_mlp(p, h, cfg.act)
+        return x + m
+    if kind == "rwkv":
+        tm, _ = R.rwkv_time_mix(p, _norm(p, "ln1", x, cfg), cfg)
+        x = x + tm
+        cm, _ = R.rwkv_channel_mix(p, _norm(p, "ln2", x, cfg), cfg)
+        return x + cm
+    if kind == "rglru":
+        rec, _ = R.rg_lru(p, _norm(p, "ln1", x, cfg), cfg)
+        x = x + rec
+        return x + L.glu_mlp(p, _norm(p, "ln2", x, cfg), cfg.act)
+    raise ValueError(kind)
+
+
+def _encoder_block(p, x, cfg):
+    a = L.attention(p, _norm(p, "ln1", x, cfg), cfg, causal=False,
+                    window=None, positions=jnp.arange(x.shape[1]))
+    x = x + a
+    return x + L.glu_mlp(p, _norm(p, "ln2", x, cfg), cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    x = params["embed"][tokens].astype(BF16)
+    if cfg.scale_embed:
+        x = x * BF16(np.sqrt(cfg.d_model))
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+            enc_inputs=None, patch_embeds=None, remat: bool = True):
+    """-> final hidden states (B, T, D). Inputs:
+    tokens (B,T) int32, or embeds (audio stub); patch_embeds for vlm;
+    enc_inputs (B,S_enc,D) for enc-dec."""
+    x = embeds if embeds is not None else embed_tokens(params, tokens, cfg)
+    if patch_embeds is not None:  # vlm stub: patches replace the prefix
+        x = jax.lax.dynamic_update_slice(
+            x, patch_embeds.astype(x.dtype), (0, 0, 0))
+    positions = jnp.arange(x.shape[1])
+
+    enc = None
+    if cfg.enc_dec:
+        e = enc_inputs.astype(BF16)
+
+        def enc_step(h, p_layer):
+            return _encoder_block(p_layer, h, cfg), None
+        fn = jax.checkpoint(enc_step) if remat else enc_step
+        e, _ = jax.lax.scan(fn, e, params["encoder"],
+                            unroll=cfg.n_enc_layers if cfg.scan_unroll else 1)
+        enc = _norm(params, "enc_norm", e, cfg)
+
+    x = _pin_batch(x, cfg)
+    ckpt_kw = {}
+    if cfg.remat_policy == "dots":
+        ckpt_kw["policy"] = jax.checkpoint_policies.checkpoint_dots
+    for grp, gp in zip(cfg.groups, params["groups"]):
+        def unit(h, unit_p, _grp=grp):
+            for bi, kind in enumerate(_grp.unit):
+                h = apply_block(kind, unit_p[f"b{bi}"], h, cfg, positions, enc)
+            return _pin_batch(h, cfg), None
+        fn = jax.checkpoint(unit, **ckpt_kw) if remat else unit
+        x, _ = jax.lax.scan(fn, x, gp,
+                            unroll=grp.repeats if cfg.scan_unroll else 1)
+    return _norm(params, "final_norm", x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# chunked vocab-parallel cross-entropy
+# ---------------------------------------------------------------------------
+
+def ce_loss(params, cfg: ModelConfig, hidden, labels, *, chunk: int = 512):
+    """hidden (B,T,D), labels (B,T) -> mean CE. Scans T in chunks; the
+    (B,chunk,V) logits stay vocab-sharded and are never stored (remat)."""
+    b, t, d = hidden.shape
+    chunk = min(chunk, t)
+    n_chunks = t // chunk
+    assert t % chunk == 0, (t, chunk)
+    head = params["head"]
+    hc = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(h, lab):
+        logits = (h.astype(BF16) @ head).astype(F32)
+        logits = L.softcap(logits, cfg.final_softcap)
+        m = logits.max(-1, keepdims=True)
+        lse = jnp.log(jnp.exp(logits - m).sum(-1)) + m[..., 0]
+        onehot = (jnp.arange(logits.shape[-1])[None, None, :]
+                  == lab[..., None])
+        true_logit = jnp.where(onehot, logits, 0.0).sum(-1)
+        return (lse - true_logit).sum()
+
+    # Python-unrolled (<= T/512 chunks): keeps XLA cost analysis exact and
+    # never materializes (B, T, V) — backward recomputes per-chunk logits.
+    total = jnp.zeros((), F32)
+    for i in range(n_chunks):
+        total = total + chunk_loss(hc[i], lc[i])
+    return total / (b * t)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    hidden = forward(params, cfg,
+                     tokens=batch.get("tokens"),
+                     embeds=batch.get("embeds"),
+                     enc_inputs=batch.get("enc_inputs"),
+                     patch_embeds=batch.get("patch_embeds"))
+    return ce_loss(params, cfg, hidden, batch["labels"])

@@ -1,0 +1,164 @@
+"""Attention-free recurrences: RWKV6 (Finch) and RG-LRU (Griffin /
+RecurrentGemma). Both are O(T) in sequence length — the sub-quadratic archs
+that run the long_500k cell.
+
+RWKV6 time-mix: per-head state S in R^{dk x dv} with data-dependent
+per-channel decay w_t:   S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+                         y_t = r_t (S_{t-1} + diag(u) k_t^T v_t).
+Implemented chunk-parallel: within a chunk the contributions are dense
+matmuls against cumulative decay products; the state is carried across
+chunks with a scan (MXU-friendly; sequential length T/chunk).
+
+RG-LRU:  h_t = a_t . h_{t-1} + sqrt(1 - a_t^2) . (i_t . x_t),
+         a_t = exp(-c * softplus(L) * sigmoid(r_t))
+computed with an associative scan (log-depth) over the gated pairs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+F32 = jnp.float32
+RG_LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+def _token_shift(x: jnp.ndarray, mix: jnp.ndarray,
+                 prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """lerp(x, shift(x), mix); prev = last token of previous segment."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    xs = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    return x + (xs - x) * mix.astype(x.dtype)
+
+
+def rwkv_time_mix(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                  state: tuple | None = None, chunk: int = 32):
+    """x (B,T,D) -> (B,T,D), carrying (shift_prev, S) state for decode."""
+    b, t, d = x.shape
+    dh = cfg.rwkv_head_dim
+    h = d // dh
+    prev_tok = state[0] if state is not None else None
+    xm = _token_shift(x, p["mix_rkvw"], prev_tok)
+    r = (xm @ p["wr"]).reshape(b, t, h, dh)
+    k = (xm @ p["wk"]).reshape(b, t, h, dh)
+    v = (xm @ p["wv"]).reshape(b, t, h, dh)
+    g = jax.nn.silu(xm @ p["wg"])
+    # data-dependent decay (Finch): w from a small LoRA on the shifted input.
+    # raw clipped so per-step log-decay >= -2: keeps the chunk-factored
+    # exponents (<= chunk*2 = 64) inside f32 range (DESIGN.md numerics note).
+    raw = jnp.clip(p["w_base"].astype(F32)
+                   + (xm.astype(F32) @ p["w_lora_a"]) @ p["w_lora_b"],
+                   -8.0, 0.6931)  # python floats stay weak-typed (no f64)
+    w = jnp.exp(-jnp.exp(raw)).reshape(b, t, h, dh)        # (0.135, 1)
+    u = p["u_bonus"].reshape(h, dh).astype(F32)
+
+    s0 = state[1] if state is not None else jnp.zeros((b, h, dh, dh), F32)
+
+    tc = min(chunk, t)
+    n_chunks = -(-t // tc)
+    pad = n_chunks * tc - t
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+
+    def split(z):  # (B, Nc, Tc, H, Dh) -> scan over Nc
+        return z.reshape(b, n_chunks, tc, h, dh).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, wc = split(r.astype(F32)), split(k.astype(F32)), \
+        split(v.astype(F32)), split(w)
+
+    def body(s, inp):
+        rr, kk, vv, ww = inp                     # (B,H,Tc,Dh/..)
+        logw = jnp.log(jnp.maximum(ww, 1e-38))
+        cum = jnp.cumsum(logw, axis=2)           # prod of decays up to t (incl)
+        total = cum[:, :, -1:]
+        # state contribution: decay from chunk start to t-1 (exclusive of t)
+        dec_in = jnp.exp(cum - logw)             # (B,H,Tc,Dh)
+        y_state = jnp.einsum("bhtk,bhkv->bhtv", rr * dec_in, s)
+        # intra-chunk: sum_{j<t} r_t [prod_{s=j+1..t-1} w_s] k_j v_j
+        # (factored exponents bounded by 2*chunk — see decay clip above)
+        att = jnp.einsum("bhtk,bhjk->bhtj",
+                         rr * jnp.exp(cum - logw),
+                         kk * jnp.exp(-cum))
+        mask = jnp.tril(jnp.ones((tc, tc), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        bonus = jnp.einsum("bhtk,bhtk->bht", rr * u[None, :, None, :], kk)
+        y = y_state + jnp.einsum("bhtj,bhjv->bhtv", att, vv) \
+            + bonus[..., None] * vv
+        s_new = jnp.exp(total).transpose(0, 1, 3, 2) * s + jnp.einsum(
+            "bhjk,bhjv->bhkv", kk * jnp.exp(total - cum), vv)
+        return s_new, y
+
+    s_fin, ys = jax.lax.scan(body, s0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, n_chunks * tc, h, dh)[:, :t]
+    y = _group_norm(y, p["ln_x_scale"], cfg.norm_eps).reshape(b, t, d)
+    out = (y.astype(x.dtype) * g.astype(x.dtype)) @ p["wo"]
+    new_state = (x[:, -1:], s_fin)
+    return out, new_state
+
+
+def _group_norm(y: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Per-head LayerNorm on (B,T,H,Dh)."""
+    yf = y.astype(F32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    return (yf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(F32).reshape(
+        1, 1, *scale.shape)
+
+
+def rwkv_channel_mix(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                     prev: jnp.ndarray | None = None):
+    xm = _token_shift(x, p["mix_ch"], prev)
+    k = jnp.square(jax.nn.relu(xm @ p["wk_ch"]))
+    out = jax.nn.sigmoid(xm @ p["wr_ch"]) * (k @ p["wv_ch"])
+    return out, x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+
+def rg_lru(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+           state: tuple | None = None):
+    """Recurrent block: in-proj -> conv1d(4) -> RG-LRU -> gated out-proj.
+    x (B,T,D) -> (B,T,D); state = (conv_tail, h_last) for decode."""
+    b, t, d = x.shape
+    w = cfg.lru_width or d
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    y = x @ p["w_in"]                                   # (B,T,W)
+    # depthwise causal conv, width cw
+    cw = cfg.conv_width
+    tail = state[0] if state is not None else jnp.zeros((b, cw - 1, w), x.dtype)
+    ypad = jnp.concatenate([tail, y], axis=1)
+    kernel = p["conv_w"].astype(F32)                    # (cw, W)
+    yc = sum(ypad[:, i:i + t].astype(F32) * kernel[i][None, None]
+             for i in range(cw)).astype(x.dtype) + p["conv_b"].astype(x.dtype)
+    # RG-LRU gates
+    rg = jax.nn.sigmoid(yc.astype(F32) @ p["w_rg"].astype(F32) + p["b_rg"])
+    ig = jax.nn.sigmoid(yc.astype(F32) @ p["w_ig"].astype(F32) + p["b_ig"])
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lambda"].astype(F32)) * rg
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (ig * yc.astype(F32))
+    h0 = state[1] if state is not None else jnp.zeros((b, w), F32)
+
+    def combine(ca, cb):
+        a1, b1 = ca
+        a2, b2 = cb
+        return a1 * a2, b1 * a2 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = aa * h0[:, None] + bb                           # (B,T,W)
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    new_state = (ypad[:, t:], h[:, -1])
+    return out, new_state

@@ -1,0 +1,158 @@
+"""Partition specs for the (pod, data, model) production mesh.
+
+Scheme (DESIGN.md §6): 2D parameter sharding — FSDP over 'data' on one dim,
+tensor parallelism over 'model' on the other; activations/batch over
+('pod','data'); experts (EP) and vocab over 'model'. The 'pod' axis is pure
+DP (gradient all-reduce crosses DCN once per step, optionally compressed).
+
+Rules are name+shape driven so they apply to every arch in the pool; leaves
+whose dims don't divide the mesh fall back to replication (asserted against
+a whitelist of small params in tests).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# param-name -> (fsdp_dim, tp_dim) for 2D matrices (-1 = none)
+_MATRIX_RULES = {
+    # in-projections (D, out): FSDP on D, TP on out
+    "wq": (0, 1), "wk": (0, 1), "wv": (0, 1), "wg": (0, 1),
+    "xq": (0, 1), "xk": (0, 1), "xv": (0, 1),
+    "w_gate": (0, 1), "w_up": (0, 1), "wk_ch": (0, 1), "wr_ch": (0, 1),
+    "w_in": (0, 1), "w_gate_branch": (0, 1),
+    "wq_a": (0, 1), "wq_b": (0, 1), "wkv_a": (0, 1), "wkv_b": (0, 1),
+    "wr": (0, 1), "w_rg": (0, 1), "w_ig": (0, 1),
+    # out-projections (in, D): TP on in (contraction), FSDP on D
+    "wo": (1, 0), "xo": (1, 0), "w_down": (1, 0), "wv_ch": (1, 0),
+    "w_out": (1, 0),
+    # router (D, E): FSDP on D only
+    "router": (0, -1),
+}
+
+_EXPERT_PARAMS = {"w_gate", "w_up", "w_down"}  # when rank-3: (E, ., .)
+
+
+def spec_for(path: tuple, leaf, mode: str = "2d") -> P:
+    """Leading stacked-layer dims (from vmap/scan) get None.
+
+    mode='2d'   : FSDP over 'data' + TP over 'model' (default).
+    mode='fsdp' : pure FSDP — parameters sharded over BOTH axes on one dim,
+                  no tensor parallelism; batch shards over both axes too.
+                  Collective profile: per-layer weight all-gather instead of
+                  per-layer activation all-reduce (EXPERIMENTS.md §Perf).
+    """
+    name = None
+    in_experts = False
+    for part in path:
+        key = getattr(part, "key", getattr(part, "name", None))
+        if key == "moe":
+            in_experts = True
+        if key == "shared":
+            in_experts = False  # shared experts are plain dense matrices
+        if isinstance(key, str):
+            name = key
+    shape = leaf.shape
+    nd = len(shape)
+
+    if name in ("embed", "head"):
+        if mode == "fsdp":
+            return P(None, ("data", "model")) if leaf.shape[1] % 256 == 0 \
+                else P(None, "model")
+        return P(None, "model")
+    if name is None or nd <= 1:
+        return P(*([None] * nd))
+
+    # stacked rank: matrices may carry 1 (scan) leading dim; experts carry
+    # (scan, E) or (E,) leading dims
+    if name in _MATRIX_RULES:
+        fsdp, tp = _MATRIX_RULES[name]
+        if in_experts and name in _EXPERT_PARAMS:
+            # (..., E, d1, d2): EP over 'model' on E + FSDP over 'data' on
+            # the d_model dim (DeepSeek's 223B of expert weights don't fit
+            # EP-only: 472 GB / 16 = 29.5 GB/chip; 2D -> 1.8 GB/chip).
+            # Unpadded expert counts (E % 16 != 0, §Perf granite-moe
+            # variant) skip EP and shard d_model over the whole pod.
+            lead = nd - 3
+            d_dim = lead + 1 if name in ("w_gate", "w_up") else lead + 2
+            spec = [None] * nd
+            if shape[lead] % 16 == 0:
+                spec[lead] = "model"
+                if shape[d_dim] % 16 == 0:
+                    spec[d_dim] = "data"
+            elif shape[d_dim] % 256 == 0:
+                spec[d_dim] = ("data", "model")
+            elif shape[d_dim] % 16 == 0:
+                spec[d_dim] = "data"
+            return P(*spec)
+        lead = nd - 2
+        spec = [None] * nd
+        if mode == "fsdp":
+            # shard ONE dim over the whole 256-chip pod; no TP
+            for dim in (fsdp, tp):
+                if dim >= 0 and shape[lead + dim] % 256 == 0:
+                    spec[lead + dim] = ("data", "model")
+                    return P(*spec)
+            for dim in (fsdp, tp):
+                if dim >= 0 and shape[lead + dim] % 16 == 0:
+                    spec[lead + dim] = "data"
+                    return P(*spec)
+            return P(*spec)
+        if fsdp >= 0 and shape[lead + fsdp] % 16 == 0:
+            spec[lead + fsdp] = "data"
+        if tp >= 0 and shape[lead + tp] % 16 == 0:
+            spec[lead + tp] = "model"
+        return P(*spec)
+    return P(*([None] * nd))
+
+
+def param_shardings(mesh: Mesh, params_shape, mode: str = "2d") -> object:
+    """pytree of NamedShardings matching `params_shape` (from eval_shape)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [NamedSharding(mesh, spec_for(path, leaf, mode))
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def batch_shardings(mesh: Mesh, batch_shape, mode: str = "2d") -> object:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if mode == "fsdp":
+        axes = axes + ("model",)     # pure-DP: batch over the whole pod
+    n_data = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def leaf_spec(leaf):
+        if leaf.shape and leaf.shape[0] % n_data == 0:
+            return NamedSharding(mesh, P(axes,
+                                         *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(leaf_spec, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, cache_shape) -> object:
+    """KV caches (leaves are (R, B, S|W|H, ...) inside the layer scan):
+    batch dim 1 over ('pod','data'), dim 2 (sequence / window / state-heads)
+    over 'model' — the cache is the decode working set and must spread over
+    the whole pod (a 32k llama3-405b cache is ~2.2 TB). Dims that don't
+    divide the mesh fall back to replication per-dim."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_data = int(np.prod([mesh.shape[a] for a in axes]))
+    n_model = int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+
+    def leaf_spec(leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 2 and leaf.shape[1] % n_data == 0:
+            spec[1] = axes
+        if len(leaf.shape) >= 3 and leaf.shape[2] % n_model == 0:
+            spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(leaf_spec, cache_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

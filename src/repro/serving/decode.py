@@ -1,0 +1,263 @@
+"""serve_step: single-token decode with KV caches / recurrent states.
+
+Cache layouts (per scan group, stacked over repeats — decode scans layers
+with the cache as scan xs/ys so the HLO again holds one unit body):
+
+  gqa global : k/v (R, B, S_max, Hkv, Dh) bf16, positions implicit (<= pos)
+  gqa local  : k/v (R, B, W, Hkv, Dh) ring buffer + kpos (R, B, W) int32
+  MLA        : c_kv (R, B, S, kv_lora) + k_pe (R, B, S, dr)   <- the paper-
+               relevant win: 576 f.p. per token instead of 2*Hkv*Dh
+               (absorbed-matmul decode, DeepSeek-V2 Sec 2.1)
+  rwkv       : prev_tm/prev_ch (R, B, 1, D) + S (R, B, H, dk, dv)
+  rglru      : conv tail (R, B, cw-1, W) + h (R, B, W)
+  xattn      : self cache + precomputed cross k/v
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import lm as M
+from repro.models import recurrent as R
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+
+def _dus(x, u, idx):
+    """dynamic_update_slice with uniformly-int32 indices (x64-safe)."""
+    return jax.lax.dynamic_update_slice(
+        x, u, tuple(jnp.asarray(i, jnp.int32) for i in idx))
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               enc_len: int = 0) -> list:
+    caches = []
+    for grp in cfg.groups:
+        unit_cache = {}
+        for bi, kind in enumerate(grp.unit):
+            unit_cache[f"b{bi}"] = _init_block_cache(
+                kind, cfg, grp.repeats, batch, max_seq, enc_len)
+        caches.append(unit_cache)
+    return caches
+
+
+def _init_block_cache(kind, cfg, r, b, s, enc_len):
+    hkv, dh, d = cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    if kind in ("attn", "moe_attn", "xattn"):
+        c = {"k": jnp.zeros((r, b, s, hkv, dh), BF16),
+             "v": jnp.zeros((r, b, s, hkv, dh), BF16)}
+        if kind == "xattn":
+            c["xk"] = jnp.zeros((r, b, enc_len, hkv, dh), BF16)
+            c["xv"] = jnp.zeros((r, b, enc_len, hkv, dh), BF16)
+        return c
+    if kind in ("attn_local", "rglru_attn"):
+        w = min(cfg.window, s)
+        return {"k": jnp.zeros((r, b, w, hkv, dh), BF16),
+                "v": jnp.zeros((r, b, w, hkv, dh), BF16),
+                "kpos": jnp.full((r, b, w), -1, jnp.int32)}
+    if kind in ("mla", "mla_dense"):
+        return {"ckv": jnp.zeros((r, b, s, cfg.kv_lora), BF16),
+                "kpe": jnp.zeros((r, b, s, cfg.rope_head_dim), BF16)}
+    if kind == "rwkv":
+        h = d // cfg.rwkv_head_dim
+        return {"prev_tm": jnp.zeros((r, b, 1, d), BF16),
+                "prev_ch": jnp.zeros((r, b, 1, d), BF16),
+                "s": jnp.zeros((r, b, h, cfg.rwkv_head_dim,
+                                cfg.rwkv_head_dim), F32)}
+    if kind == "rglru":
+        w = cfg.lru_width or d
+        return {"tail": jnp.zeros((r, b, cfg.conv_width - 1, w), BF16),
+                "h": jnp.zeros((r, b, w), F32)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# single-token attention over a cache
+# ---------------------------------------------------------------------------
+
+def _attend_cache(q, k, v, mask, scale, cap):
+    """q (B,1,H,Dh); k/v (B,S,Hkv,Dh); mask (B,S) -> (B,1,H*Dh)."""
+    b, _, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    s = jnp.einsum("bqhgd,bkhd->bhgqk",
+                   q.astype(F32).reshape(b, 1, hkv, g, dh),
+                   k.astype(F32)) * F32(scale)
+    s = L.softcap(s, cap)
+    s = jnp.where(mask[:, None, None, None, :], s, F32(-1e30))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(F32))
+    return o.reshape(b, 1, h * dh).astype(BF16)
+
+
+def _decode_gqa(p, cache, x, cfg, pos, *, window=None):
+    b = x.shape[0]
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, 1, h, dh)
+    k = (x @ p["wk"]).reshape(b, 1, hkv, dh)
+    v = (x @ p["wv"]).reshape(b, 1, hkv, dh)
+    cos, sin = L.rope_freqs(pos[None], dh, cfg.rope_theta)
+    q = L.apply_rope(q, cos[None], sin[None])
+    k = L.apply_rope(k, cos[None], sin[None])
+    if window is None:
+        s_max = cache["k"].shape[1]        # (B, S, Hkv, Dh) inside the scan
+        kc = _dus(cache["k"], k, (0, pos, 0, 0))
+        vc = _dus(cache["v"], v, (0, pos, 0, 0))
+        mask = (jnp.arange(s_max)[None] <= pos)
+        mask = jnp.broadcast_to(mask, (b, s_max))
+        new_cache = {"k": kc, "v": vc}
+    else:
+        w = cache["k"].shape[1]
+        slot = pos % w
+        kc = _dus(cache["k"], k, (0, slot, 0, 0))
+        vc = _dus(cache["v"], v, (0, slot, 0, 0))
+        kpos = _dus(cache["kpos"],
+                    jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None],
+                                     (b, 1)), (0, slot))
+        mask = (kpos <= pos) & (kpos > pos - window) & (kpos >= 0)
+        new_cache = {"k": kc, "v": vc, "kpos": kpos}
+    o = _attend_cache(q, kc, vc, mask, 1.0 / np.sqrt(dh), cfg.attn_softcap)
+    return o @ p["wo"], new_cache
+
+
+def _decode_mla(p, cache, x, cfg, pos):
+    """Absorbed-matmul MLA decode over the compressed cache."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    cq = L.rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(b, 1, h, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    cos, sin = L.rope_freqs(pos[None], dr, cfg.rope_theta)
+    q_pe = L.apply_rope(q_pe, cos[None], sin[None])
+    ckv_full = x @ p["wkv_a"]
+    ckv = L.rms_norm(ckv_full[..., :cfg.kv_lora], p["kv_norm"], cfg.norm_eps)
+    kpe = ckv_full[..., cfg.kv_lora:].reshape(b, 1, dr)
+    kpe = L.apply_rope(kpe[:, :, None], cos[None], sin[None])[:, :, 0]
+    s_max = cache["ckv"].shape[1]
+    ckv_c = _dus(cache["ckv"], ckv.reshape(b, 1, -1), (0, pos, 0))
+    kpe_c = _dus(cache["kpe"], kpe.reshape(b, 1, -1), (0, pos, 0))
+    wkv_b = p["wkv_b"].reshape(cfg.kv_lora, h, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    q_eff = jnp.einsum("bhd,khd->bhk", q_nope[:, 0].astype(F32),
+                       w_uk.astype(F32))                       # (B,H,kv_lora)
+    scores = jnp.einsum("bhk,bsk->bhs", q_eff, ckv_c.astype(F32)) \
+        + jnp.einsum("bhr,bsr->bhs", q_pe[:, 0].astype(F32),
+                     kpe_c.astype(F32))
+    scores = scores / F32(np.sqrt(dn + dr))
+    mask = (jnp.arange(s_max)[None, None] <= pos)
+    probs = jax.nn.softmax(jnp.where(mask, scores, F32(-1e30)), -1)
+    ctx_c = jnp.einsum("bhs,bsk->bhk", probs, ckv_c.astype(F32))
+    o = jnp.einsum("bhk,khd->bhd", ctx_c, w_uv.astype(F32))    # (B,H,dv)
+    out = o.reshape(b, 1, h * dv).astype(BF16) @ p["wo"]
+    return out, {"ckv": ckv_c, "kpe": kpe_c}
+
+
+def _decode_rwkv_tm(p, cache_s, prev, x, cfg):
+    """T=1 exact recurrence."""
+    b, _, d = x.shape
+    dh = cfg.rwkv_head_dim
+    h = d // dh
+    xm = x + (prev - x) * p["mix_rkvw"].astype(x.dtype)
+    r = (xm @ p["wr"]).reshape(b, h, dh).astype(F32)
+    k = (xm @ p["wk"]).reshape(b, h, dh).astype(F32)
+    v = (xm @ p["wv"]).reshape(b, h, dh).astype(F32)
+    g = jax.nn.silu(xm @ p["wg"])
+    raw = jnp.clip(p["w_base"].astype(F32)
+                   + (xm.astype(F32) @ p["w_lora_a"]) @ p["w_lora_b"],
+                   -8.0, 0.6931)
+    w = jnp.exp(-jnp.exp(raw)).reshape(b, h, dh)
+    u = p["u_bonus"].reshape(h, dh).astype(F32)
+    y = jnp.einsum("bhk,bhkv->bhv", r, cache_s) \
+        + jnp.einsum("bhk,bhk->bh", r, u[None] * k)[..., None] * v
+    s_new = w[..., None] * cache_s + k[..., None] * v[:, :, None]
+    y = R._group_norm(y[:, None], p["ln_x_scale"], cfg.norm_eps)[:, 0]
+    out = (y.reshape(b, 1, d).astype(x.dtype) * g) @ p["wo"]
+    return out, s_new, x
+
+
+def decode_block(kind, p, cache, x, cfg, pos, enc=None):
+    if kind in ("attn", "moe_attn", "attn_local", "rglru_attn", "xattn"):
+        window = cfg.window if kind in ("attn_local", "rglru_attn") else None
+        a, nc = _decode_gqa(p, cache, M._norm(p, "ln1", x, cfg), cfg, pos,
+                            window=window)
+        if cfg.post_norms:
+            a = M._norm(p, "ln1_post", a, cfg)
+        x = x + a
+        if kind == "xattn":
+            h = M._norm(p, "ln3", x, cfg)
+            b = x.shape[0]
+            hh, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            q = (h @ p["xq"]).reshape(b, 1, hh, dh)
+            mask = jnp.ones((b, cache["xk"].shape[1]), bool)
+            o = _attend_cache(q, cache["xk"], cache["xv"], mask,
+                              1.0 / np.sqrt(dh), None)
+            x = x + o @ p["xo"]
+            nc = {**nc, "xk": cache["xk"], "xv": cache["xv"]}
+        h = M._norm(p, "ln2", x, cfg)
+        m = L.moe_mlp(p["moe"], h, cfg) if kind == "moe_attn" \
+            else L.glu_mlp(p, h, cfg.act)
+        if cfg.post_norms:
+            m = M._norm(p, "ln2_post", m, cfg)
+        return x + m, nc
+    if kind in ("mla", "mla_dense"):
+        a, nc = _decode_mla(p, cache, M._norm(p, "ln1", x, cfg), cfg, pos)
+        x = x + a
+        h = M._norm(p, "ln2", x, cfg)
+        m = L.moe_mlp(p["moe"], h, cfg) if kind == "mla" \
+            else L.glu_mlp(p, h, cfg.act)
+        return x + m, nc
+    if kind == "rwkv":
+        h = M._norm(p, "ln1", x, cfg)
+        tm, s_new, prev_tm = _decode_rwkv_tm(p, cache["s"], cache["prev_tm"],
+                                             h, cfg)
+        x = x + tm
+        h2 = M._norm(p, "ln2", x, cfg)
+        cm, prev_ch = R.rwkv_channel_mix(p, h2, cfg, prev=cache["prev_ch"])
+        return x + cm, {"s": s_new, "prev_tm": prev_tm, "prev_ch": prev_ch}
+    if kind == "rglru":
+        h = M._norm(p, "ln1", x, cfg)
+        rec, (tail, hstate) = R.rg_lru(p, h, cfg,
+                                       state=(cache["tail"], cache["h"]))
+        x = x + rec
+        return x + L.glu_mlp(p, M._norm(p, "ln2", x, cfg), cfg.act), \
+            {"tail": tail, "h": hstate}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# serve_step: one new token for the whole stack
+# ---------------------------------------------------------------------------
+
+def serve_step(params, cfg: ModelConfig, cache: list, token: jnp.ndarray,
+               pos: jnp.ndarray):
+    """token (B,1) int32, pos () int32 -> (logits (B, Vp), new_cache)."""
+    x = M.embed_tokens(params, token, cfg)
+
+    new_cache = []
+    for grp, gp, gc in zip(cfg.groups, params["groups"], cache):
+        def unit(h, xs, _grp=grp):
+            up, uc = xs
+            ncs = {}
+            for bi, kind in enumerate(_grp.unit):
+                h, ncs[f"b{bi}"] = decode_block(kind, up[f"b{bi}"],
+                                                uc[f"b{bi}"], h, cfg, pos)
+            return M._pin_batch(h, cfg), ncs
+        x, nc = jax.lax.scan(unit, x, (gp, gc),
+                             unroll=grp.repeats if cfg.scan_unroll else 1)
+        new_cache.append(nc)
+    h = M._norm(params, "final_norm", x, cfg)
+    logits = (h[:, 0].astype(BF16) @ params["head"]).astype(F32)
+    logits = L.softcap(logits, cfg.final_softcap)
+    return logits, new_cache

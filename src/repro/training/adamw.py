@@ -1,0 +1,68 @@
+"""AdamW with configurable moment precision.
+
+Moments inherit the parameter sharding (ZeRO-style: optimizer state is as
+sharded as the params). `moment_dtype=bf16` halves optimizer HBM — the knob
+that lets llama3-405b train on a single 256-chip v5e pod (DESIGN.md §6):
+bf16 keeps f32's exponent range, and Adam's rsqrt normalization makes the
+mantissa loss benign (validated in tests against f32 moments).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32   # jnp.bfloat16 for >=100B params
+    warmup_steps: int = 100
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    return cfg.lr * warm
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    lr = _schedule(step.astype(jnp.float32), cfg)
+    b1, b2 = jnp.float32(cfg.b1), jnp.float32(cfg.b2)
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, mf.astype(cfg.moment_dtype), vf.astype(cfg.moment_dtype)
+
+    flat_p, td = jax.tree.flatten(params)
+    flat_g = td.flatten_up_to(grads)
+    flat_m = td.flatten_up_to(state["m"])
+    flat_v = td.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = td.unflatten([o[0] for o in out])
+    new_m = td.unflatten([o[1] for o in out])
+    new_v = td.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

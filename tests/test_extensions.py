@@ -1,0 +1,149 @@
+"""Tests for the beyond-deliverable extensions: serving driver, secure
+normalization, and the KS-adder kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import protocol as P
+from repro.core import ring
+from repro.core.normalize import (normalize_horizontal, normalize_local,
+                                  secure_minmax)
+from repro.core.sharing import rec_real
+
+
+# ---------------------------------------------------------------------------
+# serving driver
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["granite-34b", "rwkv6-1.6b",
+                                  "deepseek-v2-236b"])
+def test_serve_driver(arch):
+    from repro.launch.serve import serve
+    out = serve(arch, reduced=True, batch=2, prompt_len=8, gen=6,
+                verbose=False)
+    assert out["finite"]
+    assert out["tokens"].shape == (2, 6)
+    # greedy decode of a fixed model+prompt is deterministic
+    out2 = serve(arch, reduced=True, batch=2, prompt_len=8, gen=6,
+                 verbose=False)
+    np.testing.assert_array_equal(out["tokens"], out2["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# secure joint normalization
+# ---------------------------------------------------------------------------
+
+def test_normalize_local_bounds():
+    rng = np.random.default_rng(0)
+    x = rng.normal(3, 17, (50, 4))
+    z = normalize_local(x)
+    assert z.min() >= 0 and z.max() <= 1 + 1e-9
+
+
+def test_secure_minmax_matches_plain():
+    rng = np.random.default_rng(1)
+    xa, xb = rng.normal(0, 5, (40, 6)), rng.normal(2, 3, (25, 6))
+    ctx = P.make_ctx(0)
+    g_min, g_max = secure_minmax(ctx, xa, xb, rng)
+    full = np.vstack([xa, xb])
+    np.testing.assert_allclose(np.asarray(rec_real(g_min)), full.min(0),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(rec_real(g_max)), full.max(0),
+                               atol=1e-4)
+
+
+def test_normalize_horizontal_end_to_end():
+    rng = np.random.default_rng(2)
+    xa, xb = rng.normal(0, 5, (30, 3)), rng.normal(1, 9, (20, 3))
+    ctx = P.make_ctx(1)
+    za, zb = normalize_horizontal(ctx, xa, xb, rng)
+    z = np.vstack([za, zb])
+    assert z.min() >= -1e-3 and z.max() <= 1 + 1e-3
+    ref = normalize_local(np.vstack([xa, xb]))
+    np.testing.assert_allclose(z, ref, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# KS-adder kernel == protocol.msb_carry local pieces
+# ---------------------------------------------------------------------------
+
+def test_ks_carry_kernel_matches_protocol():
+    """Drive the real protocol to capture each level's exchanged masks and
+    triples, then verify the fused kernel reproduces both parties' final
+    carry shares (and hence the exact MSB)."""
+    from repro.core.sharing import BShare, share
+    from repro.core.triples import TrustedDealer
+    from repro.kernels.ksadder import ks_carry_share, LEVELS
+
+    rng = np.random.default_rng(3)
+    n, m = 16, 128
+    vals = rng.integers(-(2 ** 40), 2 ** 40, (n, m))
+    sh = share(vals.astype(np.int64).astype(np.uint64), rng)
+
+    # reference: run msb_carry while recording the per-level Beaver state
+    rec_state = {"e": [], "f": [], "u0": [], "v0": [], "z0": [],
+                 "u1": [], "v1": [], "z1": []}
+
+    class RecordingCtx(P.Ctx):
+        def send(self, nbytes, rounds=1):
+            pass
+
+    dealer = TrustedDealer(seed=9)
+    ctx = RecordingCtx(dealer=dealer, log=__import__(
+        "repro.core.channel", fromlist=["CommLog"]).CommLog())
+
+    orig_band = P.band
+
+    def band_spy(c, x, y):
+        shape = jnp.broadcast_shapes(x.shape, y.shape)
+        t = dealer.bin_triple(shape)
+        xb = BShare(jnp.broadcast_to(x.b0, shape),
+                    jnp.broadcast_to(x.b1, shape))
+        yb = BShare(jnp.broadcast_to(y.b0, shape),
+                    jnp.broadcast_to(y.b1, shape))
+        e = (xb.b0 ^ t.u.b0) ^ (xb.b1 ^ t.u.b1)
+        f = (yb.b0 ^ t.v.b0) ^ (yb.b1 ^ t.v.b1)
+        rec_state["e"].append(e)
+        rec_state["f"].append(f)
+        for nm, val in (("u0", t.u.b0), ("v0", t.v.b0), ("z0", t.z.b0),
+                        ("u1", t.u.b1), ("v1", t.v.b1), ("z1", t.z.b1)):
+            rec_state[nm].append(val)
+        z0 = t.z.b0 ^ (t.u.b0 & f) ^ (e & (t.v.b0 ^ f))
+        z1 = t.z.b1 ^ (t.u.b1 & f) ^ (e & t.v.b1)
+        return BShare(z0, z1)
+
+    P.band = band_spy
+    try:
+        want_bit = P.msb_carry(ctx, sh)
+    finally:
+        P.band = orig_band
+
+    # kernel replay: level 0 (initial g) + 6 stacked levels
+    def grab(idx):
+        return {k: rec_state[k][idx] for k in rec_state}
+
+    lvl = [grab(i) for i in range(7)]
+    el = jnp.stack([l["e"] for l in lvl[1:]]).reshape(6, 2, n, m)
+    fl = jnp.stack([l["f"] for l in lvl[1:]]).reshape(6, 2, n, m)
+    carries = {}
+    for party0, (us, vs, zs, xw) in {
+            True: ("u0", "v0", "z0", sh.s0),
+            False: ("u1", "v1", "z1", sh.s1)}.items():
+        ul = jnp.stack([l[us] for l in lvl[1:]]).reshape(6, 2, n, m)
+        vl = jnp.stack([l[vs] for l in lvl[1:]]).reshape(6, 2, n, m)
+        zl = jnp.stack([l[zs] for l in lvl[1:]]).reshape(6, 2, n, m)
+        carries[party0] = ks_carry_share(
+            xw ^ jnp.zeros_like(xw), lvl[0]["e"], lvl[0]["f"],
+            lvl[0][us], lvl[0][vs], lvl[0][zs], el, fl, ul, vl, zl,
+            party0=party0)
+    g = np.asarray(carries[True] ^ carries[False], np.uint64)
+    # msb = p_orig[63] ^ G[62]  (protocol.msb_carry's final extraction)
+    p_orig = np.asarray(sh.s0 ^ sh.s1, np.uint64)
+    msb = ((p_orig >> 63) & 1) ^ ((g >> 62) & 1)
+    np.testing.assert_array_equal(msb.astype(np.int64),
+                                  (vals < 0).astype(np.int64))
+    # and it agrees with the protocol's own output
+    from repro.core.sharing import rec_b
+    np.testing.assert_array_equal(np.asarray(rec_b(want_bit), np.uint64),
+                                  msb)
