@@ -1,49 +1,101 @@
-"""Microbenchmarks of the Pallas kernels (interpret mode on CPU — relative
-structure only; the roofline story for TPU lives in launch/roofline.py) and
-of the secure primitives' throughput."""
+"""Per-op xla-vs-pallas microbenchmarks of the ring-compute backend layer.
+
+Each row times the SAME op through both backends (core/backend.py), so the
+speedup column is measured, not asserted. On CPU the pallas kernels run in
+interpret mode — expect them to LOSE there; the point of recording the pair
+is the trajectory: the same harness on a TPU shows the real kernel wins
+(roofline story in launch/roofline.py). Results land in
+benchmarks/BENCH_kernels.json for the perf history.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.core.backend import KS_LEVELS, PallasBackend, XlaBackend
+from repro.core.sparse import CSRMatrix
+from repro.kernels import ops, ref
+from repro.kernels.spmm import csr_to_ell
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
 
 
-def _time(fn, *args, reps=3):
-    fn(*args).block_until_ready()
+def _time_us(fn, *args, reps=3):
+    out = fn(*args)
+    jnp.asarray(out).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / reps * 1e6  # us
+    jnp.asarray(out).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run():
+def _row(op, shape, xla_us, pallas_us):
+    return {"op": op, "shape": shape, "xla_us": round(xla_us, 0),
+            "pallas_us": round(pallas_us, 0),
+            "speedup_x": round(xla_us / max(pallas_us, 1e-9), 3)}
+
+
+def run(quick: bool = False):
     rng = np.random.default_rng(0)
+    xla, pal = XlaBackend(), PallasBackend()
     rows = []
-    n, d, k = 1024, 512, 128
-    a64 = jnp.asarray(rng.integers(0, 1 << 64, (n, d), dtype=np.uint64))
-    b64 = jnp.asarray(rng.integers(0, 1 << 64, (d, k), dtype=np.uint64))
-    rows.append({"kernel": "ring_matmul_u64", "shape": f"{n}x{d}x{k}",
-                 "us_per_call": round(_time(ops.ring_matmul, a64, b64), 0)})
-    x = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
-    mu = jnp.asarray(rng.normal(0, 1, (k, d)), jnp.float32)
-    rows.append({"kernel": "fused_esd", "shape": f"{n}x{d}x{k}",
-                 "us_per_call": round(_time(ops.esd, x, mu), 0)})
-    dmat = jnp.asarray(rng.normal(0, 1, (n, k)), jnp.float32)
-    rows.append({"kernel": "argmin_onehot", "shape": f"{n}x{k}",
-                 "us_per_call": round(_time(ops.argmin_onehot, dmat), 0)})
-    xs = np.asarray(rng.normal(0, 1, (256, 2048)) *
-                    (rng.random((256, 2048)) > 0.9), np.float32)
-    y = jnp.asarray(rng.normal(0, 1, (2048, 8)), jnp.float32)
-    t0 = time.perf_counter()
-    ops.spmm_from_dense(xs, y).block_until_ready()
-    rows.append({"kernel": "spmm_ell(0.9 sparse)", "shape": "256x2048x8",
-                 "us_per_call": round((time.perf_counter() - t0) * 1e6, 0)})
+
+    # ---- ring_mm: the Beaver-recombination hot op -----------------------
+    n, d, k = (256, 256, 128) if quick else (1024, 512, 128)
+    a = jnp.asarray(rng.integers(0, 1 << 64, (n, d), dtype=np.uint64))
+    b = jnp.asarray(rng.integers(0, 1 << 64, (d, k), dtype=np.uint64))
+    rows.append(_row("ring_mm_u64", f"{n}x{d}x{k}",
+                     _time_us(xla.ring_mm, a, b),
+                     _time_us(pal.ring_mm, a, b)))
+
+    # ---- ring_spmm: Protocol-2 step-2 local compute ---------------------
+    # ELL pack happens ONCE outside the timed region (it is offline layout
+    # work), so the columns compare kernel vs kernel, not pack+kernel.
+    ns, ds, ks = (128, 1024, 8) if quick else (256, 2048, 8)
+    xs = rng.integers(0, 1 << 64, (ns, ds), dtype=np.uint64) \
+        * (rng.random((ns, ds)) > 0.9)
+    csr = CSRMatrix.from_dense(xs.astype(np.uint64))
+    y = rng.integers(0, 1 << 64, (ds, ks), dtype=np.uint64)
+    blocks, idx, counts = csr_to_ell(csr.indptr, csr.indices, csr.data,
+                                     csr.shape)
+    ell = (jnp.asarray(blocks), jnp.asarray(idx), jnp.asarray(counts),
+           jnp.asarray(y))
+    rows.append(_row("ring_spmm_u64(0.9 sparse)", f"{ns}x{ds}x{ks}",
+                     _time_us(xla.ring_spmm, *ell),
+                     _time_us(pal.ring_spmm, *ell)))
+
+    # ---- ks_fused: the CMP adder's local recombination ------------------
+    nm = (64, 128) if quick else (256, 128)
+    flat = [jnp.asarray(rng.integers(0, 1 << 64, nm, dtype=np.uint64))
+            for _ in range(6)]
+    lvls = [jnp.asarray(rng.integers(0, 1 << 64, (len(KS_LEVELS), 2) + nm,
+                                     dtype=np.uint64)) for _ in range(5)]
+    rows.append(_row("ks_fused", f"{nm[0]}x{nm[1]}",
+                     _time_us(lambda: xla.ks_fused(*flat, *lvls, party0=True)),
+                     _time_us(lambda: pal.ks_fused(*flat, *lvls, party0=True))))
+
+    # ---- plaintext kernels (oracle vs pallas) ---------------------------
+    ne, de, ke = (256, 256, 64) if quick else (1024, 512, 128)
+    x = jnp.asarray(rng.normal(0, 1, (ne, de)), jnp.float32)
+    mu = jnp.asarray(rng.normal(0, 1, (ke, de)), jnp.float32)
+    rows.append(_row("fused_esd", f"{ne}x{de}x{ke}",
+                     _time_us(ref.esd, x, mu), _time_us(ops.esd, x, mu)))
+    dmat = jnp.asarray(rng.normal(0, 1, (ne, ke)), jnp.float32)
+    rows.append(_row("argmin_onehot", f"{ne}x{ke}",
+                     _time_us(ref.argmin_onehot, dmat),
+                     _time_us(ops.argmin_onehot, dmat)))
+
+    with open(BENCH_PATH, "w") as f:
+        json.dump({"rows": rows, "note": "CPU interpret mode unless a TPU "
+                   "is attached; see benchmarks/kernel_bench.py"}, f, indent=1)
     return rows
 
 
 def derived(rows):
-    return rows[0]["us_per_call"]
+    """Headline: ring_mm xla/pallas speedup (>1 means pallas wins)."""
+    return rows[0]["speedup_x"]

@@ -31,7 +31,9 @@ def main() -> None:
         "fig4a_sparse_dim": lambda: fig4_sparse.run_a(quick=args.quick),
         "fig4b_sparse_degree": fig4_sparse.run_b,
         "q5_fraud_jaccard": lambda: q5_fraud.run(quick=args.quick),
-        "kernels_interpret": kernel_bench.run,
+        # `--only kernels_interpret --quick` is the CI smoke entry: per-op
+        # xla-vs-pallas timings, persisted to benchmarks/BENCH_kernels.json
+        "kernels_interpret": lambda: kernel_bench.run(quick=args.quick),
     }
     derived_fns = {
         "table1_2_runtime_comm": table1_2.derived,

@@ -53,6 +53,14 @@ class KMeansConfig:
     init: Literal["random_data", "random_uniform"] = "random_data"
     tol: float | None = None        # if set, F_CSC early-stops
     he_backend: object | None = None  # default: SimulatedPHE()
+    backend: str = "auto"           # ring-compute backend (core/backend.py)
+
+    def __post_init__(self):
+        if self.iters < 1:
+            raise ValueError(
+                f"KMeansConfig.iters must be >= 1, got {self.iters}: the "
+                "secure Lloyd loop must run at least once to produce an "
+                "assignment")
 
 
 @dataclasses.dataclass
@@ -96,7 +104,7 @@ class SecureKMeans:
     def fit(self, x_a: np.ndarray, x_b: np.ndarray) -> KMeansResult:
         cfg = self.cfg
         rng = np.random.default_rng(cfg.seed)
-        ctx = P.make_ctx(cfg.seed)
+        ctx = P.make_ctx(cfg.seed, backend=cfg.backend)
         ctx.vectorized = cfg.vectorized
         x_a = np.asarray(x_a, np.float64)
         x_b = np.asarray(x_b, np.float64)
@@ -188,12 +196,13 @@ class SecureKMeans:
     def _x_mut(self, ctx, enc_a, enc_b, csr_a, csr_b, mu: AShare) -> AShare:
         """X @ mu^T as shares, splitting local vs joint blocks (Eq. 4/5)."""
         cfg = self.cfg
+        mm = ctx.backend.ring_mm
         if cfg.partition == "vertical":
             da = enc_a.shape[1]
             mut = AShare(mu.s0.T, mu.s1.T)                    # (d, k)
             # local: A's data x A's share slice; B's data x B's share slice
-            loc_a = jnp.matmul(jnp.asarray(enc_a), mut.s0[:da])
-            loc_b = jnp.matmul(jnp.asarray(enc_b), mut.s1[da:])
+            loc_a = mm(jnp.asarray(enc_a), mut.s0[:da])
+            loc_b = mm(jnp.asarray(enc_b), mut.s1[da:])
             # joint: A's data x B's share slice (and vice versa)
             j1 = self._pub_times_share(ctx, enc_a, csr_a,
                                        AShare(jnp.zeros_like(mut.s1[:da]),
@@ -205,8 +214,8 @@ class SecureKMeans:
             return AShare(loc_a + j1.s0 + j2.s0, loc_b + j1.s1 + j2.s1)
         # horizontal: rows split; each party's rows hit BOTH mu shares
         mut = AShare(mu.s0.T, mu.s1.T)
-        loc_a = jnp.matmul(jnp.asarray(enc_a), mut.s0)        # A x own share
-        loc_b = jnp.matmul(jnp.asarray(enc_b), mut.s1)
+        loc_a = mm(jnp.asarray(enc_a), mut.s0)                # A x own share
+        loc_b = mm(jnp.asarray(enc_b), mut.s1)
         j_a = self._pub_times_share(ctx, enc_a, csr_a,
                                     AShare(jnp.zeros_like(mut.s1), mut.s1),
                                     owner="A")                 # A x B's share
@@ -291,9 +300,10 @@ class SecureKMeans:
         party's requires a joint product (Beaver dense / Protocol 2 sparse,
         via the transpose identity <C>_other^T X = (X^T <C>_other)^T)."""
         cfg = self.cfg
+        mm = ctx.backend.ring_mm
         x = jnp.asarray(enc)
         if owner == "A":
-            local = jnp.matmul(ct.s0, x)                       # A local
+            local = mm(ct.s0, x)                               # A local
             if cfg.sparse:
                 xt = CSRMatrix.from_dense(np.asarray(x).T)
                 z = secure_sparse_matmul(ctx, xt, np.asarray(ct.s1.T),
@@ -305,7 +315,7 @@ class SecureKMeans:
                 if not cfg.vectorized:
                     _naive_extra_rounds(ctx, ct.shape[0] * x.shape[1])
             return AShare(local + joint.s0, joint.s1)
-        local = jnp.matmul(ct.s1, x)                           # B local
+        local = mm(ct.s1, x)                                   # B local
         if cfg.sparse:
             xt = CSRMatrix.from_dense(np.asarray(x).T)
             z = secure_sparse_matmul(ctx, xt, np.asarray(ct.s0.T), self.he,

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ring
+from repro.core.backend import KS_LEVELS, RingBackend, get_backend
 from repro.core.channel import CommLog
 from repro.core.sharing import AShare, BShare
 from repro.core.triples import TrustedDealer
@@ -38,14 +39,19 @@ class Ctx:
     dealer: TrustedDealer
     log: CommLog
     tag: str = "misc"  # current Lloyd step: S1 / S2 / S3
+    backend: RingBackend | str | None = None  # local ring-compute dispatch
+
+    def __post_init__(self):
+        self.backend = get_backend(self.backend)
 
     def send(self, nbytes: int, rounds: int = 1) -> None:
         self.log.send(nbytes, tag=self.tag, phase="online", rounds=rounds)
 
 
-def make_ctx(seed: int = 0) -> Ctx:
+def make_ctx(seed: int = 0, backend: RingBackend | str | None = None) -> Ctx:
     log = CommLog()
-    return Ctx(dealer=TrustedDealer(seed=seed, log=log), log=log)
+    return Ctx(dealer=TrustedDealer(seed=seed, log=log), log=log,
+               backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -85,20 +91,22 @@ def neg(a: AShare) -> AShare:
     return AShare(ring.neg(a.s0), ring.neg(a.s1))
 
 
-def matmul_pub_l(x_pub, a: AShare) -> AShare:
+def matmul_pub_l(x_pub, a: AShare, backend: RingBackend | None = None) -> AShare:
     """Public X @ shared A — local at the party that owns X."""
     x_pub = jnp.asarray(x_pub, ring.DTYPE)
-    return AShare(_ring_mm(x_pub, a.s0), _ring_mm(x_pub, a.s1))
+    return AShare(_ring_mm(x_pub, a.s0, backend),
+                  _ring_mm(x_pub, a.s1, backend))
 
 
-def matmul_pub_r(a: AShare, y_pub) -> AShare:
+def matmul_pub_r(a: AShare, y_pub, backend: RingBackend | None = None) -> AShare:
     y_pub = jnp.asarray(y_pub, ring.DTYPE)
-    return AShare(_ring_mm(a.s0, y_pub), _ring_mm(a.s1, y_pub))
+    return AShare(_ring_mm(a.s0, y_pub, backend),
+                  _ring_mm(a.s1, y_pub, backend))
 
 
-def _ring_mm(a, b):
-    """uint64 matmul mod 2^64 (jnp dot on uint64 wraps)."""
-    return jnp.matmul(a, b)
+def _ring_mm(a, b, backend: RingBackend | None = None):
+    """uint64 matmul mod 2^64, dispatched through the ring backend."""
+    return get_backend(backend).ring_mm(a, b)
 
 
 # ---------------------------------------------------------------------------
@@ -148,13 +156,13 @@ def smatmul(ctx: Ctx, a: AShare, b: AShare, *, trunc_f: int | None = None) -> AS
     e = (a.s0 - t.u.s0) + (a.s1 - t.u.s1)
     f = (b.s0 - t.v.s0) + (b.s1 - t.v.s1)
     ctx.send(2 * (ring.nbytes((n, d)) + ring.nbytes((d, k))), rounds=1)
+    mm = ctx.backend.ring_mm
     # AB = UV + U F + E V + E F
     if FUSE_BEAVER:  # P0: E@(V0 + F) fuses the public E@F term (see flag)
-        z0 = t.z.s0 + _ring_mm(t.u.s0, f) + _ring_mm(e, t.v.s0 + f)
+        z0 = t.z.s0 + mm(t.u.s0, f) + mm(e, t.v.s0 + f)
     else:
-        z0 = t.z.s0 + _ring_mm(t.u.s0, f) + _ring_mm(e, t.v.s0) \
-            + _ring_mm(e, f)
-    z1 = t.z.s1 + _ring_mm(t.u.s1, f) + _ring_mm(e, t.v.s1)
+        z0 = t.z.s0 + mm(t.u.s0, f) + mm(e, t.v.s0) + mm(e, f)
+    z1 = t.z.s1 + mm(t.u.s1, f) + mm(e, t.v.s1)
     out = AShare(z0, z1)
     return trunc(out, trunc_f) if trunc_f else out
 
@@ -190,10 +198,6 @@ def band(ctx: Ctx, x: BShare, y: BShare) -> BShare:
     return BShare(z0, z1)
 
 
-def _bshift_l(x: BShare, s: int) -> BShare:
-    return BShare(x.b0 << s, x.b1 << s)
-
-
 def msb_carry(ctx: Ctx, a: AShare) -> BShare:
     """B-share of MSB(a.s0 + a.s1 mod 2^64) via Kogge-Stone carry network.
 
@@ -201,25 +205,52 @@ def msb_carry(ctx: Ctx, a: AShare) -> BShare:
     adder: X = (s0, 0), Y = (0, s1) as B-shares. log2(64)=6 AND rounds; the
     two ANDs per level (G and P updates) are batched into ONE round by
     stacking, so the whole MSB costs 7 rounds (1 initial + 6 levels).
+
+    The per-level Beaver *recombination* is deferred: the exchange rounds
+    only produce the public masked operands (E_l, F_l), and each party's
+    share of the final carry word is ONE fused ``backend.ks_fused`` call over
+    all 7 AND levels (kernels/ksadder on the pallas backend) instead of 12
+    separate elementwise passes over the comparison tensor.
     """
-    x = BShare(a.s0, jnp.zeros_like(a.s0))
-    y = BShare(jnp.zeros_like(a.s1), a.s1)
-    g = band(ctx, x, y)                     # generate
-    p = bxor(x, y)                          # propagate (free)
-    p_orig = p
-    for s in (1, 2, 4, 8, 16, 32):
-        # one batched AND round: [p & (g<<s), p & (p<<s)]
-        lhs = BShare(jnp.stack([p.b0, p.b0]), jnp.stack([p.b1, p.b1]))
-        rhs_g, rhs_p = _bshift_l(g, s), _bshift_l(p, s)
-        rhs = BShare(jnp.stack([rhs_g.b0, rhs_p.b0]), jnp.stack([rhs_g.b1, rhs_p.b1]))
-        both = band(ctx, lhs, rhs)
-        g = bxor(g, BShare(both.b0[0], both.b1[0]))  # g | (p & g<<s); disjoint => xor
-        p = BShare(both.b0[1], both.b1[1])
+    shape = tuple(a.shape)
+    s0 = jnp.asarray(a.s0, ring.DTYPE)
+    s1 = jnp.asarray(a.s1, ring.DTYPE)
+    # Same triple shapes / draw order / traffic as the sequential band()
+    # formulation, so offline accounting and ListDealer replay are unchanged.
+    t0 = ctx.dealer.bin_triple(shape, tag=ctx.tag)
+    ctx.send(2 * 2 * ring.nbytes(shape), rounds=1)        # exchange E0, F0
+    lvl_shape = (2,) + shape
+    lvl = []
+    for _ in KS_LEVELS:
+        lvl.append(ctx.dealer.bin_triple(lvl_shape, tag=ctx.tag))
+        ctx.send(2 * 2 * ring.nbytes(lvl_shape), rounds=1)
+    # Public masked operands per level. E_l/F_l reconstruct to
+    # plaintext(lhs/rhs) ^ plaintext(triple) — exactly what band() computes
+    # by combining both parties' messages — so the (g, p) evolution below is
+    # the public transcript of the exchange rounds, not a security shortcut.
+    e0 = s0 ^ (t0.u.b0 ^ t0.u.b1)
+    f0 = s1 ^ (t0.v.b0 ^ t0.v.b1)
+    g, p = s0 & s1, s0 ^ s1
+    els, fls = [], []
+    for li, s in enumerate(KS_LEVELS):
+        t = lvl[li]
+        els.append(jnp.stack([p, p]) ^ (t.u.b0 ^ t.u.b1))
+        fls.append(jnp.stack([g << s, p << s]) ^ (t.v.b0 ^ t.v.b1))
+        g = g ^ (p & (g << s))                 # g | (p & g<<s); disjoint => xor
+        p = p & (p << s)
+    el, fl = jnp.stack(els), jnp.stack(fls)    # (6, 2, *shape)
+    ul = [jnp.stack([t.u.b0 for t in lvl]), jnp.stack([t.u.b1 for t in lvl])]
+    vl = [jnp.stack([t.v.b0 for t in lvl]), jnp.stack([t.v.b1 for t in lvl])]
+    zl = [jnp.stack([t.z.b0 for t in lvl]), jnp.stack([t.z.b1 for t in lvl])]
+    g0 = ctx.backend.ks_fused(s0, e0, f0, t0.u.b0, t0.v.b0, t0.z.b0,
+                              el, fl, ul[0], vl[0], zl[0], party0=True)
+    g1 = ctx.backend.ks_fused(s1, e0, f0, t0.u.b1, t0.v.b1, t0.z.b1,
+                              el, fl, ul[1], vl[1], zl[1], party0=False)
     # sum bit 63 = p_orig[63] ^ carry_in[63];  carry_in[63] = G[62]
-    msb = bxor(BShare((p_orig.b0 >> 63) & jnp.uint64(1),
-                      (p_orig.b1 >> 63) & jnp.uint64(1)),
-               BShare((g.b0 >> 62) & jnp.uint64(1),
-                      (g.b1 >> 62) & jnp.uint64(1)))
+    one = jnp.uint64(1)
+    msb = bxor(BShare((s0 >> 63) & one, (s1 >> 63) & one),
+               BShare((jnp.asarray(g0) >> 62) & one,
+                      (jnp.asarray(g1) >> 62) & one))
     return msb  # single-bit B-share (values in {0,1})
 
 

@@ -105,13 +105,10 @@ def secure_sparse_matmul(ctx: Ctx, x: CSRMatrix, y_share_b: np.ndarray, he,
         slots = max(1, he.plain_bits // slot_bits)
         ctx.send(d * k * he.ct_bytes, rounds=1)                 # B->A [[Y]]
         ctx.send(int(np.ceil(n * k / slots)) * he.ct_bytes, rounds=1)
-        rows = np.repeat(np.arange(n), np.diff(x.indptr))
-        z = np.zeros((n, k), np.uint64)
-        chunk = 1 << 22
-        for lo in range(0, x.nnz, chunk):
-            hi = min(x.nnz, lo + chunk)
-            contrib = x.data[lo:hi, None] * y[x.indices[lo:hi]]  # wraps mod 2^64
-            np.add.at(z, rows[lo:hi], contrib)
+        # step-2 local compute: nnz/block-proportional ring spmm, dispatched
+        # through the ring backend (blocked-ELL kernel on pallas, gather-
+        # scatter on numpy) — wraps mod 2^64 either way
+        z = np.asarray(ctx.backend.ring_spmm_csr(x, y), np.uint64)
         r = np.random.default_rng(ctx.dealer.rng.integers(1 << 62)) \
             .integers(0, 1 << 64, size=(n, k), dtype=np.uint64)
         if time_model is not None:

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ring
+from repro.core.backend import NumpyBackend, RingBackend
 from repro.core.channel import CommLog
 from repro.core.sharing import AShare, BShare, share, share_b
 
@@ -73,9 +74,12 @@ OT_BIN_TRIPLES_PER_SEC = 2.0e7
 class TrustedDealer:
     """Offline-phase provider. Logs modelled OT cost + measured dealer time."""
 
-    def __init__(self, seed: int = 0, log: CommLog | None = None):
+    def __init__(self, seed: int = 0, log: CommLog | None = None,
+                 backend: RingBackend | None = None):
         self.rng = np.random.default_rng(seed)
         self.log = log if log is not None else CommLog()
+        # dealer work is host-side and data-independent: numpy ring algebra
+        self.backend = backend if backend is not None else NumpyBackend()
         self.dealer_seconds = 0.0
         self.modelled_ot_seconds = 0.0
         self.n_matmul = 0
@@ -95,7 +99,7 @@ class TrustedDealer:
         assert d == d2, (shape_a, shape_b)
         u = ring.rand_np(self.rng, (n, d))
         v = ring.rand_np(self.rng, (d, k))
-        z = _np_ring_matmul(u, v)
+        z = self.backend.ring_mm(u, v)
         tr = MatmulTriple(share(u, self.rng), share(v, self.rng), share(z, self.rng))
         self.dealer_seconds += time.perf_counter() - t0
         # A matrix triple is worth n*d*k scalar products under OT generation.
@@ -131,8 +135,3 @@ class TrustedDealer:
         self.modelled_ot_seconds += n_bits / OT_BIN_TRIPLES_PER_SEC
         self.n_bin += 1
         return tr
-
-
-def _np_ring_matmul(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    """uint64 matmul mod 2^64 (numpy unsigned ops wrap, C semantics)."""
-    return np.einsum("ij,jk->ik", a, b, dtype=np.uint64, casting="unsafe")

@@ -61,14 +61,17 @@ def argmin_onehot(d: jnp.ndarray, *, bm: int = 128,
 
 
 def spmm(blocks, idx, counts, y, *, interpret: bool = True) -> jnp.ndarray:
-    """Blocked-ELL sparse x dense. Asserts the dense operand fits VMEM
-    (kernel keeps all of Y resident — DESIGN.md §4)."""
+    """Blocked-ELL sparse x dense (f32 / u32 / u64 ring — dtype of `blocks`
+    dispatches). Asserts the dense operand fits VMEM (kernel keeps all of Y
+    resident — DESIGN.md §4); pads Y's rows to the tile width bk (zero rows
+    are ring-neutral) and its columns to the lane width."""
+    bk = blocks.shape[3]
     d, k = y.shape
-    kp = (-k) % 128
-    itemsize = 4
-    assert d * (k + kp) * itemsize <= VMEM_BUDGET_BYTES, \
+    dp, kp = (-d) % bk, (-k) % 128
+    itemsize = jnp.dtype(y.dtype).itemsize
+    assert (d + dp) * (k + kp) * itemsize <= VMEM_BUDGET_BYTES, \
         f"Y ({d}x{k}) exceeds the VMEM-resident budget; shard k or d first"
-    yp = jnp.pad(y, ((0, 0), (0, kp))) if kp else y
+    yp = jnp.pad(y, ((0, dp), (0, kp))) if dp or kp else y
     out = _spmm.spmm_ell(blocks, idx, counts, yp, interpret=interpret)
     return out[:, :k]
 

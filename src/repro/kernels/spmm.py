@@ -27,20 +27,21 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(idx_ref, cnt_ref, blocks_ref, y_ref, o_ref, *, bk: int,
-            max_blocks: int, ring_u32: bool):
+            max_blocks: int, dtype):
     i = pl.program_id(0)
     bm = blocks_ref.shape[2]
     k = y_ref.shape[1]
-    if ring_u32:
-        acc0 = jnp.zeros((bm, k), jnp.uint32)
-    else:
-        acc0 = jnp.zeros((bm, k), jnp.float32)
+    acc0 = jnp.zeros((bm, k), dtype)
 
     def body(j, acc):
         start = idx_ref[0, j].astype(jnp.int32) * jnp.int32(bk)
         yb = pl.load(y_ref, (pl.ds(start, bk), slice(None)))
         xb = blocks_ref[0, j]
-        if ring_u32:
+        if dtype == jnp.uint64:
+            # native uint64 lanes (interpret/CPU); on a real TPU this tile
+            # matmul extends to the 4-limb cascade of kernels/modmatmul
+            contrib = jnp.matmul(xb, yb)
+        elif dtype == jnp.uint32:
             mask16 = jnp.uint32(0xFFFF)
             x_lo = (xb & mask16).astype(jnp.int32)
             x_hi = (xb >> 16).astype(jnp.int32)
@@ -65,13 +66,15 @@ def _kernel(idx_ref, cnt_ref, blocks_ref, y_ref, o_ref, *, bk: int,
 def spmm_ell(blocks: jnp.ndarray, idx: jnp.ndarray, counts: jnp.ndarray,
              y: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
     """blocks (nrb, maxb, bm, bk), idx (nrb, maxb) i32, counts (nrb,) i32,
-    y (d, k) -> (nrb*bm, k)."""
+    y (d, k) -> (nrb*bm, k). dtype of `blocks` selects f32 / u32 / u64."""
     nrb, maxb, bm, bk = blocks.shape
     d, k = y.shape
-    ring_u32 = blocks.dtype == jnp.uint32
-    out_dtype = jnp.uint32 if ring_u32 else jnp.float32
+    if blocks.dtype in (jnp.uint32, jnp.uint64):
+        out_dtype = blocks.dtype
+    else:
+        out_dtype = jnp.float32
     return pl.pallas_call(
-        functools.partial(_kernel, bk=bk, max_blocks=maxb, ring_u32=ring_u32),
+        functools.partial(_kernel, bk=bk, max_blocks=maxb, dtype=out_dtype),
         grid=(nrb,),
         in_specs=[
             pl.BlockSpec((1, maxb), lambda i: (i, 0)),          # idx
@@ -106,4 +109,36 @@ def dense_to_ell(x: np.ndarray, bm: int = 8, bk: int = 128):
         cols = np.flatnonzero(nonempty[i])
         blocks[i, :len(cols)] = tiles[i, cols]
         idx[i, :len(cols)] = cols
+    return blocks, idx, counts
+
+
+def csr_to_ell(indptr, indices, data, shape, bm: int = 8, bk: int = 128):
+    """CSR -> blocked-ELL without densifying: memory stays proportional to
+    the number of non-empty (bm x bk) tiles, never to n*d. Fully vectorized
+    (one sort over nnz), so the offline pack keeps up with large inputs."""
+    n, d = shape
+    indptr = np.asarray(indptr, np.int64)
+    indices = np.asarray(indices, np.int64)
+    data = np.asarray(data)
+    nrb = -(-n // bm)
+    ncb = -(-d // bk)
+    nnz = len(data)
+    if nnz == 0:
+        return (np.zeros((nrb, 1, bm, bk), data.dtype),
+                np.zeros((nrb, 1), np.int32), np.zeros((nrb,), np.int32))
+    rows = np.repeat(np.arange(n), np.diff(indptr))
+    rb, cb = rows // bm, indices // bk
+    tile_id = rb * ncb + cb
+    uniq, inv = np.unique(tile_id, return_inverse=True)
+    counts = np.bincount(uniq // ncb, minlength=nrb).astype(np.int32)
+    maxb = max(1, int(counts.max()))
+    # slot of each unique tile within its row block (uniq is sorted, so
+    # tiles of one row block are contiguous)
+    starts = np.zeros(nrb, np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    slot_of_uniq = np.arange(len(uniq)) - starts[uniq // ncb]
+    blocks = np.zeros((nrb, maxb, bm, bk), data.dtype)
+    idx = np.zeros((nrb, maxb), np.int32)
+    idx[uniq // ncb, slot_of_uniq] = (uniq % ncb).astype(np.int32)
+    blocks[rb, slot_of_uniq[inv], rows % bm, indices % bk] = data
     return blocks, idx, counts

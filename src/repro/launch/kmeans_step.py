@@ -93,7 +93,8 @@ class ListDealer:
 
 
 def _iteration(xa_enc, xb_enc, mu: AShare, dealer, n: int, k: int,
-               d_a: int, he_results: tuple | None = None) -> AShare:
+               d_a: int, he_results: tuple | None = None,
+               backend=None) -> AShare:
     """One vertical-partition online Lloyd iteration on shares (Alg. 3).
 
     he_results=None  -> dense-SS path: joint products via Beaver matmuls.
@@ -102,15 +103,21 @@ def _iteration(xa_enc, xb_enc, mu: AShare, dealer, n: int, k: int,
     sparse X) and enter the mesh program as fresh share INPUTS — the
     nnz-independent n*d Beaver traffic and its triple matmuls vanish from
     the TPU roofline, which is exactly the paper's claim mapped onto the
-    accelerator."""
-    ctx = P.Ctx(dealer=dealer, log=CommLog())
+    accelerator.
+
+    `backend` selects the ring-compute implementation (core/backend.py);
+    every local ring product below, including the ones inside P.smatmul and
+    P.cmp_lt, dispatches through it, so the pjit'd production path runs the
+    same kernels as the simulated SecureKMeans path."""
+    ctx = P.Ctx(dealer=dealer, log=CommLog(), backend=backend)
+    mm = ctx.backend.ring_mm
     f = ring.F
     # ---- S1: distances ---------------------------------------------------
     mu_sq = P.smul(ctx, mu, mu)
     u = AShare(mu_sq.s0.sum(1), mu_sq.s1.sum(1))
     mut = AShare(mu.s0.T, mu.s1.T)
-    loc_a = jnp.matmul(xa_enc, mut.s0[:d_a])
-    loc_b = jnp.matmul(xb_enc, mut.s1[d_a:])
+    loc_a = mm(xa_enc, mut.s0[:d_a])
+    loc_b = mm(xb_enc, mut.s1[d_a:])
     if he_results is None:
         j1 = P.smatmul(ctx, AShare(xa_enc, jnp.zeros_like(xa_enc)),
                        AShare(jnp.zeros_like(mut.s1[:d_a]), mut.s1[:d_a]))
@@ -125,9 +132,9 @@ def _iteration(xa_enc, xb_enc, mu: AShare, dealer, n: int, k: int,
     c = P.argmin_onehot(ctx, dist)
     # ---- S3: update ------------------------------------------------------
     ct = AShare(c.s0.T, c.s1.T)
-    za = AShare(jnp.matmul(ct.s0, xa_enc), jnp.zeros((k, d_a), ring.DTYPE))
+    za = AShare(mm(ct.s0, xa_enc), jnp.zeros((k, d_a), ring.DTYPE))
     zb = AShare(jnp.zeros((k, xb_enc.shape[1]), ring.DTYPE),
-                jnp.matmul(ct.s1, xb_enc))
+                mm(ct.s1, xb_enc))
     if he_results is None:
         ja = P.smatmul(ctx, AShare(jnp.zeros_like(ct.s1), ct.s1),
                        AShare(xa_enc, jnp.zeros_like(xa_enc)))
@@ -152,8 +159,11 @@ def _iteration(xa_enc, xb_enc, mu: AShare, dealer, n: int, k: int,
     return P.mux(ctx, guard, mu, mu_new)
 
 
-def record_offline_shapes(n: int, d: int, k: int, d_a: int):
-    """Trace the iteration once to enumerate the offline tensor list."""
+def record_offline_shapes(n: int, d: int, k: int, d_a: int,
+                          sparse: bool = False):
+    """Trace the iteration once to enumerate the offline tensor list.
+    sparse=True enumerates the Protocol-2 variant (the four joint-product
+    Beaver matmul triples are replaced by HE-result share inputs)."""
     dealer = RecordingDealer()
 
     def run():
@@ -161,7 +171,12 @@ def record_offline_shapes(n: int, d: int, k: int, d_a: int):
         zb = jnp.zeros((n, d - d_a), ring.DTYPE)
         mu = AShare(jnp.zeros((k, d), ring.DTYPE),
                     jnp.zeros((k, d), ring.DTYPE))
-        return _iteration(z, zb, mu, dealer, n, k, d_a)
+        he = None
+        if sparse:
+            he = tuple(AShare(jnp.zeros(s, ring.DTYPE),
+                              jnp.zeros(s, ring.DTYPE))
+                       for s in [(n, k), (n, k), (k, d_a), (k, d - d_a)])
+        return _iteration(z, zb, mu, dealer, n, k, d_a, he_results=he)
 
     jax.eval_shape(run)
     return dealer.requests
@@ -184,10 +199,13 @@ def offline_tensor_specs(requests, n: int):
 
 
 def online_iteration_fn(n: int, d: int, k: int, d_a: int,
-                        sparse: bool = False):
+                        sparse: bool = False, backend: str = "auto"):
     """(fn, arg ShapeDtypeStructs) with fn(xa, xb, mu0, mu1, *he, *flat).
     sparse=True adds the 8 Protocol-2 result shares as inputs and drops the
-    joint Beaver matmuls (paper Sec 4.3 on-mesh)."""
+    joint Beaver matmuls (paper Sec 4.3 on-mesh). `backend` picks the
+    ring-compute implementation (core/backend.py) baked into the lowering."""
+    from repro.core.backend import get_backend
+    ring_backend = get_backend(backend)
     n_he = 0
     he_shapes = []
     if sparse:
@@ -212,7 +230,8 @@ def online_iteration_fn(n: int, d: int, k: int, d_a: int,
                     jnp.zeros((k, d), ring.DTYPE))
         he = tuple(AShare(jnp.zeros(s, ring.DTYPE), jnp.zeros(s, ring.DTYPE))
                    for s in he_shapes) if sparse else None
-        return _iteration(z, zb, mu, dealer, n, k, d_a, he_results=he)
+        return _iteration(z, zb, mu, dealer, n, k, d_a, he_results=he,
+                          backend=ring_backend)
 
     jax.eval_shape(run)
     flat_specs = offline_tensor_specs(dealer.requests, n)
@@ -220,7 +239,8 @@ def online_iteration_fn(n: int, d: int, k: int, d_a: int,
     def fn(xa_enc, xb_enc, mu_s0, mu_s1, *flat):
         he, rest = _he_args(list(flat))
         out = _iteration(xa_enc, xb_enc, AShare(mu_s0, mu_s1),
-                         ListDealer(rest), n, k, d_a, he_results=he)
+                         ListDealer(rest), n, k, d_a, he_results=he,
+                         backend=ring_backend)
         return out.s0, out.s1
 
     he_specs = []

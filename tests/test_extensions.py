@@ -69,10 +69,14 @@ def test_normalize_horizontal_end_to_end():
 # ---------------------------------------------------------------------------
 
 def test_ks_carry_kernel_matches_protocol():
-    """Drive the real protocol to capture each level's exchanged masks and
-    triples, then verify the fused kernel reproduces both parties' final
-    carry shares (and hence the exact MSB)."""
-    from repro.core.sharing import BShare, share
+    """Run the sequential band-by-band Kogge-Stone adder (the seed
+    formulation of msb_carry) as the oracle, recording each level's
+    exchanged masks and triples, then verify (a) the fused kernel reproduces
+    both parties' final carry shares, and (b) protocol.msb_carry — which now
+    dispatches the same fused recombination through the ring backend —
+    extracts the identical MSB from identical dealer randomness."""
+    from repro.core.channel import CommLog
+    from repro.core.sharing import BShare, rec_b, share
     from repro.core.triples import TrustedDealer
     from repro.kernels.ksadder import ks_carry_share, LEVELS
 
@@ -81,69 +85,60 @@ def test_ks_carry_kernel_matches_protocol():
     vals = rng.integers(-(2 ** 40), 2 ** 40, (n, m))
     sh = share(vals.astype(np.int64).astype(np.uint64), rng)
 
-    # reference: run msb_carry while recording the per-level Beaver state
-    rec_state = {"e": [], "f": [], "u0": [], "v0": [], "z0": [],
-                 "u1": [], "v1": [], "z1": []}
-
-    class RecordingCtx(P.Ctx):
-        def send(self, nbytes, rounds=1):
-            pass
-
     dealer = TrustedDealer(seed=9)
-    ctx = RecordingCtx(dealer=dealer, log=__import__(
-        "repro.core.channel", fromlist=["CommLog"]).CommLog())
+    state = []  # one (e, f, triple) per AND level
 
-    orig_band = P.band
-
-    def band_spy(c, x, y):
-        shape = jnp.broadcast_shapes(x.shape, y.shape)
-        t = dealer.bin_triple(shape)
-        xb = BShare(jnp.broadcast_to(x.b0, shape),
-                    jnp.broadcast_to(x.b1, shape))
-        yb = BShare(jnp.broadcast_to(y.b0, shape),
-                    jnp.broadcast_to(y.b1, shape))
-        e = (xb.b0 ^ t.u.b0) ^ (xb.b1 ^ t.u.b1)
-        f = (yb.b0 ^ t.v.b0) ^ (yb.b1 ^ t.v.b1)
-        rec_state["e"].append(e)
-        rec_state["f"].append(f)
-        for nm, val in (("u0", t.u.b0), ("v0", t.v.b0), ("z0", t.z.b0),
-                        ("u1", t.u.b1), ("v1", t.v.b1), ("z1", t.z.b1)):
-            rec_state[nm].append(val)
+    def band_ref(x: BShare, y: BShare) -> BShare:
+        t = dealer.bin_triple(x.shape)
+        e = (x.b0 ^ t.u.b0) ^ (x.b1 ^ t.u.b1)
+        f = (y.b0 ^ t.v.b0) ^ (y.b1 ^ t.v.b1)
+        state.append((e, f, t))
         z0 = t.z.b0 ^ (t.u.b0 & f) ^ (e & (t.v.b0 ^ f))
         z1 = t.z.b1 ^ (t.u.b1 & f) ^ (e & t.v.b1)
         return BShare(z0, z1)
 
-    P.band = band_spy
-    try:
-        want_bit = P.msb_carry(ctx, sh)
-    finally:
-        P.band = orig_band
+    x = BShare(sh.s0, jnp.zeros_like(sh.s0))
+    y = BShare(jnp.zeros_like(sh.s1), sh.s1)
+    g = band_ref(x, y)
+    p = BShare(x.b0 ^ y.b0, x.b1 ^ y.b1)
+    for s in LEVELS:
+        lhs = BShare(jnp.stack([p.b0, p.b0]), jnp.stack([p.b1, p.b1]))
+        rhs = BShare(jnp.stack([g.b0 << s, p.b0 << s]),
+                     jnp.stack([g.b1 << s, p.b1 << s]))
+        both = band_ref(lhs, rhs)
+        g = BShare(g.b0 ^ both.b0[0], g.b1 ^ both.b1[0])
+        p = BShare(both.b0[1], both.b1[1])
 
-    # kernel replay: level 0 (initial g) + 6 stacked levels
-    def grab(idx):
-        return {k: rec_state[k][idx] for k in rec_state}
-
-    lvl = [grab(i) for i in range(7)]
-    el = jnp.stack([l["e"] for l in lvl[1:]]).reshape(6, 2, n, m)
-    fl = jnp.stack([l["f"] for l in lvl[1:]]).reshape(6, 2, n, m)
+    e0, f0, t0 = state[0]
+    el = jnp.stack([lv[0] for lv in state[1:]])
+    fl = jnp.stack([lv[1] for lv in state[1:]])
     carries = {}
-    for party0, (us, vs, zs, xw) in {
-            True: ("u0", "v0", "z0", sh.s0),
-            False: ("u1", "v1", "z1", sh.s1)}.items():
-        ul = jnp.stack([l[us] for l in lvl[1:]]).reshape(6, 2, n, m)
-        vl = jnp.stack([l[vs] for l in lvl[1:]]).reshape(6, 2, n, m)
-        zl = jnp.stack([l[zs] for l in lvl[1:]]).reshape(6, 2, n, m)
+    for party0 in (True, False):
+        ul = jnp.stack([(lv[2].u.b0 if party0 else lv[2].u.b1)
+                        for lv in state[1:]])
+        vl = jnp.stack([(lv[2].v.b0 if party0 else lv[2].v.b1)
+                        for lv in state[1:]])
+        zl = jnp.stack([(lv[2].z.b0 if party0 else lv[2].z.b1)
+                        for lv in state[1:]])
         carries[party0] = ks_carry_share(
-            xw ^ jnp.zeros_like(xw), lvl[0]["e"], lvl[0]["f"],
-            lvl[0][us], lvl[0][vs], lvl[0][zs], el, fl, ul, vl, zl,
-            party0=party0)
-    g = np.asarray(carries[True] ^ carries[False], np.uint64)
+            sh.s0 if party0 else sh.s1, e0, f0,
+            t0.u.b0 if party0 else t0.u.b1,
+            t0.v.b0 if party0 else t0.v.b1,
+            t0.z.b0 if party0 else t0.z.b1,
+            el, fl, ul, vl, zl, party0=party0)
+    # (a) fused kernel == sequential oracle, per party share
+    np.testing.assert_array_equal(np.asarray(carries[True], np.uint64),
+                                  np.asarray(g.b0, np.uint64))
+    np.testing.assert_array_equal(np.asarray(carries[False], np.uint64),
+                                  np.asarray(g.b1, np.uint64))
+    gw = np.asarray(carries[True] ^ carries[False], np.uint64)
     # msb = p_orig[63] ^ G[62]  (protocol.msb_carry's final extraction)
     p_orig = np.asarray(sh.s0 ^ sh.s1, np.uint64)
-    msb = ((p_orig >> 63) & 1) ^ ((g >> 62) & 1)
+    msb = ((p_orig >> 63) & 1) ^ ((gw >> 62) & 1)
     np.testing.assert_array_equal(msb.astype(np.int64),
                                   (vals < 0).astype(np.int64))
-    # and it agrees with the protocol's own output
-    from repro.core.sharing import rec_b
-    np.testing.assert_array_equal(np.asarray(rec_b(want_bit), np.uint64),
-                                  msb)
+    # (b) protocol.msb_carry consumes the same triples in the same order, so
+    # an identically-seeded dealer must yield the identical MSB bits
+    ctx = P.Ctx(dealer=TrustedDealer(seed=9), log=CommLog())
+    want_bit = P.msb_carry(ctx, sh)
+    np.testing.assert_array_equal(np.asarray(rec_b(want_bit), np.uint64), msb)
