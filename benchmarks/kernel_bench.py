@@ -69,15 +69,34 @@ def run(quick: bool = False):
                      _time_us(xla.ring_spmm, *ell),
                      _time_us(pal.ring_spmm, *ell)))
 
+    # reference-fit shape: Protocol 2's X @ mu^T product at n=1024, k=8
+    nr, dr, kr = 1024, 512, 8
+    xr = rng.integers(0, 1 << 64, (nr, dr), dtype=np.uint64) \
+        * (rng.random((nr, dr)) > 0.9)
+    csr_r = CSRMatrix.from_dense(xr.astype(np.uint64))
+    yr = rng.integers(0, 1 << 64, (dr, kr), dtype=np.uint64)
+    br, ir, cr = csr_to_ell(csr_r.indptr, csr_r.indices, csr_r.data,
+                            csr_r.shape)
+    ell_r = (jnp.asarray(br), jnp.asarray(ir), jnp.asarray(cr),
+             jnp.asarray(yr))
+    rows.append(_row("ring_spmm_u64(0.9 sparse)", f"{nr}x{dr}x{kr}(kmeans)",
+                     _time_us(xla.ring_spmm, *ell_r),
+                     _time_us(pal.ring_spmm, *ell_r)))
+
     # ---- ks_fused: the CMP adder's local recombination ------------------
-    nm = (64, 128) if quick else (256, 128)
-    flat = [jnp.asarray(rng.integers(0, 1 << 64, nm, dtype=np.uint64))
-            for _ in range(6)]
-    lvls = [jnp.asarray(rng.integers(0, 1 << 64, (len(KS_LEVELS), 2) + nm,
-                                     dtype=np.uint64)) for _ in range(5)]
-    rows.append(_row("ks_fused", f"{nm[0]}x{nm[1]}",
-                     _time_us(lambda: xla.ks_fused(*flat, *lvls, party0=True)),
-                     _time_us(lambda: pal.ks_fused(*flat, *lvls, party0=True))))
+    # second shape is tournament-realistic: the (n, k/2) comparison tensor
+    # of the first argmin round at the reference fit (n=1024, k=8)
+    for nm, label in (((64, 128) if quick else (256, 128), None),
+                      ((1024, 4), "1024x4(tournament)")):
+        flat = [jnp.asarray(rng.integers(0, 1 << 64, nm, dtype=np.uint64))
+                for _ in range(6)]
+        lvls = [jnp.asarray(rng.integers(0, 1 << 64, (len(KS_LEVELS), 2) + nm,
+                                         dtype=np.uint64)) for _ in range(5)]
+        rows.append(_row("ks_fused", label or f"{nm[0]}x{nm[1]}",
+                         _time_us(lambda: xla.ks_fused(*flat, *lvls,
+                                                       party0=True)),
+                         _time_us(lambda: pal.ks_fused(*flat, *lvls,
+                                                       party0=True))))
 
     # ---- plaintext kernels (oracle vs pallas) ---------------------------
     ne, de, ke = (256, 256, 64) if quick else (1024, 512, 128)

@@ -22,7 +22,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_online_offline, fig3_vectorization,
-                            fig4_sparse, kernel_bench, q5_fraud, table1_2)
+                            fig4_sparse, kernel_bench, online_offline,
+                            q5_fraud, table1_2)
 
     suites = {
         "table1_2_runtime_comm": lambda: table1_2.run(quick=args.quick),
@@ -34,6 +35,10 @@ def main() -> None:
         # `--only kernels_interpret --quick` is the CI smoke entry: per-op
         # xla-vs-pallas timings, persisted to benchmarks/BENCH_kernels.json
         "kernels_interpret": lambda: kernel_bench.run(quick=args.quick),
+        # `--only online_offline --quick`: measured offline/online split of
+        # the pooled-dealer fit vs the on-demand baseline, persisted to
+        # benchmarks/BENCH_online.json
+        "online_offline": lambda: online_offline.run(quick=args.quick),
     }
     derived_fns = {
         "table1_2_runtime_comm": table1_2.derived,
@@ -42,6 +47,7 @@ def main() -> None:
         "fig4b_sparse_degree": fig4_sparse.derived,
         "q5_fraud_jaccard": q5_fraud.derived,
         "kernels_interpret": kernel_bench.derived,
+        "online_offline": online_offline.derived,
     }
     if args.only:
         keep = set(args.only.split(","))

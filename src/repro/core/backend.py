@@ -178,9 +178,15 @@ class PallasBackend(RingBackend):
         from repro.kernels.ksadder import ks_carry_share
         shape = jnp.shape(x)
         size = max(1, int(np.prod(shape, dtype=np.int64)))
-        bm, bn = 8, 128
+        bn = 128
         rows = -(-size // bn)
-        rows += (-rows) % bm
+        if self.interpret:
+            # single grid cell: the interpret emulation pays per-grid-step,
+            # so tiling rows 8 at a time made this op ~60x slower than XLA
+            bm = rows
+        else:
+            bm = 8
+            rows += (-rows) % bm
         padded = rows * bn
 
         def flat2d(t):

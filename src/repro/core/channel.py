@@ -63,6 +63,18 @@ class CommLog:
     def time_estimate(self, net: NetModel, phase: str | None = None) -> float:
         return net.time_s(self.total_bytes(phase), self.total_rounds(phase))
 
+    def merge(self, other: "CommLog", phase: str | None = None) -> None:
+        """Accumulate another log's tallies (optionally one phase only).
+        Used to replay the shape-determined per-iteration traffic of a
+        compiled online step, whose protocol-level sends only fire at trace
+        time."""
+        for (p, t), v in other.bytes.items():
+            if phase is None or p == phase:
+                self.bytes[(p, t)] += v
+        for (p, t), v in other.rounds.items():
+            if phase is None or p == phase:
+                self.rounds[(p, t)] += v
+
     def snapshot(self) -> dict:
         return {"bytes": dict(self.bytes), "rounds": dict(self.rounds)}
 

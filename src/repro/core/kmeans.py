@@ -38,7 +38,8 @@ from repro.core.channel import CommLog, NetModel
 from repro.core.he import OU_COST_S, SimulatedPHE
 from repro.core.sharing import AShare, rec, rec_real, share
 from repro.core.sparse import CSRMatrix, secure_sparse_matmul
-from repro.core.triples import TrustedDealer
+from repro.core.triples import (PlanningDealer, PooledDealer, TriplePlan,
+                                TrustedDealer)
 
 
 @dataclasses.dataclass
@@ -54,6 +55,10 @@ class KMeansConfig:
     tol: float | None = None        # if set, F_CSC early-stops
     he_backend: object | None = None  # default: SimulatedPHE()
     backend: str = "auto"           # ring-compute backend (core/backend.py)
+    # "pooled": derive the data-independent triple schedule up front and run
+    # the online loop against a PooledDealer (the paper's true offline/online
+    # split). "on_demand": synthesize triples inside the loop (baseline).
+    offline: Literal["on_demand", "pooled"] = "on_demand"
 
     def __post_init__(self):
         if self.iters < 1:
@@ -61,6 +66,10 @@ class KMeansConfig:
                 f"KMeansConfig.iters must be >= 1, got {self.iters}: the "
                 "secure Lloyd loop must run at least once to produce an "
                 "assignment")
+        if self.offline not in ("on_demand", "pooled"):
+            raise ValueError(
+                f"KMeansConfig.offline must be 'on_demand' or 'pooled', "
+                f"got {self.offline!r}")
 
 
 @dataclasses.dataclass
@@ -69,11 +78,17 @@ class KMeansResult:
     assignment: AShare                # (n, k) one-hot shares, scale 1
     iters_run: int
     log: CommLog
-    dealer: TrustedDealer
-    online_seconds: float
-    offline_dealer_seconds: float
+    dealer: "TrustedDealer | PooledDealer"
+    online_seconds: float             # loop wall minus in-loop dealer work
+    offline_dealer_seconds: float     # triple synthesis (+ plan, if pooled)
     offline_modelled_ot_seconds: float
     he_seconds: float
+    loop_seconds: float = 0.0         # raw Lloyd-loop wall-clock: with an
+    # on-demand dealer this INCLUDES triple synthesis (no preprocessing means
+    # the dealer sits on the online critical path); with offline="pooled" it
+    # equals online_seconds.
+    offline_plan_seconds: float = 0.0  # dry-run trace + fast-path AOT
+    # compile (pooled only; the compile usually dominates)
 
     # -- convenience reconstructions (the protocol's single final Rec) -----
     def centroids_plain(self, f: int = ring.F) -> np.ndarray:
@@ -121,22 +136,64 @@ class SecureKMeans:
 
         mu = self._init_centroids(ctx, rng, x_a, x_b)
 
+        # pooled offline phase: trace the schedule, bulk-generate the pools,
+        # upload once, and — on the dense vertical path — AOT-compile the
+        # single-launch online iteration that consumes them. All of this is
+        # data-independent work; the loop below then runs dealer-free.
+        plan_s = 0.0
+        fast = None
+        if cfg.offline == "pooled":
+            t0 = time.perf_counter()
+            plan, iter_comm = self._plan_offline_full(x_a.shape, x_b.shape)
+            # the compiled iteration hardcodes f = ring.F (launch/kmeans_step
+            # has no per-config scale), so a custom precision falls back to
+            # the eager pooled loop rather than silently truncating wrong
+            use_fast = (cfg.partition == "vertical" and not cfg.sparse
+                        and cfg.vectorized and cfg.f == ring.F)
+            if use_fast:
+                import jax
+                from repro.launch import kmeans_step as K
+                fn, args, requests = K.fit_iteration_fn(
+                    n, d, cfg.k, enc_a.shape[1], backend=cfg.backend)
+                compiled = jax.jit(fn).lower(*args).compile()
+                # upload the constant plaintext operands once, offline
+                fast = (compiled, K.materialize_offline, requests, iter_comm,
+                        jnp.asarray(enc_a), jnp.asarray(enc_b))
+            plan_s = time.perf_counter() - t0
+            ctx.dealer = PooledDealer(plan, seed=cfg.seed, log=ctx.log)
+
         t_start = time.perf_counter()
+        dealer_s_pre = ctx.dealer.dealer_seconds
         it = 0
         for it in range(1, cfg.iters + 1):
             mu_old = mu
-            ctx.tag = "S1"
-            dist = self._distances(ctx, enc_a, enc_b, csr_a, csr_b, mu)
-            ctx.tag = "S2"
-            r_before = ctx.log.total_rounds("online")
-            c = P.argmin_onehot(ctx, dist)            # (n, k) scale 1
-            if not cfg.vectorized:
-                # pre-vectorization: each of the n samples runs its own
-                # tournament (n separate interaction chains per round)
-                dr = ctx.log.total_rounds("online") - r_before
-                _naive_extra_rounds(ctx, (n - 1) * dr + 1)
-            ctx.tag = "S3"
-            mu = self._update(ctx, enc_a, enc_b, csr_a, csr_b, c, mu_old, n)
+            if fast is not None:
+                # ONE launch for the whole S1/S2/S3 iteration: the pool's
+                # device arrays enter as arguments (ListDealer discipline),
+                # which is what makes the compiled form possible at all.
+                compiled, materialize, requests, iter_comm, dev_a, dev_b = fast
+                flat = materialize(requests, ctx.dealer)
+                mu0, mu1, c0, c1 = compiled(dev_a, dev_b,
+                                            mu.s0, mu.s1, *flat)
+                mu, c = AShare(mu0, mu1), AShare(c0, c1)
+                # per-iteration traffic is shape-determined; replay the
+                # traced iteration's online tallies (protocol sends only
+                # fire at trace time inside a compiled step)
+                ctx.log.merge(iter_comm, phase="online")
+            else:
+                ctx.tag = "S1"
+                dist = self._distances(ctx, enc_a, enc_b, csr_a, csr_b, mu)
+                ctx.tag = "S2"
+                r_before = ctx.log.total_rounds("online")
+                c = P.argmin_onehot(ctx, dist)            # (n, k) scale 1
+                if not cfg.vectorized:
+                    # pre-vectorization: each of the n samples runs its own
+                    # tournament (n separate interaction chains per round)
+                    dr = ctx.log.total_rounds("online") - r_before
+                    _naive_extra_rounds(ctx, (n - 1) * dr + 1)
+                ctx.tag = "S3"
+                mu = self._update(ctx, enc_a, enc_b, csr_a, csr_b, c, mu_old,
+                                  n)
             if cfg.tol is not None:
                 ctx.tag = "CSC"
                 if self._converged(ctx, mu_old, mu, cfg.tol):
@@ -144,14 +201,62 @@ class SecureKMeans:
         jnp.asarray(mu.s0).block_until_ready()
         wall = time.perf_counter() - t_start
         dealer = ctx.dealer
+        in_loop_dealer_s = dealer.dealer_seconds - dealer_s_pre
         return KMeansResult(
             centroids=mu, assignment=c, iters_run=it, log=ctx.log,
             dealer=dealer,
-            online_seconds=max(0.0, wall - dealer.dealer_seconds),
-            offline_dealer_seconds=dealer.dealer_seconds,
+            online_seconds=max(0.0, wall - in_loop_dealer_s),
+            offline_dealer_seconds=dealer.dealer_seconds + plan_s,
             offline_modelled_ot_seconds=dealer.modelled_ot_seconds,
             he_seconds=getattr(ctx, "he_seconds", 0.0),
+            loop_seconds=wall,
+            offline_plan_seconds=plan_s,
         )
+
+    # ------------------------------------------------------------------ #
+    def plan_offline(self, shape_a, shape_b) -> TriplePlan:
+        """Derive the exact correlated-randomness schedule of `fit` for
+        party-input shapes (shape_a, shape_b) — without seeing any data.
+
+        One Lloyd iteration (+ the CSC check when `tol` is set) is traced
+        eagerly on zero-filled inputs with a `PlanningDealer`; every triple
+        shape is data-independent, so the full-fit schedule is that trace
+        repeated `iters` times. A `tol` early-stop only leaves pool surplus.
+        The trace runs the real protocol ops, so it also warms the backend's
+        kernel caches with exactly the online shapes — offline work again.
+        """
+        return self._plan_offline_full(shape_a, shape_b)[0]
+
+    def _plan_offline_full(self, shape_a, shape_b):
+        """(plan, iter_comm): the full-fit TriplePlan plus a CommLog of ONE
+        iteration's online traffic (S1/S2/S3, sans CSC) — the tallies the
+        compiled fast path replays per launch."""
+        cfg = self.cfg
+        ctx = P.Ctx(dealer=PlanningDealer(), log=CommLog(),
+                    backend=cfg.backend)
+        ctx.vectorized = cfg.vectorized
+        enc_a = np.zeros(tuple(shape_a), np.uint64)
+        enc_b = np.zeros(tuple(shape_b), np.uint64)
+        n = enc_a.shape[0] if cfg.partition == "vertical" \
+            else enc_a.shape[0] + enc_b.shape[0]
+        d = enc_a.shape[1] + enc_b.shape[1] if cfg.partition == "vertical" \
+            else enc_a.shape[1]
+        csr_a = CSRMatrix.from_dense(enc_a) if cfg.sparse else None
+        csr_b = CSRMatrix.from_dense(enc_b) if cfg.sparse else None
+        mu = AShare(jnp.zeros((cfg.k, d), ring.DTYPE),
+                    jnp.zeros((cfg.k, d), ring.DTYPE))
+        ctx.tag = "S1"
+        dist = self._distances(ctx, enc_a, enc_b, csr_a, csr_b, mu)
+        ctx.tag = "S2"
+        c = P.argmin_onehot(ctx, dist)
+        ctx.tag = "S3"
+        mu_new = self._update(ctx, enc_a, enc_b, csr_a, csr_b, c, mu, n)
+        iter_comm = CommLog()
+        iter_comm.merge(ctx.log, phase="online")
+        if cfg.tol is not None:
+            ctx.tag = "CSC"
+            self._converged(ctx, mu, mu_new, cfg.tol)
+        return ctx.dealer.plan().repeat(cfg.iters), iter_comm
 
     # ------------------------------------------------------------------ #
     def _init_centroids(self, ctx, rng, x_a, x_b) -> AShare:

@@ -293,32 +293,65 @@ def mux(ctx: Ctx, z: AShare, x: AShare, y: AShare) -> AShare:
 def argmin_onehot(ctx: Ctx, d: AShare) -> AShare:
     """Secret-shared one-hot argmin along the last axis of (n, k) distances.
 
-    ceil(log2 k) rounds of [CMP + 2 MUX], each round vectorized over all
-    surviving pairs of all n samples at once — k-1 CMPMs total, exactly the
-    binary-tree reduction of Fig. 1.
+    ceil(log2 k) rounds of [CMP + batched MUX], each round vectorized over
+    all surviving pairs of all n samples at once — k-1 CMPMs total, exactly
+    the binary-tree reduction of Fig. 1. Two launch-count optimizations on
+    top of the paper's tree:
+
+    * The candidate one-hots start out PUBLIC (the identity's columns), so
+      they are carried as indexes — not as an (n, k, k) zero-padded share
+      tensor — until the first MUX, which is a local public-constant product
+      (mul_pub, no triple, no traffic). Peak tournament memory halves.
+    * From the second level on, the value MUX and the one-hot MUX share the
+      selector bit, so both Beaver recombinations are batched into ONE smul
+      over the stacked (values | one-hots) tensor: one triple, one exchange
+      round, one recombination pass per tournament round instead of two.
     """
     n, k = d.shape
     eye = jnp.eye(k, dtype=ring.DTYPE)
     vals = d
-    ohs = AShare(jnp.broadcast_to(eye[None], (n, k, k)),
-                 jnp.zeros((n, k, k), ring.DTYPE))  # public one-hots as shares
+    ohs: AShare | None = None   # public eye carried implicitly until 1st MUX
     m = k
     while m > 1:
         half, odd = m // 2, m % 2
         l_v = AShare(vals.s0[:, 0:2 * half:2], vals.s1[:, 0:2 * half:2])
         r_v = AShare(vals.s0[:, 1:2 * half:2], vals.s1[:, 1:2 * half:2])
-        l_o = AShare(ohs.s0[:, 0:2 * half:2], ohs.s1[:, 0:2 * half:2])
-        r_o = AShare(ohs.s0[:, 1:2 * half:2], ohs.s1[:, 1:2 * half:2])
         b = cmp_lt(ctx, l_v, r_v)                       # [l < r]  (n, half)
-        v_min = mux(ctx, b, l_v, r_v)
         b_oh = AShare(b.s0[..., None], b.s1[..., None])  # broadcast over k
-        o_min = mux(ctx, b_oh, l_o, r_o)
+        if ohs is None:
+            # level 1: one-hot operands are public eye columns — the MUX
+            # b*(l_o - r_o) + r_o is a local scalar-by-public product.
+            v_min = mux(ctx, b, l_v, r_v)
+            l_o = eye[0:2 * half:2][None]                # (1, half, k) public
+            r_o = eye[1:2 * half:2][None]
+            o_min = add_pub(mul_pub(b_oh, l_o - r_o), r_o)
+            if odd:
+                tail_o = AShare(jnp.broadcast_to(eye[None, -1:], (n, 1, k)),
+                                jnp.zeros((n, 1, k), ring.DTYPE))
+        else:
+            l_o = AShare(ohs.s0[:, 0:2 * half:2], ohs.s1[:, 0:2 * half:2])
+            r_o = AShare(ohs.s0[:, 1:2 * half:2], ohs.s1[:, 1:2 * half:2])
+            # batched MUX: stack (values | one-hots) differences along the
+            # last axis and recombine with ONE Beaver product against the
+            # shared selector — (n, half, 1+k) in a single round.
+            diff = AShare(
+                jnp.concatenate([(l_v.s0 - r_v.s0)[..., None],
+                                 l_o.s0 - r_o.s0], -1),
+                jnp.concatenate([(l_v.s1 - r_v.s1)[..., None],
+                                 l_o.s1 - r_o.s1], -1))
+            zz = smul(ctx, b_oh, diff)
+            v_min = add(AShare(zz.s0[..., 0], zz.s1[..., 0]), r_v)
+            o_min = add(AShare(zz.s0[..., 1:], zz.s1[..., 1:]), r_o)
+            if odd:
+                tail_o = AShare(ohs.s0[:, -1:], ohs.s1[:, -1:])
         if odd:
             v_min = AShare(jnp.concatenate([v_min.s0, vals.s0[:, -1:]], 1),
                            jnp.concatenate([v_min.s1, vals.s1[:, -1:]], 1))
-            o_min = AShare(jnp.concatenate([o_min.s0, ohs.s0[:, -1:]], 1),
-                           jnp.concatenate([o_min.s1, ohs.s1[:, -1:]], 1))
+            o_min = AShare(jnp.concatenate([o_min.s0, tail_o.s0], 1),
+                           jnp.concatenate([o_min.s1, tail_o.s1], 1))
         vals, ohs, m = v_min, o_min, half + odd
+    if ohs is None:    # k == 1: the argmin is trivially the only column
+        return AShare(jnp.ones((n, 1), ring.DTYPE), jnp.zeros((n, 1), ring.DTYPE))
     return AShare(ohs.s0[:, 0], ohs.s1[:, 0])  # (n, k)
 
 

@@ -109,7 +109,9 @@ def secure_sparse_matmul(ctx: Ctx, x: CSRMatrix, y_share_b: np.ndarray, he,
         # through the ring backend (blocked-ELL kernel on pallas, gather-
         # scatter on numpy) — wraps mod 2^64 either way
         z = np.asarray(ctx.backend.ring_spmm_csr(x, y), np.uint64)
-        r = np.random.default_rng(ctx.dealer.rng.integers(1 << 62)) \
+        # mask stream seeded through the dealer API so a PooledDealer can
+        # pre-draw it in the offline phase (bit-exact replay)
+        r = np.random.default_rng(ctx.dealer.mask_seed()) \
             .integers(0, 1 << 64, size=(n, k), dtype=np.uint64)
         if time_model is not None:
             t = (d * k * time_model["enc"] + (x.nnz * k + n * k) * time_model["pmul"]

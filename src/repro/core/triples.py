@@ -1,11 +1,23 @@
 """Beaver triple generation — the data-independent OFFLINE phase (paper Sec 4.1).
 
-Three provider flavours:
+Provider flavours:
 
-* `TrustedDealer` — generates correct triples locally (numpy). This matches the
-  paper's remark that "if there is a trusted third party that does the offline
-  phase, the overall efficiency will improve further", and is what the online
-  benchmarks consume.
+* `TrustedDealer` — generates correct triples on demand (numpy). This matches
+  the paper's remark that "if there is a trusted third party that does the
+  offline phase, the overall efficiency will improve further". On-demand
+  generation puts the dealer's host work on the ONLINE critical path, which is
+  exactly what the paper's offline/online split avoids — it remains as the
+  oracle and as the no-preprocessing baseline.
+* `PlanningDealer` + `TriplePlan` — a dry-run trace (the `ListDealer`-style
+  replay discipline of launch/kmeans_step) that records the exact
+  correlated-randomness schedule a protocol run will consume. The schedule is
+  data-independent — that is WHY an offline phase exists at all.
+* `PooledDealer` — executes a `TriplePlan` ahead of time with ONE stacked RNG
+  draw and ONE batched ring op per shape-class (instead of thousands of tiny
+  numpy calls), uploads the pools as device arrays, and serves the online
+  phase with zero host work. Bit-exact against `TrustedDealer` under the same
+  seed: both draw from identical per-class PCG64 streams, and a stacked
+  full-range uint64 draw equals the concatenation of the per-request draws.
 * OT-based generation is *cost-modelled* (we cannot run a real network OT
   extension here): per 64-bit scalar product the Gilboa/ABY protocol transfers
   l correlated OTs of (kappa + l)-bit strings per direction. Offline bytes and
@@ -18,6 +30,7 @@ Every request is tagged so the offline cost decomposes per Lloyd step.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import NamedTuple
 
@@ -25,9 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ring
-from repro.core.backend import NumpyBackend, RingBackend
 from repro.core.channel import CommLog
-from repro.core.sharing import AShare, BShare, share, share_b
+from repro.core.sharing import AShare, BShare
 
 KAPPA = 128  # computational security parameter (paper Sec 5.1)
 
@@ -48,6 +60,11 @@ class BinTriple(NamedTuple):
     u: BShare
     v: BShare
     z: BShare  # bit-packed, z = u & v
+
+
+class PoolExhaustedError(RuntimeError):
+    """The online phase asked for correlated randomness the plan did not
+    include (wrong shape-class, or more requests than planned)."""
 
 
 # ---------------------------------------------------------------------------
@@ -71,15 +88,123 @@ OT_TRIPLES_PER_SEC = 2.0e6
 OT_BIN_TRIPLES_PER_SEC = 2.0e7
 
 
+# ---------------------------------------------------------------------------
+# Shape-class generation core — shared by the on-demand and bulk dealers
+# ---------------------------------------------------------------------------
+#
+# A *shape-class* is (kind, shape); every request of a class draws the same
+# flat block of full-range uint64 words from the class's own PCG64 stream.
+# Because a stacked draw of `count` blocks equals `count` sequential
+# single-block draws (verified by tests/test_triples_pool.py), the bulk
+# dealer below is bit-identical to the on-demand dealer per construction.
+
+_KIND_ID = {"matmul": 0, "mul": 1, "bin": 2, "rand": 3, "seed": 4}
+
+
+def _class_key(kind: str, shape) -> tuple:
+    if kind == "matmul":
+        sa, sb = shape
+        return (kind, tuple(sa), tuple(sb))
+    return (kind, tuple(shape))
+
+
+def _class_rng(seed: int, key: tuple) -> np.random.Generator:
+    """Deterministic per-class stream: entropy = (seed, kind, dims...)."""
+    kind = key[0]
+    dims = [d for s in key[1:] for d in (len(s), *s)]
+    ent = (int(seed), _KIND_ID[kind], *[int(d) for d in dims])
+    return np.random.default_rng(np.random.SeedSequence(ent))
+
+
+def _nelem(shape) -> int:
+    return int(np.prod(shape, dtype=np.int64))
+
+
+def _check_matmul_dims(shape_a, shape_b) -> None:
+    """Planner bugs must surface under `python -O` too — never a bare
+    assert."""
+    if tuple(shape_a)[1] != tuple(shape_b)[0]:
+        raise ValueError(
+            f"matmul triple inner dims disagree: A is {tuple(shape_a)}, "
+            f"B is {tuple(shape_b)}")
+
+
+def _gen_matmul(rng, sa, sb, count: int):
+    """`count` matmul triples in one stacked draw + one batched ring matmul.
+
+    Per-request word layout (the TrustedDealer draw order):
+    u, v, mask_u, mask_v, mask_z. Returns six (count, ...) uint64 arrays
+    (u0, u1, v0, v1, z0, z1)."""
+    _check_matmul_dims(sa, sb)
+    (n, d), (_, k) = tuple(sa), tuple(sb)
+    nd, dk, nk = n * d, d * k, n * k
+    per = 2 * nd + 2 * dk + nk
+    flat = ring.rand_np(rng, (count, per))
+    u = flat[:, :nd].reshape(count, n, d)
+    v = flat[:, nd:nd + dk].reshape(count, d, k)
+    mu = flat[:, nd + dk:2 * nd + dk].reshape(count, n, d)
+    mv = flat[:, 2 * nd + dk:2 * (nd + dk)].reshape(count, d, k)
+    mz = flat[:, 2 * (nd + dk):].reshape(count, n, k)
+    z = np.einsum("bij,bjk->bik", u, v, dtype=ring.NP_DTYPE, casting="unsafe")
+    return mu, u - mu, mv, v - mv, mz, z - mz
+
+
+def _gen_mul(rng, shape, count: int):
+    sz = _nelem(shape)
+    flat = ring.rand_np(rng, (count, 5 * sz))
+    u, v, mu, mv, mz = (flat[:, i * sz:(i + 1) * sz].reshape((count,) + tuple(shape))
+                        for i in range(5))
+    z = u * v  # uint64 wraps mod 2^64
+    return mu, u - mu, mv, v - mv, mz, z - mz
+
+
+def _gen_bin(rng, shape, count: int):
+    sz = _nelem(shape)
+    flat = ring.rand_np(rng, (count, 5 * sz))
+    u, v, mu, mv, mz = (flat[:, i * sz:(i + 1) * sz].reshape((count,) + tuple(shape))
+                        for i in range(5))
+    z = u & v
+    return mu, u ^ mu, mv, v ^ mv, mz, z ^ mz
+
+
+def _gen_rand(rng, shape, count: int):
+    return (ring.rand_np(rng, (count,) + tuple(shape)),)
+
+
+def _gen_seed(rng, shape, count: int):
+    # full-range uint64 seeds for host-side mask streams (Protocol 2 HE2SS)
+    return (ring.rand_np(rng, (count,)),)
+
+
+_GEN = {"mul": _gen_mul, "bin": _gen_bin, "rand": _gen_rand,
+        "seed": _gen_seed}
+
+
+def _gen_class(rng, kind: str, shape, count: int):
+    if kind == "matmul":
+        return _gen_matmul(rng, *shape, count)
+    return _GEN[kind](rng, shape, count)
+
+
+# ---------------------------------------------------------------------------
+# TrustedDealer — on-demand generation (oracle / no-preprocessing baseline)
+# ---------------------------------------------------------------------------
+
 class TrustedDealer:
-    """Offline-phase provider. Logs modelled OT cost + measured dealer time."""
+    """On-demand offline-phase provider. Each request synthesizes one triple
+    from its shape-class stream; logs modelled OT cost + measured dealer
+    time. The host work lands on the online critical path — `PooledDealer`
+    moves it into a true offline phase."""
 
     def __init__(self, seed: int = 0, log: CommLog | None = None,
-                 backend: RingBackend | None = None):
-        self.rng = np.random.default_rng(seed)
+                 backend=None):
+        # `backend` is accepted for interface compatibility; generation is
+        # host-side numpy (bit-exact with every ring backend by the parity
+        # guarantee in core/backend.py).
+        del backend
+        self.seed = seed
         self.log = log if log is not None else CommLog()
-        # dealer work is host-side and data-independent: numpy ring algebra
-        self.backend = backend if backend is not None else NumpyBackend()
+        self._rngs: dict[tuple, np.random.Generator] = {}
         self.dealer_seconds = 0.0
         self.modelled_ot_seconds = 0.0
         self.n_matmul = 0
@@ -87,51 +212,259 @@ class TrustedDealer:
         self.n_bin = 0
 
     # -- helpers ---------------------------------------------------------
-    def _account(self, scalar_products: int, share_bytes: int, tag: str) -> None:
+    def _rng_for(self, key: tuple) -> np.random.Generator:
+        rng = self._rngs.get(key)
+        if rng is None:
+            rng = self._rngs[key] = _class_rng(self.seed, key)
+        return rng
+
+    def _one(self, kind: str, shape):
+        key = _class_key(kind, shape)
+        out = _gen_class(self._rng_for(key), kind, shape, 1)
+        return [jnp.asarray(a[0]) for a in out]
+
+    def _account(self, scalar_products: int, tag: str) -> None:
         """Model OT generation traffic + dealer->party distribution."""
-        ot_bytes = ot_mul_triple_bytes(scalar_products)
-        self.log.send(ot_bytes, tag=tag, phase="offline", rounds=2)
+        self.log.send(ot_mul_triple_bytes(scalar_products), tag=tag,
+                      phase="offline", rounds=2)
         self.modelled_ot_seconds += scalar_products / OT_TRIPLES_PER_SEC
 
     def matmul_triple(self, shape_a, shape_b, *, tag: str = "misc") -> MatmulTriple:
         t0 = time.perf_counter()
-        (n, d), (d2, k) = tuple(shape_a), tuple(shape_b)
-        assert d == d2, (shape_a, shape_b)
-        u = ring.rand_np(self.rng, (n, d))
-        v = ring.rand_np(self.rng, (d, k))
-        z = self.backend.ring_mm(u, v)
-        tr = MatmulTriple(share(u, self.rng), share(v, self.rng), share(z, self.rng))
+        (n, d), (_, k) = tuple(shape_a), tuple(shape_b)
+        u0, u1, v0, v1, z0, z1 = self._one("matmul", (shape_a, shape_b))
+        tr = MatmulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
         self.dealer_seconds += time.perf_counter() - t0
         # A matrix triple is worth n*d*k scalar products under OT generation.
-        self._account(n * d * k, (n * d + d * k + n * k) * 8, tag)
+        self._account(n * d * k, tag)
         self.n_matmul += 1
         return tr
 
     def mul_triple(self, shape, *, tag: str = "misc") -> MulTriple:
         t0 = time.perf_counter()
-        u = ring.rand_np(self.rng, shape)
-        v = ring.rand_np(self.rng, shape)
-        z = u * v  # uint64 wraps mod 2^64
-        tr = MulTriple(share(u, self.rng), share(v, self.rng), share(z, self.rng))
+        u0, u1, v0, v1, z0, z1 = self._one("mul", shape)
+        tr = MulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
         self.dealer_seconds += time.perf_counter() - t0
-        self._account(int(np.prod(shape, dtype=np.int64)), 3 * ring.nbytes(shape), tag)
+        self._account(_nelem(shape), tag)
         self.n_mul += 1
         return tr
-
-    def rand(self, shape) -> jnp.ndarray:
-        """Correlated-randomness source for share-resharing steps (B2A)."""
-        return jnp.asarray(ring.rand_np(self.rng, shape))
 
     def bin_triple(self, shape, *, tag: str = "misc") -> BinTriple:
         """Bit-packed binary AND triples: each uint64 lane = 64 AND gates."""
         t0 = time.perf_counter()
-        u = ring.rand_np(self.rng, shape)
-        v = ring.rand_np(self.rng, shape)
-        z = u & v
-        tr = BinTriple(share_b(u, self.rng), share_b(v, self.rng), share_b(z, self.rng))
+        u0, u1, v0, v1, z0, z1 = self._one("bin", shape)
+        tr = BinTriple(BShare(u0, u1), BShare(v0, v1), BShare(z0, z1))
         self.dealer_seconds += time.perf_counter() - t0
-        n_bits = int(np.prod(shape, dtype=np.int64)) * 64
-        self.log.send(ot_bin_triple_bytes(n_bits), tag=tag, phase="offline", rounds=2)
+        n_bits = _nelem(shape) * 64
+        self.log.send(ot_bin_triple_bytes(n_bits), tag=tag, phase="offline",
+                      rounds=2)
         self.modelled_ot_seconds += n_bits / OT_BIN_TRIPLES_PER_SEC
         self.n_bin += 1
         return tr
+
+    def rand(self, shape) -> jnp.ndarray:
+        """Correlated-randomness source for share-resharing steps (B2A)."""
+        return self._one("rand", shape)[0]
+
+    def mask_seed(self) -> int:
+        """Seed for a host-side statistical-mask stream (Protocol 2 HE2SS)."""
+        return int(self._one("seed", ())[0])
+
+
+# ---------------------------------------------------------------------------
+# Planner — derive the exact offline schedule by dry-run trace
+# ---------------------------------------------------------------------------
+
+class PlanRequest(NamedTuple):
+    kind: str    # matmul | mul | bin | rand | seed
+    shape: tuple  # (sa, sb) for matmul, the tensor shape otherwise
+    tag: str
+
+
+@dataclasses.dataclass
+class TriplePlan:
+    """The correlated-randomness schedule of a protocol run, in consumption
+    order. Data-independent: derived once per (n, k, d, iters, partition,
+    sparsity) config and valid for every input of those shapes."""
+
+    requests: list
+
+    def repeat(self, reps: int) -> "TriplePlan":
+        """Schedule of `reps` identical passes (e.g. Lloyd iterations)."""
+        return TriplePlan(list(self.requests) * int(reps))
+
+    def __add__(self, other: "TriplePlan") -> "TriplePlan":
+        return TriplePlan(list(self.requests) + list(other.requests))
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+    def class_counts(self) -> dict:
+        """{class_key: count} — the shape-class histogram the bulk dealer
+        generates, one stacked draw each."""
+        out: dict[tuple, int] = {}
+        for r in self.requests:
+            key = _class_key(r.kind, r.shape)
+            out[key] = out.get(key, 0) + 1
+        return out
+
+
+class PlanningDealer:
+    """Records the (kind, shape, tag) schedule while the traced code runs on
+    zeros — the `ListDealer` replay discipline turned into a planner. The
+    trace executes the real protocol (eagerly, on zero data), so control flow
+    that depends on tensor *shapes* is followed exactly."""
+
+    def __init__(self):
+        self.requests: list[PlanRequest] = []
+
+    def _z(self, shape):
+        return jnp.zeros(shape, ring.DTYPE)
+
+    def plan(self) -> TriplePlan:
+        return TriplePlan(list(self.requests))
+
+    def matmul_triple(self, shape_a, shape_b, *, tag: str = "misc"):
+        _check_matmul_dims(shape_a, shape_b)
+        (n, d), (_, k) = tuple(shape_a), tuple(shape_b)
+        self.requests.append(
+            PlanRequest("matmul", (tuple(shape_a), tuple(shape_b)), tag))
+        return MatmulTriple(AShare(self._z((n, d)), self._z((n, d))),
+                            AShare(self._z((d, k)), self._z((d, k))),
+                            AShare(self._z((n, k)), self._z((n, k))))
+
+    def mul_triple(self, shape, *, tag: str = "misc"):
+        self.requests.append(PlanRequest("mul", tuple(shape), tag))
+        z = self._z(shape)
+        return MulTriple(AShare(z, z), AShare(z, z), AShare(z, z))
+
+    def bin_triple(self, shape, *, tag: str = "misc"):
+        self.requests.append(PlanRequest("bin", tuple(shape), tag))
+        z = self._z(shape)
+        return BinTriple(BShare(z, z), BShare(z, z), BShare(z, z))
+
+    def rand(self, shape):
+        self.requests.append(PlanRequest("rand", tuple(shape), "misc"))
+        return self._z(shape)
+
+    def mask_seed(self) -> int:
+        self.requests.append(PlanRequest("seed", (), "misc"))
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# PooledDealer — planned bulk generation, zero-host-work serving
+# ---------------------------------------------------------------------------
+
+class PooledDealer:
+    """Executes a `TriplePlan` up front and serves it back with device-array
+    slicing only.
+
+    Generation batches every shape-class into ONE stacked RNG draw and one
+    batched ring op (`np.einsum` over the stacked operands for matmul
+    triples, elementwise `*`/`&` otherwise), then uploads each class pool to
+    the device once. Bit-exact with `TrustedDealer(seed)` serving the same
+    request sequence: per-class streams + the uint64 draw-concatenation
+    property make the stacked draw identical to the per-request draws.
+
+    Serving past the planned count — or requesting a shape-class the plan
+    never mentioned — raises `PoolExhaustedError`: the trace and the online
+    run disagreed, which is a planner bug, not a condition to paper over.
+    """
+
+    def __init__(self, plan: TriplePlan, seed: int = 0,
+                 log: CommLog | None = None):
+        t0 = time.perf_counter()
+        self.plan = plan
+        self.seed = seed
+        self.log = log if log is not None else CommLog()
+        self.modelled_ot_seconds = 0.0
+        self.n_matmul = 0
+        self.n_mul = 0
+        self.n_bin = 0
+        self._pools: dict[tuple, tuple] = {}    # class key -> stacked arrays
+        self._served: dict[tuple, int] = {}     # class key -> cursor
+        counts = plan.class_counts()
+        self.pool_bytes = 0
+        for key, count in counts.items():
+            kind = key[0]
+            shape = key[1:] if kind == "matmul" else key[1]
+            arrays = _gen_class(_class_rng(seed, key), kind, shape, count)
+            # one host->device upload per class, then split into per-request
+            # views HERE (still offline) so online serving is a plain list
+            # index — no gather launches on the critical path
+            stacked = tuple(jnp.asarray(a) for a in arrays)
+            self._pools[key] = [tuple(a[i] for a in stacked)
+                                for i in range(count)]
+            self._served[key] = 0
+            self.pool_bytes += sum(int(a.size) * 8 for a in stacked)
+        self._account_offline(plan)
+        self.dealer_seconds = time.perf_counter() - t0
+
+    # -- offline accounting (identical totals to the on-demand dealer) ----
+    def _account_offline(self, plan: TriplePlan) -> None:
+        groups: dict[tuple, int] = {}
+        for r in plan.requests:
+            k = (r.kind, _class_key(r.kind, r.shape), r.tag)
+            groups[k] = groups.get(k, 0) + 1
+        for (kind, key, tag), count in groups.items():
+            if kind == "matmul":
+                (n, d), (_, k) = key[1], key[2]
+                sp = n * d * k
+                self.log.send(count * ot_mul_triple_bytes(sp), tag=tag,
+                              phase="offline", rounds=2 * count)
+                self.modelled_ot_seconds += count * sp / OT_TRIPLES_PER_SEC
+            elif kind == "mul":
+                sp = _nelem(key[1])
+                self.log.send(count * ot_mul_triple_bytes(sp), tag=tag,
+                              phase="offline", rounds=2 * count)
+                self.modelled_ot_seconds += count * sp / OT_TRIPLES_PER_SEC
+            elif kind == "bin":
+                n_bits = _nelem(key[1]) * 64
+                self.log.send(count * ot_bin_triple_bytes(n_bits), tag=tag,
+                              phase="offline", rounds=2 * count)
+                self.modelled_ot_seconds += \
+                    count * n_bits / OT_BIN_TRIPLES_PER_SEC
+
+    # -- serving ---------------------------------------------------------
+    def _next(self, kind: str, shape) -> tuple:
+        key = _class_key(kind, shape)
+        pool = self._pools.get(key)
+        if pool is None:
+            raise PoolExhaustedError(
+                f"no pool for {kind} {shape}: the offline plan never "
+                "scheduled this shape-class (planner/online mismatch)")
+        i = self._served[key]
+        if i >= len(pool):
+            raise PoolExhaustedError(
+                f"pool exhausted for {kind} {shape}: planned "
+                f"{len(pool)} requests, online asked for more")
+        self._served[key] = i + 1
+        return pool[i]
+
+    def matmul_triple(self, shape_a, shape_b, *, tag: str = "misc") -> MatmulTriple:
+        _check_matmul_dims(shape_a, shape_b)
+        u0, u1, v0, v1, z0, z1 = self._next(
+            "matmul", (tuple(shape_a), tuple(shape_b)))
+        self.n_matmul += 1
+        return MatmulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
+
+    def mul_triple(self, shape, *, tag: str = "misc") -> MulTriple:
+        u0, u1, v0, v1, z0, z1 = self._next("mul", shape)
+        self.n_mul += 1
+        return MulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
+
+    def bin_triple(self, shape, *, tag: str = "misc") -> BinTriple:
+        u0, u1, v0, v1, z0, z1 = self._next("bin", shape)
+        self.n_bin += 1
+        return BinTriple(BShare(u0, u1), BShare(v0, v1), BShare(z0, z1))
+
+    def rand(self, shape) -> jnp.ndarray:
+        return self._next("rand", shape)[0]
+
+    def mask_seed(self) -> int:
+        return int(self._next("seed", ())[0])
+
+    def remaining(self) -> dict:
+        """{class_key: unserved} — surplus after e.g. tol early-stop."""
+        return {k: len(p) - self._served[k] for k, p in self._pools.items()}

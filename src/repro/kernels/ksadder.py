@@ -51,11 +51,19 @@ def _kernel(x_ref, e0_ref, f0_ref, u0_ref, v0_ref, z0_ref,
     o_ref[...] = g
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("party0", "bm", "bn", "interpret"))
 def ks_carry_share(x, e0, f0, u0, v0, z0, el, fl, ul, vl, zl, *,
                    party0: bool, bm: int = 8, bn: int = 128,
                    interpret: bool = True):
     """All tensors (n, m) uint64 except the level-stacked ones
-    (6, 2, n, m). Returns this party's share of the carry word (n, m)."""
+    (6, 2, n, m). Returns this party's share of the carry word (n, m).
+
+    Jit'd: the interpret-mode emulation pays a large fixed dispatch cost per
+    *traced* grid step, so eager per-call execution was ~100x off the fused
+    op's real cost; under jit it compiles once per (shape, party) and runs at
+    XLA speed. Callers pick bm: 8 for MXU-aligned VMEM tiles on a real TPU,
+    n for a single grid cell in interpret mode (core/backend.py)."""
     n, m = x.shape
     assert n % bm == 0 and m % bn == 0, (n, m)
     grid = (n // bm, m // bn)

@@ -28,8 +28,17 @@ def ring_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128,
                 bk: int = 128, bn: int = 128,
                 interpret: bool = True) -> jnp.ndarray:
     """Ring matmul mod 2^32/2^64 with auto-padding (zero rows/cols are
-    ring-neutral, so padding is exact)."""
+    ring-neutral, so padding is exact).
+
+    In interpret mode the whole product runs as ONE grid cell on the
+    unpadded operands: MXU tile alignment only matters on a real TPU, and
+    padding a (1024, 16) x (16, 8) Beaver recombination up to 128-multiples
+    made the emulation do ~64x the necessary work (plus a per-grid-step
+    dispatch cost) — the 'pallas loses in interpret mode' artefact was
+    tiling, not the kernel."""
     n, k = a.shape[0], b.shape[1]
+    if interpret:
+        bm, bk, bn = a.shape[0], a.shape[1], b.shape[1]
     ap, bp = _pad2(a, bm, bk), _pad2(b, bk, bn)
     out = _modmatmul.modmatmul(ap, bp, bm=bm, bk=bk, bn=bn,
                                interpret=interpret)
@@ -64,10 +73,12 @@ def spmm(blocks, idx, counts, y, *, interpret: bool = True) -> jnp.ndarray:
     """Blocked-ELL sparse x dense (f32 / u32 / u64 ring — dtype of `blocks`
     dispatches). Asserts the dense operand fits VMEM (kernel keeps all of Y
     resident — DESIGN.md §4); pads Y's rows to the tile width bk (zero rows
-    are ring-neutral) and its columns to the lane width."""
+    are ring-neutral) and its columns to the lane width — the lane pad is a
+    real-TPU layout requirement only, and skipping it in interpret mode
+    avoids doing 128/k times the necessary tile work in emulation."""
     bk = blocks.shape[3]
     d, k = y.shape
-    dp, kp = (-d) % bk, (-k) % 128
+    dp, kp = (-d) % bk, 0 if interpret else (-k) % 128
     itemsize = jnp.dtype(y.dtype).itemsize
     assert (d + dp) * (k + kp) * itemsize <= VMEM_BUDGET_BYTES, \
         f"Y ({d}x{k}) exceeds the VMEM-resident budget; shard k or d first"

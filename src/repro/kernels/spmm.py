@@ -26,66 +26,90 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 
+def _tile_matmul(xb, yb, dtype):
+    if dtype == jnp.uint64:
+        # native uint64 lanes (interpret/CPU); on a real TPU this tile
+        # matmul extends to the 4-limb cascade of kernels/modmatmul
+        return jnp.matmul(xb, yb)
+    if dtype == jnp.uint32:
+        mask16 = jnp.uint32(0xFFFF)
+        x_lo = (xb & mask16).astype(jnp.int32)
+        x_hi = (xb >> 16).astype(jnp.int32)
+        y_lo = (yb & mask16).astype(jnp.int32)
+        y_hi = (yb >> 16).astype(jnp.int32)
+        dot = functools.partial(
+            jax.lax.dot_general,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return dot(x_lo, y_lo).astype(jnp.uint32) \
+            + ((dot(x_lo, y_hi) + dot(x_hi, y_lo)).astype(jnp.uint32) << 16)
+    return jax.lax.dot_general(
+        xb, yb, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
 def _kernel(idx_ref, cnt_ref, blocks_ref, y_ref, o_ref, *, bk: int,
-            max_blocks: int, dtype):
-    i = pl.program_id(0)
+            max_blocks: int, group: int, dtype):
+    """One grid cell handles `group` row blocks. group=1 is the TPU tiling
+    (one MXU-aligned row block per cell); group=nrb collapses the grid to a
+    single cell for interpret mode, where the emulation's fixed per-grid-step
+    cost — not the tile math — dominated the old (nrb,)-grid runtime 60x."""
     bm = blocks_ref.shape[2]
     k = y_ref.shape[1]
-    acc0 = jnp.zeros((bm, k), dtype)
 
-    def body(j, acc):
-        start = idx_ref[0, j].astype(jnp.int32) * jnp.int32(bk)
-        yb = pl.load(y_ref, (pl.ds(start, bk), slice(None)))
-        xb = blocks_ref[0, j]
-        if dtype == jnp.uint64:
-            # native uint64 lanes (interpret/CPU); on a real TPU this tile
-            # matmul extends to the 4-limb cascade of kernels/modmatmul
-            contrib = jnp.matmul(xb, yb)
-        elif dtype == jnp.uint32:
-            mask16 = jnp.uint32(0xFFFF)
-            x_lo = (xb & mask16).astype(jnp.int32)
-            x_hi = (xb >> 16).astype(jnp.int32)
-            y_lo = (yb & mask16).astype(jnp.int32)
-            y_hi = (yb >> 16).astype(jnp.int32)
-            dot = functools.partial(
-                jax.lax.dot_general,
-                dimension_numbers=(((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-            contrib = dot(x_lo, y_lo).astype(jnp.uint32) \
-                + ((dot(x_lo, y_hi) + dot(x_hi, y_lo)).astype(jnp.uint32) << 16)
-        else:
-            contrib = jax.lax.dot_general(
-                xb, yb, dimension_numbers=(((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-        keep = (j < cnt_ref[0]).astype(contrib.dtype)
-        return acc + keep * contrib
+    def row_block(g):
+        def body(j, acc):
+            start = idx_ref[g, j].astype(jnp.int32) * jnp.int32(bk)
+            yb = pl.load(y_ref, (pl.ds(start, bk), slice(None)))
+            xb = blocks_ref[g, j]
+            contrib = _tile_matmul(xb, yb, dtype)
+            keep = (j < cnt_ref[g]).astype(contrib.dtype)
+            return acc + keep * contrib
+        return jax.lax.fori_loop(0, max_blocks, body, jnp.zeros((bm, k), dtype))
 
-    o_ref[...] = jax.lax.fori_loop(0, max_blocks, body, acc0)
+    if group == 1:
+        o_ref[0] = row_block(0)
+    else:
+        def row(g, carry):
+            pl.store(o_ref, (g, slice(None), slice(None)), row_block(g))
+            return carry
+        jax.lax.fori_loop(0, group, row, 0)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret", "group"))
 def spmm_ell(blocks: jnp.ndarray, idx: jnp.ndarray, counts: jnp.ndarray,
-             y: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+             y: jnp.ndarray, *, interpret: bool = True,
+             group: int | None = None) -> jnp.ndarray:
     """blocks (nrb, maxb, bm, bk), idx (nrb, maxb) i32, counts (nrb,) i32,
-    y (d, k) -> (nrb*bm, k). dtype of `blocks` selects f32 / u32 / u64."""
+    y (d, k) -> (nrb*bm, k). dtype of `blocks` selects f32 / u32 / u64.
+
+    `group` row blocks are processed per grid cell (must divide nrb);
+    default: all of them in interpret mode (single cell — the emulation's
+    per-cell cost dwarfs the tile work), one per cell on a real TPU."""
     nrb, maxb, bm, bk = blocks.shape
     d, k = y.shape
+    if group is None:
+        group = nrb if interpret else 1
+    assert nrb % group == 0, (nrb, group)
     if blocks.dtype in (jnp.uint32, jnp.uint64):
         out_dtype = blocks.dtype
     else:
         out_dtype = jnp.float32
-    return pl.pallas_call(
-        functools.partial(_kernel, bk=bk, max_blocks=maxb, dtype=out_dtype),
-        grid=(nrb,),
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, max_blocks=maxb, group=group,
+                          dtype=out_dtype),
+        grid=(nrb // group,),
         in_specs=[
-            pl.BlockSpec((1, maxb), lambda i: (i, 0)),          # idx
-            pl.BlockSpec((1,), lambda i: (i,)),                 # counts
-            pl.BlockSpec((1, maxb, bm, bk), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((d, k), lambda i: (0, 0)),             # whole Y
+            pl.BlockSpec((group, maxb), lambda i: (i, 0)),       # idx
+            pl.BlockSpec((group,), lambda i: (i,)),              # counts
+            pl.BlockSpec((group, maxb, bm, bk), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),              # whole Y
         ],
-        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nrb * bm, k), out_dtype),
+        out_specs=pl.BlockSpec((group, bm, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nrb, bm, k), out_dtype),
         interpret=interpret,
     )(idx, counts, blocks, y.astype(out_dtype))
+    return out.reshape(nrb * bm, k)
 
 
 # ---------------------------------------------------------------------------

@@ -94,7 +94,7 @@ class ListDealer:
 
 def _iteration(xa_enc, xb_enc, mu: AShare, dealer, n: int, k: int,
                d_a: int, he_results: tuple | None = None,
-               backend=None) -> AShare:
+               backend=None, return_assignment: bool = False):
     """One vertical-partition online Lloyd iteration on shares (Alg. 3).
 
     he_results=None  -> dense-SS path: joint products via Beaver matmuls.
@@ -156,7 +156,46 @@ def _iteration(xa_enc, xb_enc, mu: AShare, dealer, n: int, k: int,
     mu_new = P.smul(ctx, num_s, AShare(r.s0[:, None], r.s1[:, None]),
                     trunc_f=f)
     guard = AShare(is_empty.s0[:, None], is_empty.s1[:, None])
-    return P.mux(ctx, guard, mu, mu_new)
+    out = P.mux(ctx, guard, mu, mu_new)
+    return (out, c) if return_assignment else out
+
+
+def materialize_offline(requests, dealer) -> list:
+    """Flat jnp tensor list the ListDealer consumes, in recorded order.
+    `dealer` is any triple provider (TrustedDealer on demand, PooledDealer
+    for the planned offline phase)."""
+    flat = []
+    for kind, shape in requests:
+        if kind == "matmul":
+            t = dealer.matmul_triple(*shape)
+        elif kind == "mul":
+            t = dealer.mul_triple(shape)
+        elif kind == "bin":
+            t = dealer.bin_triple(shape)
+            flat += [t.u.b0, t.u.b1, t.v.b0, t.v.b1, t.z.b0, t.z.b1]
+            continue
+        else:  # rand
+            flat.append(dealer.rand(shape))
+            continue
+        flat += [t.u.s0, t.u.s1, t.v.s0, t.v.s1, t.z.s0, t.z.s1]
+    return flat
+
+
+def pooled_offline_arrays(requests, seed: int, iters: int = 1,
+                          tag: str = "launch"):
+    """True offline phase for the pjit path: bulk-generate `iters`
+    iterations' worth of the recorded schedule with ONE stacked draw and one
+    batched ring op per shape-class, and return ([flat_per_iteration...],
+    dealer). Each flat list feeds one jit'd `_iteration` via its ListDealer;
+    the arrays are preallocated device slices, so consuming them adds no
+    host work to the online step. Bit-exact with `materialize_offline`
+    against a same-seeded TrustedDealer (tests/test_triples_pool.py)."""
+    from repro.core.triples import PlanRequest, PooledDealer, TriplePlan
+    plan = TriplePlan([PlanRequest(kind, tuple(shape) if kind != "matmul"
+                                   else shape, tag)
+                       for kind, shape in requests]).repeat(iters)
+    dealer = PooledDealer(plan, seed=seed)
+    return [materialize_offline(requests, dealer) for _ in range(iters)], dealer
 
 
 def record_offline_shapes(n: int, d: int, k: int, d_a: int,
@@ -252,6 +291,42 @@ def online_iteration_fn(n: int, d: int, k: int, d_a: int,
             jax.ShapeDtypeStruct((k, d), ring.NP_DTYPE)) \
         + tuple(he_specs) + tuple(flat_specs)
     return fn, args
+
+
+def fit_iteration_fn(n: int, d: int, k: int, d_a: int,
+                     backend: str = "auto"):
+    """`online_iteration_fn` variant backing SecureKMeans' pooled fast path
+    (dense vertical): returns (fn, arg ShapeDtypeStructs, requests) where
+    fn(xa, xb, mu0, mu1, *flat) -> (mu0', mu1', c0, c1) also exposes the
+    assignment shares, and `requests` is the offline schedule one call
+    consumes — feed it to `materialize_offline` against the PooledDealer."""
+    from repro.core.backend import get_backend
+    ring_backend = get_backend(backend)
+    dealer = RecordingDealer()
+
+    def run():
+        z = jnp.zeros((n, d_a), ring.DTYPE)
+        zb = jnp.zeros((n, d - d_a), ring.DTYPE)
+        mu = AShare(jnp.zeros((k, d), ring.DTYPE),
+                    jnp.zeros((k, d), ring.DTYPE))
+        return _iteration(z, zb, mu, dealer, n, k, d_a,
+                          backend=ring_backend, return_assignment=True)
+
+    jax.eval_shape(run)
+    requests = list(dealer.requests)
+    flat_specs = offline_tensor_specs(requests, n)
+
+    def fn(xa_enc, xb_enc, mu_s0, mu_s1, *flat):
+        mu, c = _iteration(xa_enc, xb_enc, AShare(mu_s0, mu_s1),
+                           ListDealer(list(flat)), n, k, d_a,
+                           backend=ring_backend, return_assignment=True)
+        return mu.s0, mu.s1, c.s0, c.s1
+
+    args = (jax.ShapeDtypeStruct((n, d_a), ring.NP_DTYPE),
+            jax.ShapeDtypeStruct((n, d - d_a), ring.NP_DTYPE),
+            jax.ShapeDtypeStruct((k, d), ring.NP_DTYPE),
+            jax.ShapeDtypeStruct((k, d), ring.NP_DTYPE)) + tuple(flat_specs)
+    return fn, args, requests
 
 
 def arg_shardings(mesh, args, n: int):

@@ -15,26 +15,11 @@ from repro.core.kmeans import KMeansConfig, SecureKMeans, _encode_np
 from repro.core.sharing import AShare, rec, rec_real, share
 from repro.core.sparse import CSRMatrix, secure_sparse_matmul
 from repro.core.triples import TrustedDealer
-from repro.launch.kmeans_step import online_iteration_fn, record_offline_shapes
+from repro.launch.kmeans_step import (materialize_offline,
+                                      online_iteration_fn,
+                                      record_offline_shapes)
 
-
-def _materialize_offline(requests, dealer: TrustedDealer):
-    """Produce the flat jnp tensor list the ListDealer consumes, in order."""
-    flat = []
-    for kind, shape in requests:
-        if kind == "matmul":
-            t = dealer.matmul_triple(*shape)
-        elif kind == "mul":
-            t = dealer.mul_triple(shape)
-        elif kind == "bin":
-            t = dealer.bin_triple(shape)
-            flat += [t.u.b0, t.u.b1, t.v.b0, t.v.b1, t.z.b0, t.z.b1]
-            continue
-        else:
-            flat.append(dealer.rand(shape))
-            continue
-        flat += [t.u.s0, t.u.s1, t.v.s0, t.v.s1, t.z.s0, t.z.s1]
-    return flat
+_materialize_offline = materialize_offline  # promoted into launch/kmeans_step
 
 
 @pytest.mark.parametrize("sparse", [False, True])

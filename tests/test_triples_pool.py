@@ -1,0 +1,193 @@
+"""Offline planner/pool tests: the PooledDealer must be a bit-exact,
+zero-host-work replacement for the on-demand TrustedDealer.
+
+The load-bearing property: bulk per-class generation (one stacked RNG draw
++ one batched ring op per shape-class) serves the SAME uint64 words as the
+on-demand dealer under the same seed — at the single-triple level, at the
+pjit flat-tensor level, and through a full SecureKMeans.fit for all four
+partition x sparsity combinations."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+from repro.core.triples import (PlanningDealer, PlanRequest, PooledDealer,
+                                PoolExhaustedError, TriplePlan, TrustedDealer)
+from repro.launch.kmeans_step import (materialize_offline,
+                                      pooled_offline_arrays,
+                                      record_offline_shapes)
+
+RNG = np.random.default_rng(77)
+
+
+def _consume(dealer, requests):
+    """Serve a request schedule, returning every share word as numpy."""
+    out = []
+    for r in requests:
+        if r.kind == "matmul":
+            t = dealer.matmul_triple(*r.shape, tag=r.tag)
+            out += [t.u.s0, t.u.s1, t.v.s0, t.v.s1, t.z.s0, t.z.s1]
+        elif r.kind == "mul":
+            t = dealer.mul_triple(r.shape, tag=r.tag)
+            out += [t.u.s0, t.u.s1, t.v.s0, t.v.s1, t.z.s0, t.z.s1]
+        elif r.kind == "bin":
+            t = dealer.bin_triple(r.shape, tag=r.tag)
+            out += [t.u.b0, t.u.b1, t.v.b0, t.v.b1, t.z.b0, t.z.b1]
+        elif r.kind == "rand":
+            out.append(dealer.rand(r.shape))
+        else:
+            out.append(np.uint64(dealer.mask_seed()))
+    return [np.asarray(a, np.uint64) for a in out]
+
+
+@given(st.lists(st.sampled_from(["matmul", "mul", "bin", "rand", "seed"]),
+                min_size=1, max_size=24),
+       st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=20)
+def test_pooled_replays_trusted_dealer_bit_exact(kinds, seed):
+    """Random interleaved schedules over a few shape-classes: every served
+    word identical between on-demand and bulk generation."""
+    shapes = {"matmul": ((5, 3), (3, 2)), "mul": (4, 3), "bin": (2, 7),
+              "rand": (6,), "seed": ()}
+    requests = [PlanRequest(k, shapes[k], "t") for k in kinds]
+    plan = TriplePlan(requests)
+    a = _consume(TrustedDealer(seed=seed), requests)
+    b = _consume(PooledDealer(plan, seed=seed), requests)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_pooled_mixed_shapes_same_kind():
+    """Two shape-classes of the same kind keep separate streams/cursors."""
+    requests = [PlanRequest("mul", (3, 3), "a"), PlanRequest("mul", (5,), "b"),
+                PlanRequest("mul", (3, 3), "a"), PlanRequest("mul", (3, 3), "c")]
+    plan = TriplePlan(requests)
+    a = _consume(TrustedDealer(seed=9), requests)
+    b = _consume(PooledDealer(plan, seed=9), requests)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# fit-level property (satellite): all four partition x sparsity combos
+# ---------------------------------------------------------------------------
+
+def _blobs(n, d, k, seed, sparse_frac=0.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-4, 4, (k, d))
+    lab = rng.integers(0, k, n)
+    x = centers[lab] + rng.normal(0, 0.3, (n, d))
+    if sparse_frac:
+        x = x * (rng.random((n, d)) >= sparse_frac)
+    return x
+
+
+@pytest.mark.parametrize("partition", ["vertical", "horizontal"])
+@pytest.mark.parametrize("sparse", [False, True])
+def test_fit_pooled_bit_exact_vs_on_demand(partition, sparse):
+    """Same seed -> identical share words, dealer counts, and offline
+    CommLog tallies, whether triples are synthesized on demand inside the
+    loop or planned + bulk-generated + pooled up front. The dense-vertical
+    combo additionally exercises the compiled single-launch fast path."""
+    n, d, k = 48, 4, 2
+    x = _blobs(n, d, k, seed=11, sparse_frac=0.5 if sparse else 0.0)
+    if partition == "vertical":
+        a, b = x[:, :2], x[:, 2:]
+    else:
+        a, b = x[:24], x[24:]
+    res = {}
+    for off in ("on_demand", "pooled"):
+        cfg = KMeansConfig(k=k, iters=2, partition=partition, sparse=sparse,
+                           seed=5, backend="xla", offline=off)
+        res[off] = SecureKMeans(cfg).fit(a, b)
+    r0, r1 = res["on_demand"], res["pooled"]
+    for field in ("centroids", "assignment"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r0, field).s0, np.uint64),
+            np.asarray(getattr(r1, field).s0, np.uint64))
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r0, field).s1, np.uint64),
+            np.asarray(getattr(r1, field).s1, np.uint64))
+    assert (r0.dealer.n_matmul, r0.dealer.n_mul, r0.dealer.n_bin) == \
+           (r1.dealer.n_matmul, r1.dealer.n_mul, r1.dealer.n_bin)
+    assert r0.log.by_tag("offline") == r1.log.by_tag("offline")
+    assert r0.log.by_tag("online") == r1.log.by_tag("online")
+
+
+def test_fit_pooled_nondefault_f_falls_back_bit_exact():
+    """The compiled fast path hardcodes f = ring.F; a custom precision must
+    take the eager pooled loop and still replay bit-exact."""
+    x = _blobs(40, 4, 2, seed=3)
+    res = {}
+    for off in ("on_demand", "pooled"):
+        cfg = KMeansConfig(k=2, iters=2, seed=5, f=16, backend="xla",
+                           offline=off)
+        res[off] = SecureKMeans(cfg).fit(x[:, :2], x[:, 2:])
+    np.testing.assert_array_equal(
+        np.asarray(res["on_demand"].centroids.s0, np.uint64),
+        np.asarray(res["pooled"].centroids.s0, np.uint64))
+    np.testing.assert_allclose(res["pooled"].centroids_plain(f=16),
+                               res["on_demand"].centroids_plain(f=16))
+
+
+def test_fit_pooled_with_tol_leaves_surplus():
+    """A tol early-stop only leaves pool surplus — never an error."""
+    x = _blobs(200, 4, 3, seed=4)
+    cfg = KMeansConfig(k=3, iters=50, seed=5, tol=1e-6, backend="xla",
+                       offline="pooled")
+    res = SecureKMeans(cfg).fit(x[:, :2], x[:, 2:])
+    assert res.iters_run < 50
+    assert all(v >= 0 for v in res.dealer.remaining().values())
+    assert any(v > 0 for v in res.dealer.remaining().values())
+
+
+# ---------------------------------------------------------------------------
+# pool exhaustion / shape-mismatch semantics
+# ---------------------------------------------------------------------------
+
+def test_pool_exhaustion_raises():
+    plan = TriplePlan([PlanRequest("mul", (2, 2), "t")])
+    dealer = PooledDealer(plan, seed=1)
+    dealer.mul_triple((2, 2))
+    with pytest.raises(PoolExhaustedError, match="exhausted"):
+        dealer.mul_triple((2, 2))
+
+
+def test_pool_unplanned_class_raises():
+    plan = TriplePlan([PlanRequest("mul", (2, 2), "t")])
+    dealer = PooledDealer(plan, seed=1)
+    with pytest.raises(PoolExhaustedError, match="never"):
+        dealer.mul_triple((3, 3))
+    with pytest.raises(PoolExhaustedError):
+        dealer.bin_triple((2, 2))
+
+
+def test_matmul_triple_shape_mismatch_raises_value_error():
+    """Planner bugs must surface under `python -O` too (no bare asserts)."""
+    for dealer in (TrustedDealer(seed=0), PlanningDealer(),
+                   PooledDealer(TriplePlan([]), seed=0)):
+        with pytest.raises(ValueError, match=r"inner dims disagree.*\(2, 4\)"):
+            dealer.matmul_triple((2, 4), (3, 5))
+
+
+# ---------------------------------------------------------------------------
+# pjit path consumes the pool
+# ---------------------------------------------------------------------------
+
+def test_pooled_offline_arrays_match_trusted_dealer():
+    """The launch-path bulk offline arrays equal the on-demand flat list,
+    tensor for tensor, across multiple iterations from one pool."""
+    n, d, k, d_a = 16, 4, 2, 2
+    requests = record_offline_shapes(n, d, k, d_a)
+    iters = 2
+    flats, dealer = pooled_offline_arrays(requests, seed=23, iters=iters)
+    assert len(flats) == iters
+    trusted = TrustedDealer(seed=23)
+    for flat in flats:
+        want = materialize_offline(requests, trusted)
+        assert len(flat) == len(want)
+        for got, ref in zip(flat, want):
+            np.testing.assert_array_equal(np.asarray(got, np.uint64),
+                                          np.asarray(ref, np.uint64))
+    assert all(v == 0 for v in dealer.remaining().values())
