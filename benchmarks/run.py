@@ -35,9 +35,10 @@ def main() -> None:
         # `--only kernels_interpret --quick` is the CI smoke entry: per-op
         # xla-vs-pallas timings, persisted to benchmarks/BENCH_kernels.json
         "kernels_interpret": lambda: kernel_bench.run(quick=args.quick),
-        # `--only online_offline --quick`: measured offline/online split of
-        # the pooled-dealer fit vs the on-demand baseline, persisted to
-        # benchmarks/BENCH_online.json
+        # `--only online_offline --quick` is the per-PR perf smoke: measured
+        # offline/online split of the pooled/streamed fits vs the on-demand
+        # baseline for ALL FOUR partition x sparsity combos, persisted to
+        # benchmarks/BENCH_online.json (full mode adds an n=4096 row)
         "online_offline": lambda: online_offline.run(quick=args.quick),
     }
     derived_fns = {

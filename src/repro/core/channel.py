@@ -75,6 +75,13 @@ class CommLog:
             if phase is None or p == phase:
                 self.rounds[(p, t)] += v
 
+    def copy(self) -> "CommLog":
+        """Independent tally copy — what the plan cache hands out, so one
+        fit's replay merges never mutate the cached per-iteration log."""
+        out = CommLog()
+        out.merge(self)
+        return out
+
     def snapshot(self) -> dict:
         return {"bytes": dict(self.bytes), "rounds": dict(self.rounds)}
 

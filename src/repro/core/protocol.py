@@ -47,6 +47,16 @@ class Ctx:
     def send(self, nbytes: int, rounds: int = 1) -> None:
         self.log.send(nbytes, tag=self.tag, phase="online", rounds=rounds)
 
+    def fork(self, tag: str | None = None) -> "Ctx":
+        """Child ctx sharing the dealer and backend but with a SCRATCH log.
+        Used by the split-launch fast path's Protocol-2 host callbacks: the
+        compiled programs' shape-determined traffic (the exchange's
+        included) is replayed from the planning trace, so the live exchange
+        must consume the dealer streams without double-logging bytes."""
+        return Ctx(dealer=self.dealer, log=CommLog(),
+                   tag=self.tag if tag is None else tag,
+                   backend=self.backend)
+
 
 def make_ctx(seed: int = 0, backend: RingBackend | str | None = None) -> Ctx:
     log = CommLog()

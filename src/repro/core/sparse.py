@@ -72,6 +72,25 @@ class CSRMatrix:
             out[i, self.indices[lo:hi]] = self.data[lo:hi]
         return out
 
+    def transpose(self) -> "CSRMatrix":
+        """X^T in CSR, nnz-proportional (counting sort by column) — no
+        densify round-trip. Identical layout to `from_dense(X.T)`: rows of
+        the transpose in order, each row's entries ordered by original row
+        index (stable sort). Used by the C^T X joint products, which apply
+        Protocol 2 through the transpose identity <C>^T X = (X^T <C>)^T.
+        Memoized: Lloyd consumes the same transpose every iteration."""
+        t = getattr(self, "_transpose", None)
+        if t is None:
+            n, d = self.shape
+            counts = np.bincount(self.indices, minlength=d)
+            indptr = np.concatenate([[0], np.cumsum(counts)])
+            order = np.argsort(self.indices, kind="stable")
+            rows = np.repeat(np.arange(n, dtype=np.int64),
+                             np.diff(self.indptr))
+            t = CSRMatrix(indptr, rows[order], self.data[order], (d, n))
+            self._transpose = t
+        return t
+
 
 def secure_sparse_matmul(ctx: Ctx, x: CSRMatrix, y_share_b: np.ndarray, he,
                          *, value_bits: int | None = None,

@@ -18,6 +18,12 @@ Provider flavours:
   phase with zero host work. Bit-exact against `TrustedDealer` under the same
   seed: both draw from identical per-class PCG64 streams, and a stacked
   full-range uint64 draw equals the concatenation of the per-request draws.
+* `StreamingPooledDealer` — the pooled dealer's generation chunked into
+  per-iteration *tranches*, double-buffered on a background worker: tranche
+  t+1 is generated while iteration t's launches consume tranche t, so peak
+  pool residency is O(1 iteration) — independent of `iters` — and fits whose
+  total pool exceeds device memory become possible. Bit-exact with both other
+  dealers (persistent per-class streams + draw concatenation).
 * OT-based generation is *cost-modelled* (we cannot run a real network OT
   extension here): per 64-bit scalar product the Gilboa/ABY protocol transfers
   l correlated OTs of (kappa + l)-bit strings per direction. Offline bytes and
@@ -127,6 +133,27 @@ def _check_matmul_dims(shape_a, shape_b) -> None:
         raise ValueError(
             f"matmul triple inner dims disagree: A is {tuple(shape_a)}, "
             f"B is {tuple(shape_b)}")
+
+
+def _check_elemwise_shape(kind: str, shape) -> None:
+    """Elementwise (mul/bin) triples take ONE tensor shape; a nested or
+    non-integer 'shape' is a planner bug (e.g. a matmul-style ((n,d),(d,k))
+    pair leaking into mul_triple) and must raise, matching the matmul inner-
+    dim check above."""
+    try:
+        dims = tuple(shape)
+    except TypeError:
+        raise ValueError(
+            f"{kind} triple shape must be an iterable of ints, "
+            f"got {shape!r}") from None
+    for s in dims:
+        if isinstance(s, bool) or not isinstance(s, (int, np.integer)):
+            raise ValueError(
+                f"{kind} triple shape must be a flat tuple of ints, got "
+                f"{dims!r} (offending entry {s!r})")
+        if int(s) < 0:
+            raise ValueError(
+                f"{kind} triple shape has a negative dimension: {dims!r}")
 
 
 def _gen_matmul(rng, sa, sb, count: int):
@@ -241,6 +268,7 @@ class TrustedDealer:
         return tr
 
     def mul_triple(self, shape, *, tag: str = "misc") -> MulTriple:
+        _check_elemwise_shape("mul", shape)
         t0 = time.perf_counter()
         u0, u1, v0, v1, z0, z1 = self._one("mul", shape)
         tr = MulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
@@ -251,6 +279,7 @@ class TrustedDealer:
 
     def bin_triple(self, shape, *, tag: str = "misc") -> BinTriple:
         """Bit-packed binary AND triples: each uint64 lane = 64 AND gates."""
+        _check_elemwise_shape("bin", shape)
         t0 = time.perf_counter()
         u0, u1, v0, v1, z0, z1 = self._one("bin", shape)
         tr = BinTriple(BShare(u0, u1), BShare(v0, v1), BShare(z0, z1))
@@ -334,11 +363,13 @@ class PlanningDealer:
                             AShare(self._z((n, k)), self._z((n, k))))
 
     def mul_triple(self, shape, *, tag: str = "misc"):
+        _check_elemwise_shape("mul", shape)
         self.requests.append(PlanRequest("mul", tuple(shape), tag))
         z = self._z(shape)
         return MulTriple(AShare(z, z), AShare(z, z), AShare(z, z))
 
     def bin_triple(self, shape, *, tag: str = "misc"):
+        _check_elemwise_shape("bin", shape)
         self.requests.append(PlanRequest("bin", tuple(shape), tag))
         z = self._z(shape)
         return BinTriple(BShare(z, z), BShare(z, z), BShare(z, z))
@@ -355,6 +386,53 @@ class PlanningDealer:
 # ---------------------------------------------------------------------------
 # PooledDealer — planned bulk generation, zero-host-work serving
 # ---------------------------------------------------------------------------
+
+def _account_offline_plan(plan: TriplePlan, log: CommLog) -> float:
+    """Log a plan's modelled OT generation traffic (identical totals to the
+    on-demand dealer serving the same schedule); returns the modelled OT
+    wall-time. Shared by the pooled and streaming dealers."""
+    modelled_s = 0.0
+    groups: dict[tuple, int] = {}
+    for r in plan.requests:
+        key = (r.kind, _class_key(r.kind, r.shape), r.tag)
+        groups[key] = groups.get(key, 0) + 1
+    for (kind, key, tag), count in groups.items():
+        if kind == "matmul":
+            (n, d), (_, k) = key[1], key[2]
+            sp = n * d * k
+            log.send(count * ot_mul_triple_bytes(sp), tag=tag,
+                     phase="offline", rounds=2 * count)
+            modelled_s += count * sp / OT_TRIPLES_PER_SEC
+        elif kind == "mul":
+            sp = _nelem(key[1])
+            log.send(count * ot_mul_triple_bytes(sp), tag=tag,
+                     phase="offline", rounds=2 * count)
+            modelled_s += count * sp / OT_TRIPLES_PER_SEC
+        elif kind == "bin":
+            n_bits = _nelem(key[1]) * 64
+            log.send(count * ot_bin_triple_bytes(n_bits), tag=tag,
+                     phase="offline", rounds=2 * count)
+            modelled_s += count * n_bits / OT_BIN_TRIPLES_PER_SEC
+    return modelled_s
+
+
+def _gen_tranche(rngs: dict, counts: dict):
+    """Generate one {class key: [per-request device-array tuples]} tranche
+    from persistent per-class RNG streams. Because a class's stream is
+    advanced by exactly count*words_per_request words per call, consecutive
+    tranches concatenate to the single stacked draw PooledDealer performs —
+    the bit-exactness property, chunked."""
+    pools: dict[tuple, list] = {}
+    nbytes = 0
+    for key, count in counts.items():
+        kind = key[0]
+        shape = key[1:] if kind == "matmul" else key[1]
+        arrays = _gen_class(rngs[key], kind, shape, count)
+        stacked = tuple(jnp.asarray(a) for a in arrays)
+        pools[key] = [tuple(a[i] for a in stacked) for i in range(count)]
+        nbytes += sum(int(a.size) * 8 for a in stacked)
+    return pools, nbytes
+
 
 class PooledDealer:
     """Executes a `TriplePlan` up front and serves it back with device-array
@@ -382,49 +460,16 @@ class PooledDealer:
         self.n_matmul = 0
         self.n_mul = 0
         self.n_bin = 0
-        self._pools: dict[tuple, tuple] = {}    # class key -> stacked arrays
         self._served: dict[tuple, int] = {}     # class key -> cursor
         counts = plan.class_counts()
-        self.pool_bytes = 0
-        for key, count in counts.items():
-            kind = key[0]
-            shape = key[1:] if kind == "matmul" else key[1]
-            arrays = _gen_class(_class_rng(seed, key), kind, shape, count)
-            # one host->device upload per class, then split into per-request
-            # views HERE (still offline) so online serving is a plain list
-            # index — no gather launches on the critical path
-            stacked = tuple(jnp.asarray(a) for a in arrays)
-            self._pools[key] = [tuple(a[i] for a in stacked)
-                                for i in range(count)]
-            self._served[key] = 0
-            self.pool_bytes += sum(int(a.size) * 8 for a in stacked)
-        self._account_offline(plan)
+        # one host->device upload per class, then split into per-request
+        # views HERE (still offline) so online serving is a plain list
+        # index — no gather launches on the critical path
+        rngs = {key: _class_rng(seed, key) for key in counts}
+        self._pools, self.pool_bytes = _gen_tranche(rngs, counts)
+        self._served = {key: 0 for key in counts}
+        self.modelled_ot_seconds = _account_offline_plan(plan, self.log)
         self.dealer_seconds = time.perf_counter() - t0
-
-    # -- offline accounting (identical totals to the on-demand dealer) ----
-    def _account_offline(self, plan: TriplePlan) -> None:
-        groups: dict[tuple, int] = {}
-        for r in plan.requests:
-            k = (r.kind, _class_key(r.kind, r.shape), r.tag)
-            groups[k] = groups.get(k, 0) + 1
-        for (kind, key, tag), count in groups.items():
-            if kind == "matmul":
-                (n, d), (_, k) = key[1], key[2]
-                sp = n * d * k
-                self.log.send(count * ot_mul_triple_bytes(sp), tag=tag,
-                              phase="offline", rounds=2 * count)
-                self.modelled_ot_seconds += count * sp / OT_TRIPLES_PER_SEC
-            elif kind == "mul":
-                sp = _nelem(key[1])
-                self.log.send(count * ot_mul_triple_bytes(sp), tag=tag,
-                              phase="offline", rounds=2 * count)
-                self.modelled_ot_seconds += count * sp / OT_TRIPLES_PER_SEC
-            elif kind == "bin":
-                n_bits = _nelem(key[1]) * 64
-                self.log.send(count * ot_bin_triple_bytes(n_bits), tag=tag,
-                              phase="offline", rounds=2 * count)
-                self.modelled_ot_seconds += \
-                    count * n_bits / OT_BIN_TRIPLES_PER_SEC
 
     # -- serving ---------------------------------------------------------
     def _next(self, kind: str, shape) -> tuple:
@@ -450,11 +495,13 @@ class PooledDealer:
         return MatmulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
 
     def mul_triple(self, shape, *, tag: str = "misc") -> MulTriple:
+        _check_elemwise_shape("mul", shape)
         u0, u1, v0, v1, z0, z1 = self._next("mul", shape)
         self.n_mul += 1
         return MulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
 
     def bin_triple(self, shape, *, tag: str = "misc") -> BinTriple:
+        _check_elemwise_shape("bin", shape)
         u0, u1, v0, v1, z0, z1 = self._next("bin", shape)
         self.n_bin += 1
         return BinTriple(BShare(u0, u1), BShare(v0, v1), BShare(z0, z1))
@@ -468,3 +515,209 @@ class PooledDealer:
     def remaining(self) -> dict:
         """{class_key: unserved} — surplus after e.g. tol early-stop."""
         return {k: len(p) - self._served[k] for k, p in self._pools.items()}
+
+
+# ---------------------------------------------------------------------------
+# StreamingPooledDealer — double-buffered per-iteration pool generation
+# ---------------------------------------------------------------------------
+
+class StreamingPooledDealer:
+    """`PooledDealer` semantics with O(1-iteration) device residency.
+
+    Instead of materializing `iters` iterations' worth of every shape-class
+    up front (pool residency O(iters), capping fit size at device memory),
+    the plan of ONE iteration is generated as a *tranche* — one stacked draw
+    + one batched ring op + one upload per shape-class, exactly like the bulk
+    dealer but with per-iteration counts — and tranche t+1 is generated on a
+    background worker WHILE iteration t's launches consume tranche t. At any
+    moment at most `prefetch` tranches are alive (double-buffered by
+    default), so peak residency is independent of `iters`.
+
+    Bit-exact with ``PooledDealer(iter_plan.repeat(iters), seed)``: each
+    shape-class keeps ONE persistent PCG64 stream across tranches, and the
+    uint64 draw-concatenation property makes `iters` sequential per-iteration
+    draws identical to the single stacked draw (property-tested in
+    tests/test_triples_pool.py).
+
+    Tranche advance is request-counted: the online phase consumes exactly
+    ``len(iter_plan)`` requests per iteration (the plan IS the per-iteration
+    schedule), so when that many have been served the current tranche's
+    device buffers are dropped, the prefetched tranche becomes current, and
+    generation of the next one is dispatched. Serving past the per-iteration
+    class count — or an unplanned class — raises `PoolExhaustedError` just
+    like the bulk dealer.
+
+    Timing accounting: ``dealer_seconds`` is construction (first-tranche)
+    time only; generation overlapped with the online loop accumulates in
+    ``gen_seconds`` (worker wall-time) and ``wait_seconds`` (time the online
+    loop blocked on a tranche that was not ready — real online stalls, left
+    IN the caller's online wall-clock on purpose).
+    """
+
+    def __init__(self, iter_plan: TriplePlan, iters: int, seed: int = 0,
+                 log: CommLog | None = None, prefetch: int = 2,
+                 async_gen: bool = True):
+        t0 = time.perf_counter()
+        self.iter_plan = TriplePlan(list(iter_plan.requests))
+        self.iters = int(iters)
+        self.seed = seed
+        self.log = log if log is not None else CommLog()
+        self.n_matmul = 0
+        self.n_mul = 0
+        self.n_bin = 0
+        self._iter_counts = self.iter_plan.class_counts()
+        self._per_iter = len(self.iter_plan)
+        self._rngs = {key: _class_rng(seed, key) for key in self._iter_counts}
+        self.modelled_ot_seconds = _account_offline_plan(
+            self.iter_plan.repeat(self.iters), self.log)
+        self.gen_seconds = 0.0
+        self.wait_seconds = 0.0
+        self.pool_bytes = 0          # PEAK concurrent device residency
+        self._live_bytes = 0
+        import threading
+        self._lock = threading.Lock()
+        self._executor = None
+        if async_gen:
+            from concurrent.futures import ThreadPoolExecutor
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="triple-dealer")
+        self._pending: list = []     # generated-or-in-flight tranches, FIFO
+        self._next_gen = 0           # next tranche index to dispatch
+        self._current: dict | None = None
+        self._current_bytes = 0
+        self._cursors: dict[tuple, int] = {}
+        self._served_in_tranche = 0
+        self.served_iters = 0
+        for _ in range(max(1, prefetch)):
+            self._dispatch()
+        if self._per_iter and self.iters:
+            self._advance()
+        # the first-tranche wait is construction (offline) time, already in
+        # dealer_seconds — wait_seconds reports ONLINE stalls only
+        self.wait_seconds = 0.0
+        self.dealer_seconds = time.perf_counter() - t0
+
+    # -- tranche lifecycle ----------------------------------------------
+    def _generate(self):
+        t0 = time.perf_counter()
+        pools, nbytes = _gen_tranche(self._rngs, self._iter_counts)
+        with self._lock:
+            self.gen_seconds += time.perf_counter() - t0
+            self._live_bytes += nbytes
+            self.pool_bytes = max(self.pool_bytes, self._live_bytes)
+        return pools, nbytes
+
+    def _dispatch(self) -> None:
+        """Queue generation of the next tranche (async on the worker). The
+        single worker serializes tranches, so the per-class streams advance
+        in tranche order no matter when the futures are submitted."""
+        if self._next_gen >= self.iters:
+            return
+        self._next_gen += 1
+        if self._executor is None:
+            self._pending.append(("done", self._generate()))
+        else:
+            self._pending.append(("fut", self._executor.submit(self._generate)))
+
+    def _advance(self) -> None:
+        kind, payload = self._pending.pop(0)
+        t0 = time.perf_counter()
+        pools, nbytes = payload.result() if kind == "fut" else payload
+        self.wait_seconds += time.perf_counter() - t0
+        self._current, self._current_bytes = pools, nbytes
+        self._cursors = {}
+        self._served_in_tranche = 0
+
+    def _drop_current(self) -> None:
+        self._current = None
+        with self._lock:
+            self._live_bytes -= self._current_bytes
+        self._current_bytes = 0
+
+    def _finish_tranche(self) -> None:
+        """Drop the consumed tranche and queue the next generation. The
+        ADVANCE to the prefetched tranche is deferred to the next serve
+        call: blocking here would make the LAST iteration of a tol
+        early-stopped fit stall on randomness it is about to throw away."""
+        self.served_iters += 1
+        self._drop_current()
+        self._cursors = {}
+        self._served_in_tranche = 0
+        self._dispatch()
+        if self.served_iters >= self.iters and self._executor is not None:
+            self._executor.shutdown(wait=False)
+
+    # -- serving ---------------------------------------------------------
+    def _next(self, kind: str, shape) -> tuple:
+        key = _class_key(kind, shape)
+        per_iter = self._iter_counts.get(key)
+        if per_iter is None:
+            raise PoolExhaustedError(
+                f"no pool for {kind} {shape}: the offline plan never "
+                "scheduled this shape-class (planner/online mismatch)")
+        if self._current is None and self.served_iters < self.iters:
+            self._advance()                  # lazy: first request of an iter
+        i = self._cursors.get(key, 0)
+        if self._current is None or i >= per_iter:
+            raise PoolExhaustedError(
+                f"pool exhausted for {kind} {shape}: planned {per_iter} "
+                f"requests/iteration x {self.iters} iterations, online "
+                "asked for more")
+        self._cursors[key] = i + 1
+        out = self._current[key][i]
+        self._served_in_tranche += 1
+        if self._served_in_tranche == self._per_iter:
+            self._finish_tranche()
+        return out
+
+    def matmul_triple(self, shape_a, shape_b, *, tag: str = "misc") -> MatmulTriple:
+        _check_matmul_dims(shape_a, shape_b)
+        u0, u1, v0, v1, z0, z1 = self._next(
+            "matmul", (tuple(shape_a), tuple(shape_b)))
+        self.n_matmul += 1
+        return MatmulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
+
+    def mul_triple(self, shape, *, tag: str = "misc") -> MulTriple:
+        _check_elemwise_shape("mul", shape)
+        u0, u1, v0, v1, z0, z1 = self._next("mul", shape)
+        self.n_mul += 1
+        return MulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
+
+    def bin_triple(self, shape, *, tag: str = "misc") -> BinTriple:
+        _check_elemwise_shape("bin", shape)
+        u0, u1, v0, v1, z0, z1 = self._next("bin", shape)
+        self.n_bin += 1
+        return BinTriple(BShare(u0, u1), BShare(v0, v1), BShare(z0, z1))
+
+    def rand(self, shape) -> jnp.ndarray:
+        return self._next("rand", shape)[0]
+
+    def mask_seed(self) -> int:
+        return int(self._next("seed", ())[0])
+
+    def remaining(self) -> dict:
+        """{class_key: unserved across ALL remaining iterations} — surplus
+        after e.g. a tol early-stop (undispatched tranches are never even
+        generated)."""
+        rem_tranches = self.iters - self.served_iters
+        out = {}
+        for key, c in self._iter_counts.items():
+            out[key] = rem_tranches * c - self._cursors.get(key, 0)
+        return out
+
+    def close(self) -> None:
+        """Drop buffers and stop the worker — called by an early-stopped
+        fit so the prefetched tranches and the executor thread don't outlive
+        the loop (idempotent; a fully-served fit has already shut the worker
+        down via the last tranche). `remaining()` stays valid after close:
+        it is pure counter arithmetic."""
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)   # let in-flight gen finish
+        for kind, payload in self._pending:
+            pools, nbytes = payload.result() if kind == "fut" else payload
+            del pools
+            with self._lock:
+                self._live_bytes -= nbytes
+        self._pending.clear()
+        if self._current is not None:
+            self._drop_current()

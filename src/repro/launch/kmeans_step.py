@@ -1,10 +1,30 @@
-"""The paper's online Lloyd iteration as a pjit-able pure function.
+"""The paper's online Lloyd iteration as pjit-able pure programs.
 
 The offline phase (Beaver triples, B2A randomness) is materialized as
 *function inputs*: a RecordingDealer first traces the protocol to enumerate
 every correlated-randomness tensor the iteration consumes (their shapes are
 data-independent — that's WHY the offline phase exists), then the real
 lowering consumes them from the argument list via a ListDealer.
+
+Program split (DESIGN.md §9): one online iteration is TWO compiled programs
+with an optional host-side exchange between them —
+
+  S1  distances + tournament argmin, ending at the assignment shares. The
+      joint public-x-share products are Beaver matmuls inside the program
+      (dense) or Protocol-2 HE results entering as share INPUTS (sparse);
+      the distance-phase HE results depend only on the centroid shares, so
+      the host computes them before launching S1.
+  S2  (sparse only, not a program) the mid-iteration Protocol-2 exchange:
+      the update-phase joint products need the assignment shares S1 just
+      produced, so the host runs `core/sparse.secure_sparse_matmul` on them
+      between the launches — a first-class callback, not a re-trace.
+  S3  centroid update: C^T X assembly, empty-cluster guard, Newton-Raphson
+      division, MUX — consuming the S2 results as inputs (sparse) or Beaver
+      matmuls (dense).
+
+Every partition x sparsity combo lowers through the same two bodies,
+parameterized by a `FitGeometry`; `fit_programs` AOT-compiles and caches the
+pair per (geometry, backend).
 
 Sharding: sample-major tensors (n, ...) are sharded over ('pod','data') —
 each MPC *party* owns a slice of the pod in production, and its sample rows
@@ -15,7 +35,7 @@ data-parallel reduction.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -92,58 +112,168 @@ class ListDealer:
         return self._pop()
 
 
-def _iteration(xa_enc, xb_enc, mu: AShare, dealer, n: int, k: int,
-               d_a: int, he_results: tuple | None = None,
-               backend=None, return_assignment: bool = False):
-    """One vertical-partition online Lloyd iteration on shares (Alg. 3).
+# ---------------------------------------------------------------------------
+# FitGeometry — static shape info of one partition x sparsity combo
+# ---------------------------------------------------------------------------
 
-    he_results=None  -> dense-SS path: joint products via Beaver matmuls.
-    he_results=(...) -> sparsity-aware path (paper Sec 4.3): the four joint
-    products are computed host-side by Protocol 2 (HE over the plaintext
-    sparse X) and enter the mesh program as fresh share INPUTS — the
-    nnz-independent n*d Beaver traffic and its triple matmuls vanish from
-    the TPU roofline, which is exactly the paper's claim mapped onto the
-    accelerator.
+@dataclasses.dataclass(frozen=True)
+class FitGeometry:
+    """Shapes of one secure-fit combo. Vertical: X = [X_A | X_B]; horizontal:
+    X = [X_A ; X_B]. Hashable — it keys the compiled-program cache."""
 
-    `backend` selects the ring-compute implementation (core/backend.py);
-    every local ring product below, including the ones inside P.smatmul and
-    P.cmp_lt, dispatches through it, so the pjit'd production path runs the
-    same kernels as the simulated SecureKMeans path."""
-    ctx = P.Ctx(dealer=dealer, log=CommLog(), backend=backend)
+    partition: str     # "vertical" | "horizontal"
+    sparse: bool
+    shape_a: tuple     # party A's encoded-data shape
+    shape_b: tuple
+    k: int
+
+    def __post_init__(self):
+        if self.partition not in ("vertical", "horizontal"):
+            raise ValueError(f"unknown partition {self.partition!r}")
+        if self.partition == "vertical" and self.shape_a[0] != self.shape_b[0]:
+            raise ValueError("vertical partition requires equal sample counts")
+        if self.partition == "horizontal" and self.shape_a[1] != self.shape_b[1]:
+            raise ValueError("horizontal partition requires equal feature counts")
+
+    @property
+    def n(self) -> int:
+        return self.shape_a[0] if self.partition == "vertical" \
+            else self.shape_a[0] + self.shape_b[0]
+
+    @property
+    def d(self) -> int:
+        return self.shape_a[1] + self.shape_b[1] \
+            if self.partition == "vertical" else self.shape_a[1]
+
+    @property
+    def d_a(self) -> int:
+        return self.shape_a[1]
+
+    def he_shapes_s1(self) -> list:
+        """Protocol-2 result shapes entering S1 (the X mu^T joint blocks)."""
+        if not self.sparse:
+            return []
+        if self.partition == "vertical":
+            return [(self.n, self.k), (self.n, self.k)]
+        return [(self.shape_a[0], self.k), (self.shape_b[0], self.k)]
+
+    def he_shapes_s3(self) -> list:
+        """Protocol-2 result shapes entering S3 (the C^T X joint blocks)."""
+        if not self.sparse:
+            return []
+        if self.partition == "vertical":
+            return [(self.k, self.shape_a[1]), (self.k, self.shape_b[1])]
+        return [(self.k, self.d), (self.k, self.d)]
+
+
+def _zero_he(shapes):
+    if not shapes:
+        return None
+    return tuple(AShare(jnp.zeros(s, ring.DTYPE), jnp.zeros(s, ring.DTYPE))
+                 for s in shapes)
+
+
+def _split_he(flat, shapes):
+    """(he tuple | None, remaining flat) from a program's trailing args."""
+    flat = list(flat)
+    if not shapes:
+        return None, flat
+    n_he = 2 * len(shapes)
+    he = tuple(AShare(flat[2 * i], flat[2 * i + 1])
+               for i in range(len(shapes)))
+    return he, flat[n_he:]
+
+
+# ---------------------------------------------------------------------------
+# Program bodies — ONE implementation per online stage, all combos
+# ---------------------------------------------------------------------------
+
+def _s1_body(ctx, geo: FitGeometry, xa, xb, mu: AShare, he):
+    """S1: vectorized distances D' = U - 2 X mu^T + tournament argmin,
+    up to the Protocol-2 boundary. Returns the (n, k) assignment shares.
+
+    he=None  -> dense: the joint public-x-share blocks are Beaver matmuls
+    consuming pool triples inside the program.
+    he=(j1, j2) -> sparse: the blocks were computed host-side by Protocol 2
+    from the centroid shares (they depend on nothing else) and enter as
+    fresh share inputs — the nnz-independent n*d Beaver traffic and its
+    triple matmuls vanish from the accelerator roofline."""
     mm = ctx.backend.ring_mm
-    f = ring.F
-    # ---- S1: distances ---------------------------------------------------
     mu_sq = P.smul(ctx, mu, mu)
     u = AShare(mu_sq.s0.sum(1), mu_sq.s1.sum(1))
     mut = AShare(mu.s0.T, mu.s1.T)
-    loc_a = mm(xa_enc, mut.s0[:d_a])
-    loc_b = mm(xb_enc, mut.s1[d_a:])
-    if he_results is None:
-        j1 = P.smatmul(ctx, AShare(xa_enc, jnp.zeros_like(xa_enc)),
-                       AShare(jnp.zeros_like(mut.s1[:d_a]), mut.s1[:d_a]))
-        j2 = P.smatmul(ctx, AShare(jnp.zeros_like(xb_enc), xb_enc),
-                       AShare(mut.s0[d_a:], jnp.zeros_like(mut.s0[d_a:])))
+    if geo.partition == "vertical":
+        da = geo.d_a
+        loc_a = mm(xa, mut.s0[:da])
+        loc_b = mm(xb, mut.s1[da:])
+        if he is None:
+            j1 = P.smatmul(ctx, AShare(xa, jnp.zeros_like(xa)),
+                           AShare(jnp.zeros_like(mut.s1[:da]), mut.s1[:da]))
+            j2 = P.smatmul(ctx, AShare(jnp.zeros_like(xb), xb),
+                           AShare(mut.s0[da:], jnp.zeros_like(mut.s0[da:])))
+        else:
+            j1, j2 = he
+        xmu = AShare(loc_a + j1.s0 + j2.s0, loc_b + j1.s1 + j2.s1)
     else:
-        j1, j2 = he_results[0], he_results[1]
-    xmu = AShare(loc_a + j1.s0 + j2.s0, loc_b + j1.s1 + j2.s1)
+        # horizontal: rows split; each party's rows hit BOTH mu shares
+        loc_a = mm(xa, mut.s0)
+        loc_b = mm(xb, mut.s1)
+        if he is None:
+            j_a = P.smatmul(ctx, AShare(xa, jnp.zeros_like(xa)),
+                            AShare(jnp.zeros_like(mut.s1), mut.s1))
+            j_b = P.smatmul(ctx, AShare(jnp.zeros_like(xb), xb),
+                            AShare(mut.s0, jnp.zeros_like(mut.s0)))
+        else:
+            j_a, j_b = he
+        xmu = AShare(jnp.concatenate([loc_a + j_a.s0, j_b.s0], 0),
+                     jnp.concatenate([j_a.s1, loc_b + j_b.s1], 0))
     d2 = P.sub(AShare(u.s0[None, :], u.s1[None, :]), P.lshift(xmu, 1))
-    dist = P.trunc(d2, f)
-    # ---- S2: assignment --------------------------------------------------
-    c = P.argmin_onehot(ctx, dist)
-    # ---- S3: update ------------------------------------------------------
+    dist = P.trunc(d2, ring.F)
+    return P.argmin_onehot(ctx, dist)
+
+
+def _s3_body(ctx, geo: FitGeometry, xa, xb, mu: AShare, c: AShare, he):
+    """S3: centroid update mu' = C^T X / 1^T C with the empty-cluster MUX
+    guard and balanced-split division (see core/kmeans.py for the numerics).
+
+    he=None -> dense Beaver joint blocks; he=(ja, jb) -> the Protocol-2
+    results of the MID-ITERATION host exchange on the assignment shares S1
+    produced (the S2 callback)."""
+    mm = ctx.backend.ring_mm
+    k, n = geo.k, geo.n
     ct = AShare(c.s0.T, c.s1.T)
-    za = AShare(mm(ct.s0, xa_enc), jnp.zeros((k, d_a), ring.DTYPE))
-    zb = AShare(jnp.zeros((k, xb_enc.shape[1]), ring.DTYPE),
-                mm(ct.s1, xb_enc))
-    if he_results is None:
-        ja = P.smatmul(ctx, AShare(jnp.zeros_like(ct.s1), ct.s1),
-                       AShare(xa_enc, jnp.zeros_like(xa_enc)))
-        jb = P.smatmul(ctx, AShare(ct.s0, jnp.zeros_like(ct.s0)),
-                       AShare(jnp.zeros_like(xb_enc), xb_enc))
+    if geo.partition == "vertical":
+        da, db = geo.shape_a[1], geo.shape_b[1]
+        za = AShare(mm(ct.s0, xa), jnp.zeros((k, da), ring.DTYPE))
+        zb = AShare(jnp.zeros((k, db), ring.DTYPE), mm(ct.s1, xb))
+        if he is None:
+            ja = P.smatmul(ctx, AShare(jnp.zeros_like(ct.s1), ct.s1),
+                           AShare(xa, jnp.zeros_like(xa)))
+            jb = P.smatmul(ctx, AShare(ct.s0, jnp.zeros_like(ct.s0)),
+                           AShare(jnp.zeros_like(xb), xb))
+        else:
+            ja, jb = he
+        num = AShare(jnp.concatenate([za.s0 + ja.s0, zb.s0 + jb.s0], 1),
+                     jnp.concatenate([za.s1 + ja.s1, zb.s1 + jb.s1], 1))
     else:
-        ja, jb = he_results[2], he_results[3]
-    num = AShare(jnp.concatenate([za.s0 + ja.s0, zb.s0 + jb.s0], 1),
-                 jnp.concatenate([za.s1 + ja.s1, zb.s1 + jb.s1], 1))
+        na = geo.shape_a[0]
+        ct_a = AShare(ct.s0[:, :na], ct.s1[:, :na])
+        ct_b = AShare(ct.s0[:, na:], ct.s1[:, na:])
+        loc_a = mm(ct_a.s0, xa)
+        if he is None:
+            ja = P.smatmul(ctx, AShare(jnp.zeros_like(ct_a.s1), ct_a.s1),
+                           AShare(xa, jnp.zeros_like(xa)))
+        else:
+            ja = he[0]
+        za = AShare(loc_a + ja.s0, ja.s1)
+        loc_b = mm(ct_b.s1, xb)
+        if he is None:
+            jb = P.smatmul(ctx, AShare(ct_b.s0, jnp.zeros_like(ct_b.s0)),
+                           AShare(jnp.zeros_like(xb), xb))
+        else:
+            jb = he[1]
+        zb = AShare(jb.s0, loc_b + jb.s1)
+        num = P.add(za, zb)
     den = AShare(c.s0.sum(0), c.s1.sum(0))
     one = AShare(jnp.full((k,), 1, ring.DTYPE), jnp.zeros((k,), ring.DTYPE))
     is_empty = P.cmp_lt(ctx, den, one)
@@ -152,18 +282,36 @@ def _iteration(xa_enc, xb_enc, mu: AShare, dealer, n: int, k: int,
     m = int(np.ceil(np.log2(max(2, n))))
     s = m // 2
     num_s = P.trunc(num, s)
-    r = P.reciprocal(ctx, den_safe, max_den=n, f=f, extra_bits=s)
+    r = P.reciprocal(ctx, den_safe, max_den=n, f=ring.F, extra_bits=s)
     mu_new = P.smul(ctx, num_s, AShare(r.s0[:, None], r.s1[:, None]),
-                    trunc_f=f)
+                    trunc_f=ring.F)
     guard = AShare(is_empty.s0[:, None], is_empty.s1[:, None])
-    out = P.mux(ctx, guard, mu, mu_new)
+    return P.mux(ctx, guard, mu, mu_new)
+
+
+def _iteration(xa_enc, xb_enc, mu: AShare, dealer, n: int, k: int,
+               d_a: int, he_results: tuple | None = None,
+               backend=None, return_assignment: bool = False):
+    """One vertical-partition online Lloyd iteration on shares (Alg. 3) —
+    S1 and S3 bodies composed back to back over ONE dealer. Kept as the
+    single-launch legacy form behind `online_iteration_fn`; the production
+    fast path uses the split `fit_programs` pair."""
+    d_b = xb_enc.shape[1]
+    geo = FitGeometry("vertical", he_results is not None,
+                      (n, d_a), (n, d_b), k)
+    ctx = P.Ctx(dealer=dealer, log=CommLog(), backend=backend)
+    he1 = he3 = None
+    if he_results is not None:
+        he1, he3 = tuple(he_results[:2]), tuple(he_results[2:])
+    c = _s1_body(ctx, geo, xa_enc, xb_enc, mu, he1)
+    out = _s3_body(ctx, geo, xa_enc, xb_enc, mu, c, he3)
     return (out, c) if return_assignment else out
 
 
 def materialize_offline(requests, dealer) -> list:
     """Flat jnp tensor list the ListDealer consumes, in recorded order.
     `dealer` is any triple provider (TrustedDealer on demand, PooledDealer
-    for the planned offline phase)."""
+    or StreamingPooledDealer for the planned offline phase)."""
     flat = []
     for kind, shape in requests:
         if kind == "matmul":
@@ -186,7 +334,7 @@ def pooled_offline_arrays(requests, seed: int, iters: int = 1,
     """True offline phase for the pjit path: bulk-generate `iters`
     iterations' worth of the recorded schedule with ONE stacked draw and one
     batched ring op per shape-class, and return ([flat_per_iteration...],
-    dealer). Each flat list feeds one jit'd `_iteration` via its ListDealer;
+    dealer). Each flat list feeds one jit'd iteration via its ListDealer;
     the arrays are preallocated device slices, so consuming them adds no
     host work to the online step. Bit-exact with `materialize_offline`
     against a same-seeded TrustedDealer (tests/test_triples_pool.py)."""
@@ -237,12 +385,134 @@ def offline_tensor_specs(requests, n: int):
     return flat
 
 
+# ---------------------------------------------------------------------------
+# fit_programs — the per-iteration S1/S3 compiled pair, ALL fit shapes
+# ---------------------------------------------------------------------------
+
+class FitPrograms(NamedTuple):
+    """AOT-compiled S1/S3 pair plus the offline schedule each launch
+    consumes. Per online iteration:
+
+        he1 = host Protocol-2 on the centroid shares        (sparse only)
+        c   = s1(xa, xb, mu0, mu1, *he1, *flat_s1)          launch 1
+        he3 = host Protocol-2 on the assignment shares      (sparse only,
+                                                             the S2 callback)
+        mu' = s3(xa, xb, mu0, mu1, c0, c1, *he3, *flat_s3)  launch 2
+
+    where flat_s1/flat_s3 = materialize_offline(s{1,3}_requests, pool)."""
+
+    geo: FitGeometry
+    s1: Any
+    s3: Any
+    s1_requests: list
+    s3_requests: list
+
+
+_PROGRAM_CACHE: dict[tuple, FitPrograms] = {}
+
+
+def _sds(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), ring.NP_DTYPE)
+
+
+def _he_specs(shapes):
+    out = []
+    for s in shapes:
+        out += [_sds(s), _sds(s)]
+    return out
+
+
+def fit_programs(partition: str, sparse: bool, shape_a, shape_b, k: int,
+                 backend: str = "auto") -> FitPrograms:
+    """Build (or fetch from the cross-fit cache) the compiled S1/S3 pair for
+    one fit combo. Hardcodes f = ring.F like the rest of the launch path;
+    the request schedules consume the same per-class dealer streams as the
+    eager loop, so pooled serving is bit-exact by construction."""
+    from repro.core.backend import get_backend
+    ring_backend = get_backend(backend)
+    geo = FitGeometry(partition, bool(sparse),
+                      tuple(int(s) for s in shape_a),
+                      tuple(int(s) for s in shape_b), int(k))
+    key = (geo, ring_backend.name)
+    hit = _PROGRAM_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    n, d = geo.n, geo.d
+    base = (_sds(geo.shape_a), _sds(geo.shape_b), _sds((k, d)), _sds((k, d)))
+
+    def zero_inputs():
+        xa = jnp.zeros(geo.shape_a, ring.DTYPE)
+        xb = jnp.zeros(geo.shape_b, ring.DTYPE)
+        mu = AShare(jnp.zeros((k, d), ring.DTYPE),
+                    jnp.zeros((k, d), ring.DTYPE))
+        return xa, xb, mu
+
+    # ---- S1: distances + argmin -> assignment shares ---------------------
+    rec1 = RecordingDealer()
+
+    def trace1():
+        xa, xb, mu = zero_inputs()
+        ctx = P.Ctx(dealer=rec1, log=CommLog(), backend=ring_backend)
+        return _s1_body(ctx, geo, xa, xb, mu, _zero_he(geo.he_shapes_s1()))
+
+    jax.eval_shape(trace1)
+    s1_requests = list(rec1.requests)
+
+    def s1_fn(xa, xb, mu0, mu1, *rest):
+        he, flat = _split_he(rest, geo.he_shapes_s1())
+        ctx = P.Ctx(dealer=ListDealer(flat), log=CommLog(),
+                    backend=ring_backend)
+        c = _s1_body(ctx, geo, xa, xb, AShare(mu0, mu1), he)
+        return c.s0, c.s1
+
+    s1_args = base + tuple(_he_specs(geo.he_shapes_s1())) \
+        + tuple(offline_tensor_specs(s1_requests, n))
+    s1 = jax.jit(s1_fn).lower(*s1_args).compile()
+
+    # ---- S3: centroid update --------------------------------------------
+    rec3 = RecordingDealer()
+
+    def trace3():
+        xa, xb, mu = zero_inputs()
+        c = AShare(jnp.zeros((n, k), ring.DTYPE),
+                   jnp.zeros((n, k), ring.DTYPE))
+        ctx = P.Ctx(dealer=rec3, log=CommLog(), backend=ring_backend)
+        return _s3_body(ctx, geo, xa, xb, mu, c, _zero_he(geo.he_shapes_s3()))
+
+    jax.eval_shape(trace3)
+    s3_requests = list(rec3.requests)
+
+    def s3_fn(xa, xb, mu0, mu1, c0, c1, *rest):
+        he, flat = _split_he(rest, geo.he_shapes_s3())
+        ctx = P.Ctx(dealer=ListDealer(flat), log=CommLog(),
+                    backend=ring_backend)
+        out = _s3_body(ctx, geo, xa, xb, AShare(mu0, mu1), AShare(c0, c1), he)
+        return out.s0, out.s1
+
+    s3_args = base + (_sds((n, k)), _sds((n, k))) \
+        + tuple(_he_specs(geo.he_shapes_s3())) \
+        + tuple(offline_tensor_specs(s3_requests, n))
+    s3 = jax.jit(s3_fn).lower(*s3_args).compile()
+
+    progs = FitPrograms(geo, s1, s3, s1_requests, s3_requests)
+    _PROGRAM_CACHE[key] = progs
+    return progs
+
+
+def clear_program_cache() -> None:
+    _PROGRAM_CACHE.clear()
+
+
 def online_iteration_fn(n: int, d: int, k: int, d_a: int,
                         sparse: bool = False, backend: str = "auto"):
     """(fn, arg ShapeDtypeStructs) with fn(xa, xb, mu0, mu1, *he, *flat).
     sparse=True adds the 8 Protocol-2 result shares as inputs and drops the
     joint Beaver matmuls (paper Sec 4.3 on-mesh). `backend` picks the
-    ring-compute implementation (core/backend.py) baked into the lowering."""
+    ring-compute implementation (core/backend.py) baked into the lowering.
+
+    Legacy single-launch form (S1+S3 fused, no mid-iteration callback) kept
+    for the mesh/perf harnesses; `fit_programs` is the production split."""
     from repro.core.backend import get_backend
     ring_backend = get_backend(backend)
     n_he = 0
@@ -257,10 +527,7 @@ def online_iteration_fn(n: int, d: int, k: int, d_a: int,
         he = [AShare(flat[2 * i], flat[2 * i + 1]) for i in range(4)]
         return tuple(he), flat[n_he:]
 
-    class _Rec(RecordingDealer):
-        pass
-
-    dealer = _Rec()
+    dealer = RecordingDealer()
 
     def run():
         z = jnp.zeros((n, d_a), ring.DTYPE)
@@ -295,11 +562,11 @@ def online_iteration_fn(n: int, d: int, k: int, d_a: int,
 
 def fit_iteration_fn(n: int, d: int, k: int, d_a: int,
                      backend: str = "auto"):
-    """`online_iteration_fn` variant backing SecureKMeans' pooled fast path
-    (dense vertical): returns (fn, arg ShapeDtypeStructs, requests) where
-    fn(xa, xb, mu0, mu1, *flat) -> (mu0', mu1', c0, c1) also exposes the
-    assignment shares, and `requests` is the offline schedule one call
-    consumes — feed it to `materialize_offline` against the PooledDealer."""
+    """`online_iteration_fn` variant that also exposes the assignment
+    shares: fn(xa, xb, mu0, mu1, *flat) -> (mu0', mu1', c0, c1), plus the
+    offline schedule one call consumes. Superseded by `fit_programs` (the
+    S1/S3 split) on SecureKMeans' pooled fast path; kept for callers that
+    want the fused single-launch dense-vertical iteration."""
     from repro.core.backend import get_backend
     ring_backend = get_backend(backend)
     dealer = RecordingDealer()

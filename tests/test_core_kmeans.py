@@ -173,6 +173,21 @@ def test_csr_roundtrip():
     assert m.nnz == (x != 0).sum()
 
 
+def test_csr_transpose_matches_from_dense():
+    """nnz-proportional transpose is layout-identical to densify+rebuild
+    (the fast path pre-transposes X for the C^T X host exchange with it)."""
+    rng = np.random.default_rng(11)
+    for shape in [(13, 9), (1, 7), (8, 1), (6, 6)]:
+        x = ((rng.random(shape) > 0.5)
+             * rng.integers(1, 2**62, shape)).astype(np.uint64)
+        a = CSRMatrix.from_dense(x).transpose()
+        b = CSRMatrix.from_dense(x.T)
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(a.indptr, b.indptr)
+        np.testing.assert_array_equal(a.indices, b.indices)
+        np.testing.assert_array_equal(a.data, b.data)
+
+
 # ---------------------------------------------------------------------------
 # fraud detection (Q5)
 # ---------------------------------------------------------------------------

@@ -103,6 +103,69 @@ def test_online_iteration_matches_secure_kmeans(sparse):
     assert (oh.sum(1) == 1).all()
 
 
+@pytest.mark.parametrize("partition", ["vertical", "horizontal"])
+@pytest.mark.parametrize("sparse", [False, True])
+def test_fit_programs_two_launches_per_iteration(partition, sparse):
+    """The pooled fast path runs EVERY partition x sparsity combo as exactly
+    two compiled launches per online iteration (S1: distances+argmin, S3:
+    update), with the sparse combos' Protocol-2 exchange as a host callback
+    between them — no eager fallback, no two-pass trick."""
+    import repro.launch.kmeans_step as K
+    from repro.core.kmeans import KMeansConfig, SecureKMeans
+
+    n, d, k, iters = 32, 4, 2, 3
+    rng = np.random.default_rng(6)
+    x = rng.normal(0, 2, (n, d))
+    if sparse:
+        x = x * (rng.random((n, d)) >= 0.5)
+    if partition == "vertical":
+        a, b = x[:, :2], x[:, 2:]
+    else:
+        a, b = x[:16], x[16:]
+    cfg = KMeansConfig(k=k, iters=iters, partition=partition, sparse=sparse,
+                       seed=5, backend="xla", offline="pooled")
+    skm = SecureKMeans(cfg)
+    enc_a, enc_b = _encode_np(np.asarray(a), ring.F), _encode_np(np.asarray(b), ring.F)
+    progs = K.fit_programs(partition, sparse, enc_a.shape, enc_b.shape, k,
+                           backend="xla")
+    # same geometry+backend -> the fit must reuse this cached pair; wrap the
+    # compiled callables with counters to count actual launches
+    calls = {"s1": 0, "s3": 0}
+
+    def wrap(name, fn):
+        def counted(*args):
+            calls[name] += 1
+            return fn(*args)
+        return counted
+
+    key = (progs.geo, "xla")
+    K._PROGRAM_CACHE[key] = progs._replace(s1=wrap("s1", progs.s1),
+                                           s3=wrap("s3", progs.s3))
+    try:
+        res = skm.fit(a, b)
+    finally:
+        K._PROGRAM_CACHE[key] = progs
+    assert calls == {"s1": iters, "s3": iters}
+    assert res.iters_run == iters
+    # S1 outputs valid one-hot assignment shares (the S2 callback contract:
+    # the host exchange runs on exactly these)
+    oh = np.asarray(rec(res.assignment), np.uint64).astype(np.int64)
+    assert (oh.sum(1) == 1).all()
+    # the sparse programs declare the Protocol-2 inputs; dense ones don't
+    assert bool(progs.geo.he_shapes_s1()) == sparse
+    assert bool(progs.geo.he_shapes_s3()) == sparse
+
+
+def test_fit_geometry_validation():
+    from repro.launch.kmeans_step import FitGeometry
+    with pytest.raises(ValueError, match="unknown partition"):
+        FitGeometry("diagonal", False, (4, 2), (4, 2), 2)
+    with pytest.raises(ValueError, match="equal sample counts"):
+        FitGeometry("vertical", False, (4, 2), (5, 2), 2)
+    with pytest.raises(ValueError, match="equal feature counts"):
+        FitGeometry("horizontal", False, (4, 2), (4, 3), 2)
+
+
 def test_online_iteration_backend_parity():
     """The pjit'd iteration must be bit-exact across ring backends when fed
     the IDENTICAL offline tensors and inputs."""

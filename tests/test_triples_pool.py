@@ -12,7 +12,8 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.kmeans import KMeansConfig, SecureKMeans
 from repro.core.triples import (PlanningDealer, PlanRequest, PooledDealer,
-                                PoolExhaustedError, TriplePlan, TrustedDealer)
+                                PoolExhaustedError, StreamingPooledDealer,
+                                TriplePlan, TrustedDealer)
 from repro.launch.kmeans_step import (materialize_offline,
                                       pooled_offline_arrays,
                                       record_offline_shapes)
@@ -88,8 +89,11 @@ def _blobs(n, d, k, seed, sparse_frac=0.0):
 def test_fit_pooled_bit_exact_vs_on_demand(partition, sparse):
     """Same seed -> identical share words, dealer counts, and offline
     CommLog tallies, whether triples are synthesized on demand inside the
-    loop or planned + bulk-generated + pooled up front. The dense-vertical
-    combo additionally exercises the compiled single-launch fast path."""
+    loop, planned + bulk-generated + pooled up front, or streamed per-
+    iteration tranche. ALL four partition x sparsity combos take the
+    compiled S1/S3 split-launch fast path in pooled/streamed mode (the
+    sparse ones with Protocol 2 as a host callback between the launches),
+    so this is the end-to-end parity guarantee of the split."""
     n, d, k = 48, 4, 2
     x = _blobs(n, d, k, seed=11, sparse_frac=0.5 if sparse else 0.0)
     if partition == "vertical":
@@ -97,22 +101,26 @@ def test_fit_pooled_bit_exact_vs_on_demand(partition, sparse):
     else:
         a, b = x[:24], x[24:]
     res = {}
-    for off in ("on_demand", "pooled"):
+    for off in ("on_demand", "pooled", "streamed"):
         cfg = KMeansConfig(k=k, iters=2, partition=partition, sparse=sparse,
                            seed=5, backend="xla", offline=off)
         res[off] = SecureKMeans(cfg).fit(a, b)
-    r0, r1 = res["on_demand"], res["pooled"]
-    for field in ("centroids", "assignment"):
-        np.testing.assert_array_equal(
-            np.asarray(getattr(r0, field).s0, np.uint64),
-            np.asarray(getattr(r1, field).s0, np.uint64))
-        np.testing.assert_array_equal(
-            np.asarray(getattr(r0, field).s1, np.uint64),
-            np.asarray(getattr(r1, field).s1, np.uint64))
-    assert (r0.dealer.n_matmul, r0.dealer.n_mul, r0.dealer.n_bin) == \
-           (r1.dealer.n_matmul, r1.dealer.n_mul, r1.dealer.n_bin)
-    assert r0.log.by_tag("offline") == r1.log.by_tag("offline")
-    assert r0.log.by_tag("online") == r1.log.by_tag("online")
+    r0 = res["on_demand"]
+    for r1 in (res["pooled"], res["streamed"]):
+        for field in ("centroids", "assignment"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r0, field).s0, np.uint64),
+                np.asarray(getattr(r1, field).s0, np.uint64))
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r0, field).s1, np.uint64),
+                np.asarray(getattr(r1, field).s1, np.uint64))
+        assert (r0.dealer.n_matmul, r0.dealer.n_mul, r0.dealer.n_bin) == \
+               (r1.dealer.n_matmul, r1.dealer.n_mul, r1.dealer.n_bin)
+        assert r0.log.by_tag("offline") == r1.log.by_tag("offline")
+        assert r0.log.by_tag("online") == r1.log.by_tag("online")
+    # the streaming dealer consumed every planned tranche exactly
+    assert res["streamed"].dealer.served_iters == 2
+    assert all(v == 0 for v in res["streamed"].dealer.remaining().values())
 
 
 def test_fit_pooled_nondefault_f_falls_back_bit_exact():
@@ -166,14 +174,160 @@ def test_pool_unplanned_class_raises():
 def test_matmul_triple_shape_mismatch_raises_value_error():
     """Planner bugs must surface under `python -O` too (no bare asserts)."""
     for dealer in (TrustedDealer(seed=0), PlanningDealer(),
-                   PooledDealer(TriplePlan([]), seed=0)):
+                   PooledDealer(TriplePlan([]), seed=0),
+                   StreamingPooledDealer(TriplePlan([]), 1, seed=0)):
         with pytest.raises(ValueError, match=r"inner dims disagree.*\(2, 4\)"):
             dealer.matmul_triple((2, 4), (3, 5))
+
+
+def test_mul_bin_triple_bad_shape_raises_value_error():
+    """mul/bin triples take ONE flat tensor shape; a matmul-style nested
+    pair, floats, or negative dims are planner bugs -> ValueError (matching
+    the matmul inner-dim check)."""
+    dealers = (TrustedDealer(seed=0), PlanningDealer(),
+               PooledDealer(TriplePlan([]), seed=0),
+               StreamingPooledDealer(TriplePlan([]), 1, seed=0))
+    for dealer in dealers:
+        with pytest.raises(ValueError, match="flat tuple of ints"):
+            dealer.mul_triple(((2, 3), (3, 4)))     # nested matmul-style
+        with pytest.raises(ValueError, match="flat tuple of ints"):
+            dealer.bin_triple((2, 3.5))
+        with pytest.raises(ValueError, match="negative"):
+            dealer.mul_triple((2, -3))
+        with pytest.raises(ValueError, match="iterable"):
+            dealer.bin_triple(7)
 
 
 # ---------------------------------------------------------------------------
 # pjit path consumes the pool
 # ---------------------------------------------------------------------------
+
+# ---------------------------------------------------------------------------
+# StreamingPooledDealer — per-iteration tranches, O(1) residency
+# ---------------------------------------------------------------------------
+
+_SHAPES = {"matmul": ((5, 3), (3, 2)), "mul": (4, 3), "bin": (2, 7),
+           "rand": (6,), "seed": ()}
+
+
+@given(st.lists(st.sampled_from(["matmul", "mul", "bin", "rand", "seed"]),
+                min_size=1, max_size=12),
+       st.integers(1, 5), st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=15)
+def test_streaming_replays_pooled_bit_exact(kinds, iters, seed):
+    """StreamingPooledDealer ≡ PooledDealer(iter_plan.repeat(iters)): every
+    served word identical, for random per-iteration schedules — the chunked
+    per-class draws concatenate to the single stacked draw."""
+    requests = [PlanRequest(k, _SHAPES[k], "t") for k in kinds]
+    iter_plan = TriplePlan(requests)
+    full = requests * iters
+    a = _consume(PooledDealer(iter_plan.repeat(iters), seed=seed), full)
+    stream = StreamingPooledDealer(iter_plan, iters, seed=seed)
+    b = _consume(stream, full)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert stream.served_iters == iters
+    assert all(v == 0 for v in stream.remaining().values())
+
+
+def test_streaming_sync_mode_matches_async():
+    """async_gen=False (generation inline at dispatch) serves the same
+    words — the worker thread is an overlap optimization, not semantics."""
+    requests = [PlanRequest("mul", (3, 3), "a"), PlanRequest("bin", (2,), "b")]
+    plan = TriplePlan(requests)
+    full = requests * 3
+    a = _consume(StreamingPooledDealer(plan, 3, seed=4, async_gen=False), full)
+    b = _consume(StreamingPooledDealer(plan, 3, seed=4, async_gen=True), full)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_streaming_peak_residency_independent_of_iters():
+    """The headline streaming property: peak device residency is bounded by
+    `prefetch` tranches, not by the fit length — while the bulk pool grows
+    linearly with iters. async_gen=False makes the observed peak exact (with
+    the worker it depends on generate/consume interleaving, so the async
+    case asserts the structural prefetch bound instead of equality)."""
+    requests = [PlanRequest("mul", (32, 8), "t"), PlanRequest("bin", (16,), "t")]
+    plan = TriplePlan(requests)
+    tranche_bytes = PooledDealer(plan, seed=1).pool_bytes
+    peaks = {}
+    for iters in (2, 8):
+        s = StreamingPooledDealer(plan, iters, seed=1, async_gen=False)
+        _consume(s, requests * iters)
+        peaks[iters] = s.pool_bytes
+    assert peaks[2] == peaks[8] == 2 * tranche_bytes
+    assert peaks[8] < PooledDealer(plan.repeat(8), seed=1).pool_bytes
+    s = StreamingPooledDealer(plan, 8, seed=1)          # async worker
+    _consume(s, requests * 8)
+    assert s.pool_bytes <= 2 * tranche_bytes
+
+
+def test_streaming_exhaustion_and_unplanned_raise():
+    plan = TriplePlan([PlanRequest("mul", (2, 2), "t")])
+    dealer = StreamingPooledDealer(plan, 2, seed=1)
+    dealer.mul_triple((2, 2))
+    dealer.mul_triple((2, 2))
+    with pytest.raises(PoolExhaustedError, match="exhausted"):
+        dealer.mul_triple((2, 2))
+    dealer2 = StreamingPooledDealer(plan, 1, seed=1)
+    with pytest.raises(PoolExhaustedError, match="never"):
+        dealer2.bin_triple((2, 2))
+
+
+def test_streaming_early_stop_leaves_surplus_and_closes():
+    """Stopping mid-schedule (the tol case) leaves counted surplus; undis-
+    patched tranches are never generated. close() is idempotent."""
+    requests = [PlanRequest("mul", (2, 2), "t"), PlanRequest("rand", (3,), "t")]
+    plan = TriplePlan(requests)
+    dealer = StreamingPooledDealer(plan, 10, seed=2)
+    _consume(dealer, requests * 2)       # 2 of 10 iterations
+    dealer.mul_triple((2, 2))            # half of iteration 3
+    rem = dealer.remaining()
+    assert rem[("mul", (2, 2))] == 7
+    assert rem[("rand", (3,))] == 8
+    dealer.close()
+    dealer.close()
+
+
+def test_fit_streamed_with_tol_leaves_surplus():
+    """A tol early-stop under the streaming dealer only leaves surplus —
+    never an error — and peak residency stays at the prefetch bound."""
+    x = _blobs(200, 4, 3, seed=4)
+    cfg = KMeansConfig(k=3, iters=50, seed=5, tol=1e-6, backend="xla",
+                       offline="streamed")
+    res = SecureKMeans(cfg).fit(x[:, :2], x[:, 2:])
+    assert res.iters_run < 50
+    assert all(v >= 0 for v in res.dealer.remaining().values())
+    assert any(v > 0 for v in res.dealer.remaining().values())
+
+
+# ---------------------------------------------------------------------------
+# plan cache: a second identical-shape fit must skip the dry-run trace
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_skips_second_trace(monkeypatch):
+    import repro.core.kmeans as KM
+    KM.clear_plan_cache()
+    x = _blobs(40, 4, 2, seed=3)
+    cfg = KMeansConfig(k=2, iters=2, seed=5, backend="xla", offline="pooled")
+    r1 = SecureKMeans(cfg).fit(x[:, :2], x[:, 2:])
+    assert len(KM._PLAN_CACHE) == 1
+
+    def boom(self, sa, sb):
+        raise AssertionError("second identical fit re-traced the plan")
+
+    monkeypatch.setattr(SecureKMeans, "_trace_iteration", boom)
+    r2 = SecureKMeans(cfg).fit(x[:, :2], x[:, 2:])
+    np.testing.assert_array_equal(np.asarray(r1.centroids.s0, np.uint64),
+                                  np.asarray(r2.centroids.s0, np.uint64))
+    # a DIFFERENT config key must re-trace (and here: blow up)
+    cfg3 = KMeansConfig(k=2, iters=2, seed=5, backend="xla",
+                        offline="pooled", tol=1e-9)
+    with pytest.raises(AssertionError, match="re-traced"):
+        SecureKMeans(cfg3).fit(x[:, :2], x[:, 2:])
+
 
 def test_pooled_offline_arrays_match_trusted_dealer():
     """The launch-path bulk offline arrays equal the on-demand flat list,
