@@ -23,7 +23,7 @@ def main() -> None:
 
     from benchmarks import (fig2_online_offline, fig3_vectorization,
                             fig4_sparse, kernel_bench, online_offline,
-                            q5_fraud, table1_2)
+                            q5_fraud, serve_bench, table1_2)
 
     suites = {
         "table1_2_runtime_comm": lambda: table1_2.run(quick=args.quick),
@@ -40,6 +40,10 @@ def main() -> None:
         # baseline for ALL FOUR partition x sparsity combos, persisted to
         # benchmarks/BENCH_online.json (full mode adds an n=4096 row)
         "online_offline": lambda: online_offline.run(quick=args.quick),
+        # `--only serve --quick` is the serving-subsystem smoke: scoring-
+        # service throughput over dense and sparse batch ladders, persisted
+        # to benchmarks/BENCH_serve.json
+        "serve": lambda: serve_bench.run(quick=args.quick),
     }
     derived_fns = {
         "table1_2_runtime_comm": table1_2.derived,
@@ -49,6 +53,7 @@ def main() -> None:
         "q5_fraud_jaccard": q5_fraud.derived,
         "kernels_interpret": kernel_bench.derived,
         "online_offline": online_offline.derived,
+        "serve": serve_bench.derived,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -5,8 +5,14 @@ the (squared) distance to its assigned centroid, flag the top fraction as
 outliers, evaluate with the Jaccard coefficient J(R, R*) = |R n R*|/|R u R*|
 against ground truth.
 
-The secure pipeline reveals only the final outlier decision to the parties
-(distance scores are reconstructed at the very end — the paper's "output").
+The secure pipeline reveals ONLY the per-transaction outlier scores (the
+paper's "output"): scoring runs through `SecureKMeans.score`, the batched
+secure-distance + argmin protocol against the secret-shared centroids, so
+neither centroids nor cluster labels are ever reconstructed — exactly the
+intermediate-information leakage Liu et al. argue against and Li & Luo
+("On the Privacy of Federated Clustering", 2023) show is exploitable.
+`reveal_model=True` is an explicit escape hatch restoring the old
+reconstruct-and-score-in-plaintext behavior (cheaper, leaks the model).
 """
 from __future__ import annotations
 
@@ -14,7 +20,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.kmeans import KMeansConfig, SecureKMeans, plaintext_kmeans
+from repro.core.kmeans import (KMeansConfig, KMeansResult, SecureKMeans,
+                               plaintext_kmeans)
 
 
 def jaccard(r: np.ndarray, r_star: np.ndarray) -> float:
@@ -66,14 +73,33 @@ class FraudDataset:
         return cls(x[:, :d_a], x[:, d_a:], y)
 
 
+def fraud_scores(km: SecureKMeans | None, res: KMeansResult,
+                 ds: FraudDataset, reveal_model: bool = False) -> np.ndarray:
+    """Per-transaction outlier scores from a fitted secure model.
+
+    Default: the secure scoring path — `SecureKMeans.score` computes
+    ||x - mu_c||^2 on shares and reveals only the scores. reveal_model=True
+    reconstructs centroids AND labels in plaintext first (the pre-PR-4
+    behavior, kept as an explicit escape hatch for debugging/benchmarks);
+    that branch needs no protocol runner, so `km` may be None."""
+    if reveal_model:
+        x = np.concatenate([ds.x_a, ds.x_b], 1)
+        return outlier_scores(x, res.centroids_plain(), res.labels_plain())
+    if km is None:
+        raise ValueError("secure scoring needs the SecureKMeans instance")
+    return km.score(ds.x_a, ds.x_b, res).scores_plain()
+
+
 def run_secure_fraud(ds: FraudDataset, k: int = 5, iters: int = 10,
-                     frac: float = 0.02, seed: int = 0, sparse: bool = False):
-    """Joint secure pipeline -> Jaccard vs ground truth."""
+                     frac: float = 0.02, seed: int = 0, sparse: bool = False,
+                     reveal_model: bool = False):
+    """Joint secure pipeline -> Jaccard vs ground truth. Only the outlier
+    scores are revealed (see `fraud_scores`)."""
     cfg = KMeansConfig(k=k, iters=iters, partition="vertical", seed=seed,
                        sparse=sparse)
-    res = SecureKMeans(cfg).fit(ds.x_a, ds.x_b)
-    x = np.concatenate([ds.x_a, ds.x_b], 1)
-    scores = outlier_scores(x, res.centroids_plain(), res.labels_plain())
+    km = SecureKMeans(cfg)
+    res = km.fit(ds.x_a, ds.x_b)
+    scores = fraud_scores(km, res, ds, reveal_model=reveal_model)
     pred = detect_outliers(scores, frac)
     return jaccard(pred, ds.y_outlier), res
 

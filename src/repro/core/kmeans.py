@@ -40,7 +40,7 @@ from repro.core.sharing import AShare, rec, rec_real, share
 from repro.core.sparse import CSRMatrix, secure_sparse_matmul
 from repro.core.triples import (PlanningDealer, PooledDealer,
                                 StreamingPooledDealer, TriplePlan,
-                                TrustedDealer)
+                                TrustedDealer, serve_seed)
 
 
 @dataclasses.dataclass
@@ -111,14 +111,45 @@ class KMeansResult:
                 "total_s": online + offline}
 
 
+@dataclasses.dataclass
+class PredictResult:
+    """One secure-scoring batch against a fitted model. Only the shares are
+    held; the final Rec happens in `labels_plain` / `scores_plain` — the
+    protocol's single reveal point, matching the paper's "nothing but the
+    output" contract (centroids are never reconstructed)."""
+
+    assignment: AShare                # (m, k) one-hot shares, scale 1
+    scores: AShare | None             # (m,) ||x - mu_c||^2 shares, scale f
+    log: CommLog
+    seconds: float
+    f: int = ring.F
+
+    def labels_plain(self) -> np.ndarray:
+        oh = np.asarray(rec(self.assignment), np.uint64).astype(np.int64)
+        return oh.argmax(1)
+
+    def scores_plain(self) -> np.ndarray:
+        if self.scores is None:
+            raise ValueError("assignments-only predict holds no scores; "
+                             "use SecureKMeans.score")
+        return np.asarray(ring.decode(rec(self.scores), self.f))
+
+
 # (shapes, cfg-key) -> (one-iteration TriplePlan, one-iteration CommLog).
 # The schedule is data-independent, so identical-shape fits share it; see
 # SecureKMeans._plan_offline_iter.
 _PLAN_CACHE: dict[tuple, tuple] = {}
 
+# predict-plan cache: (shapes, with_scores, cfg-key) -> (TriplePlan,
+# CommLog) of ONE scoring launch. The key doubles as the TripleBank lookup
+# key — a bank provisioned under it serves any number of same-geometry
+# requests across fits.
+_PREDICT_PLAN_CACHE: dict[tuple, tuple] = {}
+
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
+    _PREDICT_PLAN_CACHE.clear()
 
 
 class SecureKMeans:
@@ -165,8 +196,10 @@ class SecureKMeans:
                 x_a.shape, x_b.shape)
             # the compiled programs hardcode f = ring.F (launch/kmeans_step
             # has no per-config scale), so a custom precision falls back to
-            # the eager pooled loop rather than silently truncating wrong
-            use_fast = cfg.vectorized and cfg.f == ring.F
+            # the eager pooled loop rather than silently truncating wrong;
+            # the host-only numpy backend cannot be traced into a program
+            use_fast = cfg.vectorized and cfg.f == ring.F \
+                and self._traceable_backend()
             if use_fast:
                 from repro.launch import kmeans_step as K
                 progs = K.fit_programs(cfg.partition, cfg.sparse,
@@ -259,7 +292,7 @@ class SecureKMeans:
                 ctx.dealer.close()
         dealer = ctx.dealer
         in_loop_dealer_s = dealer.dealer_seconds - dealer_s_pre
-        return KMeansResult(
+        self.result_ = KMeansResult(
             centroids=mu, assignment=c, iters_run=it, log=ctx.log,
             dealer=dealer,
             online_seconds=max(0.0, wall - in_loop_dealer_s),
@@ -269,6 +302,206 @@ class SecureKMeans:
             loop_seconds=wall,
             offline_plan_seconds=plan_s,
         )
+        return self.result_
+
+    # ------------------------------------------------------------------ #
+    # Secure scoring: batched predict/score against the secret-shared model
+    # ------------------------------------------------------------------ #
+    def predict(self, x_a: np.ndarray, x_b: np.ndarray,
+                result: KMeansResult | None = None, *, dealer=None,
+                compiled: bool | None = None) -> PredictResult:
+        """Assign a NEW batch to the fitted clusters without revealing the
+        model: batched secure distances + tournament argmin against the
+        secret-shared centroids; only the (m, k) assignment shares come
+        back (Rec happens in `labels_plain`). Vertical: the parties hold
+        the batch rows' column slices (equal row counts); horizontal: each
+        party owns whole arrival rows, outputs ordered [A rows; B rows].
+
+        `dealer` supplies the correlated randomness — default an on-demand
+        `TrustedDealer(cfg.seed)`; pass a `TripleBank.dealer(...)` view to
+        serve from a provisioned pool (`plan_predict` gives the bank key
+        and plan). `compiled=None` auto-selects the AOT-compiled
+        `predict_program` launch (vectorized, f = ring.F) and falls back to
+        the eager reference otherwise; both paths are bit-exact for any
+        same-seeded per-class dealer (tests/test_serve.py)."""
+        return self._predict(x_a, x_b, result, dealer=dealer,
+                             compiled=compiled, with_scores=False)
+
+    def score(self, x_a: np.ndarray, x_b: np.ndarray,
+              result: KMeansResult | None = None, *, dealer=None,
+              compiled: bool | None = None) -> PredictResult:
+        """`predict` + the (m,) squared-distance-to-assigned-centroid
+        shares: the tournament's winning D' value (carried for free) plus
+        each party's locally-computable ||x||^2 contribution. This is the
+        fraud-scoring primitive — outlier flags follow from revealing ONLY
+        these scores, never centroids or per-cluster structure."""
+        return self._predict(x_a, x_b, result, dealer=dealer,
+                             compiled=compiled, with_scores=True)
+
+    def _predict(self, x_a, x_b, result, *, dealer, compiled,
+                 with_scores: bool) -> PredictResult:
+        cfg = self.cfg
+        if result is None:
+            result = getattr(self, "result_", None)
+        if result is None:
+            raise ValueError("predict/score needs a fitted model: call "
+                             "fit() first or pass result=")
+        x_a = np.asarray(x_a, np.float64)
+        x_b = np.asarray(x_b, np.float64)
+        d = result.centroids.shape[1]
+        if cfg.partition == "vertical":
+            if x_a.shape[0] != x_b.shape[0]:
+                raise ValueError("vertical predict needs equal batch rows")
+            if x_a.shape[1] + x_b.shape[1] != d:
+                raise ValueError("predict feature split disagrees with the "
+                                 f"fitted model: {x_a.shape[1]}+{x_b.shape[1]}"
+                                 f" != {d}")
+        else:
+            if x_a.shape[1] != d or x_b.shape[1] != d:
+                raise ValueError("horizontal predict rows must carry all "
+                                 f"{d} model features")
+        t0 = time.perf_counter()
+        enc_a = _encode_np(x_a, cfg.f)
+        enc_b = _encode_np(x_b, cfg.f)
+        csr_a = CSRMatrix.from_dense(enc_a) if cfg.sparse else None
+        csr_b = CSRMatrix.from_dense(enc_b) if cfg.sparse else None
+        log = CommLog()
+        if dealer is None:
+            # domain-separated from the fit's streams: reusing cfg.seed
+            # verbatim would replay the fit's Beaver masks on overlapping
+            # shape-classes (mask reuse on two secrets leaks their diff)
+            dealer = TrustedDealer(seed=serve_seed(cfg.seed), log=log)
+        ctx = P.Ctx(dealer=dealer, log=log, backend=cfg.backend)
+        ctx.vectorized = cfg.vectorized
+        ctx.tag = "predict"
+        mu = result.centroids
+        if compiled:
+            # an explicit request for the compiled path must not silently
+            # truncate at the wrong scale or die in an obscure trace error
+            if cfg.f != ring.F:
+                raise ValueError(
+                    f"compiled predict hardcodes f = {ring.F}; cfg.f = "
+                    f"{cfg.f} must use the eager path (compiled=False)")
+            if not self._traceable_backend():
+                raise ValueError(
+                    "the host-only numpy backend cannot lower into the "
+                    "compiled predict program; use compiled=False")
+        use_fast = compiled if compiled is not None \
+            else (cfg.vectorized and cfg.f == ring.F
+                  and self._traceable_backend())
+        vmin = None
+        if use_fast:
+            from repro.launch import kmeans_step as K
+            prog = K.predict_program(cfg.partition, cfg.sparse,
+                                     enc_a.shape, enc_b.shape, cfg.k,
+                                     with_scores=with_scores,
+                                     backend=cfg.backend)
+            _, comm = self._plan_predict_cached(x_a.shape, x_b.shape,
+                                                with_scores)
+            he1 = []
+            hx = None
+            if cfg.sparse:
+                # scratch log (Ctx.fork): the launch's shape-determined
+                # traffic — the exchange's included — replays from the
+                # traced plan's CommLog below
+                hx = ctx.fork(tag="predict")
+                he1 = self._s1_he_inputs(hx, enc_a, enc_b, csr_a, csr_b, mu)
+            flat = K.materialize_offline(prog.requests, ctx.dealer)
+            outs = prog.fn(jnp.asarray(enc_a), jnp.asarray(enc_b),
+                           mu.s0, mu.s1, *he1, *flat)
+            c = AShare(outs[0], outs[1])
+            if with_scores:
+                vmin = AShare(outs[2], outs[3])
+            if hx is not None:
+                ctx.he_seconds = getattr(ctx, "he_seconds", 0.0) \
+                    + getattr(hx, "he_seconds", 0.0)
+            log.merge(comm, phase="online")
+        else:
+            dist = self._distances(ctx, enc_a, enc_b, csr_a, csr_b, mu)
+            if with_scores:
+                c, vmin = P.argmin_onehot(ctx, dist, return_min=True)
+            else:
+                c = P.argmin_onehot(ctx, dist)
+        scores = None
+        if with_scores:
+            # ||x - mu_c||^2 = ||x||^2 + (||mu_c||^2 - 2 x.mu_c): the first
+            # term is party-local plaintext (each owner encodes its slice's
+            # contribution into its share — no triples, no traffic), the
+            # parenthesis is the tournament's winning D' value.
+            scores = P.add(vmin, self._norm_shares(x_a, x_b))
+        jnp.asarray(c.s0).block_until_ready()
+        return PredictResult(assignment=c, scores=scores, log=log,
+                             seconds=time.perf_counter() - t0, f=cfg.f)
+
+    def _traceable_backend(self) -> bool:
+        """The numpy ring backend runs host-side and cannot lower into the
+        compiled fast paths; eager loops serve it (bit-exact either way)."""
+        from repro.core.backend import get_backend
+        return get_backend(self.cfg.backend).name != "numpy"
+
+    def _norm_shares(self, x_a, x_b) -> AShare:
+        """(m,) shares of ||x||^2 at scale f from party-local plaintext.
+        Vertical: A's columns land in s0, B's in s1. Horizontal: the owner
+        of each row holds its whole norm (A rows -> s0, B rows -> s1)."""
+        cfg = self.cfg
+        na = _encode_np((x_a ** 2).sum(1), cfg.f)
+        nb = _encode_np((x_b ** 2).sum(1), cfg.f)
+        if cfg.partition == "vertical":
+            return AShare(jnp.asarray(na), jnp.asarray(nb))
+        za = np.zeros_like(na)
+        zb = np.zeros_like(nb)
+        return AShare(jnp.asarray(np.concatenate([na, zb])),
+                      jnp.asarray(np.concatenate([za, nb])))
+
+    # ------------------------------------------------------------------ #
+    def plan_predict(self, shape_a, shape_b,
+                     with_scores: bool = False) -> tuple:
+        """(bank_key, TriplePlan, CommLog) of ONE scoring launch for
+        party-input batch shapes — without seeing any data. The plan is the
+        exact correlated-randomness schedule a `predict`/`score` call of
+        these shapes consumes (Protocol-2 mask seeds included); the key is
+        the predict-plan cache key, which `TripleBank.provision` uses as
+        the pool lookup key. Cached: a service scoring thousands of batches
+        traces each geometry once."""
+        key = self._predict_plan_key(shape_a, shape_b, with_scores)
+        plan, comm = self._plan_predict_cached(shape_a, shape_b, with_scores)
+        return key, plan, comm
+
+    def _predict_plan_key(self, shape_a, shape_b, with_scores) -> tuple:
+        return ("predict", bool(with_scores)) \
+            + self._plan_cache_key(shape_a, shape_b)
+
+    def _plan_predict_cached(self, shape_a, shape_b, with_scores):
+        key = self._predict_plan_key(shape_a, shape_b, with_scores)
+        hit = _PREDICT_PLAN_CACHE.get(key)
+        if hit is None:
+            hit = _PREDICT_PLAN_CACHE[key] = self._trace_predict(
+                shape_a, shape_b, with_scores)
+        plan, comm = hit
+        return TriplePlan(list(plan.requests)), comm.copy()
+
+    def _trace_predict(self, shape_a, shape_b, with_scores):
+        """Dry-run trace of one scoring launch (distances + argmin) with a
+        PlanningDealer on zero-filled inputs — the predict counterpart of
+        `_trace_iteration`."""
+        cfg = self.cfg
+        ctx = P.Ctx(dealer=PlanningDealer(), log=CommLog(),
+                    backend=cfg.backend)
+        ctx.vectorized = cfg.vectorized
+        ctx.tag = "predict"
+        enc_a = np.zeros(tuple(shape_a), np.uint64)
+        enc_b = np.zeros(tuple(shape_b), np.uint64)
+        d = enc_a.shape[1] + enc_b.shape[1] if cfg.partition == "vertical" \
+            else enc_a.shape[1]
+        csr_a = CSRMatrix.from_dense(enc_a) if cfg.sparse else None
+        csr_b = CSRMatrix.from_dense(enc_b) if cfg.sparse else None
+        mu = AShare(jnp.zeros((cfg.k, d), ring.DTYPE),
+                    jnp.zeros((cfg.k, d), ring.DTYPE))
+        dist = self._distances(ctx, enc_a, enc_b, csr_a, csr_b, mu)
+        P.argmin_onehot(ctx, dist, return_min=with_scores)
+        comm = CommLog()
+        comm.merge(ctx.log, phase="online")
+        return ctx.dealer.plan(), comm
 
     # ------------------------------------------------------------------ #
     def plan_offline(self, shape_a, shape_b) -> TriplePlan:

@@ -300,7 +300,7 @@ def mux(ctx: Ctx, z: AShare, x: AShare, y: AShare) -> AShare:
 # F^k_min — tournament argmin (paper Fig. 1), fully vectorized over n
 # ---------------------------------------------------------------------------
 
-def argmin_onehot(ctx: Ctx, d: AShare) -> AShare:
+def argmin_onehot(ctx: Ctx, d: AShare, *, return_min: bool = False):
     """Secret-shared one-hot argmin along the last axis of (n, k) distances.
 
     ceil(log2 k) rounds of [CMP + batched MUX], each round vectorized over
@@ -316,6 +316,11 @@ def argmin_onehot(ctx: Ctx, d: AShare) -> AShare:
       selector bit, so both Beaver recombinations are batched into ONE smul
       over the stacked (values | one-hots) tensor: one triple, one exchange
       round, one recombination pass per tournament round instead of two.
+
+    return_min=True additionally returns the (n,) share of the winning
+    value — the tournament already carries it, so this is free (no extra
+    triples, traffic, or rounds; the dealer schedule is unchanged). The
+    scoring path uses it for the distance-to-assigned-centroid output.
     """
     n, k = d.shape
     eye = jnp.eye(k, dtype=ring.DTYPE)
@@ -361,8 +366,15 @@ def argmin_onehot(ctx: Ctx, d: AShare) -> AShare:
                            jnp.concatenate([o_min.s1, tail_o.s1], 1))
         vals, ohs, m = v_min, o_min, half + odd
     if ohs is None:    # k == 1: the argmin is trivially the only column
-        return AShare(jnp.ones((n, 1), ring.DTYPE), jnp.zeros((n, 1), ring.DTYPE))
-    return AShare(ohs.s0[:, 0], ohs.s1[:, 0])  # (n, k)
+        oh = AShare(jnp.ones((n, 1), ring.DTYPE),
+                    jnp.zeros((n, 1), ring.DTYPE))
+        if return_min:
+            return oh, AShare(d.s0[:, 0], d.s1[:, 0])
+        return oh
+    oh = AShare(ohs.s0[:, 0], ohs.s1[:, 0])    # (n, k)
+    if return_min:
+        return oh, AShare(vals.s0[:, 0], vals.s1[:, 0])
+    return oh
 
 
 # ---------------------------------------------------------------------------

@@ -122,6 +122,22 @@ def _class_rng(seed: int, key: tuple) -> np.random.Generator:
     return np.random.default_rng(np.random.SeedSequence(ent))
 
 
+_SERVE_DOMAIN = 0x53657276  # "Serv"
+
+
+def serve_seed(fit_seed: int) -> int:
+    """Domain-separated dealer seed for the SERVING side of a model fitted
+    under `fit_seed`. Per-class streams are keyed by (seed, class) only, so
+    reusing the fit's seed for predict-time randomness would replay the
+    exact Beaver masks the fit already consumed on overlapping shape-
+    classes — and a mask reused on two secrets reveals their difference.
+    Every serve-side default (predict/score's on-demand dealer, the
+    ScoringService bank, the launch driver) derives its seed through this
+    helper; only an explicitly passed equal seed can collide."""
+    return int(np.random.SeedSequence(
+        (int(fit_seed), _SERVE_DOMAIN)).generate_state(1, np.uint64)[0])
+
+
 def _nelem(shape) -> int:
     return int(np.prod(shape, dtype=np.int64))
 
@@ -721,3 +737,245 @@ class StreamingPooledDealer:
         self._pending.clear()
         if self._current is not None:
             self._drop_current()
+
+
+# ---------------------------------------------------------------------------
+# TripleBank — persistent cross-fit pool: provision once, serve many
+# ---------------------------------------------------------------------------
+
+def _key_to_str(key: tuple) -> str:
+    return repr(tuple(key))
+
+
+def _key_from_str(s: str) -> tuple:
+    import ast
+    return tuple(ast.literal_eval(s))
+
+
+_SLOTS = {"matmul": 6, "mul": 6, "bin": 6, "rand": 1, "seed": 1}
+
+
+class TripleBank:
+    """A persistent correlated-randomness store serving MANY protocol runs
+    (fits, predict batches, scoring services) from one provisioning pass.
+
+    Structure: one FIFO queue of per-request tensor tuples per shape-class,
+    fed by the same per-class PCG64 streams as every dealer — so a freshly
+    provisioned bank serves bit-identical words to a same-seeded
+    `TrustedDealer` for any request sequence with matching per-class order
+    (the PooledDealer property, lifted across runs). Plans are registered
+    under a lookup key (`SecureKMeans.plan_predict`'s key — the predict-plan
+    cache key — by convention) via `provision`; `dealer(key)` hands out a
+    `BankDealer` view that draws from the shared class queues.
+
+    Exhaustion: where PooledDealer raises `PoolExhaustedError` (the fit
+    trace/online mismatch is a bug), a serving bank treats an empty class as
+    *stock-out*, not corruption — with `auto_replenish` it synchronously
+    generates one more tranche of the requesting key's registered plan
+    (stream-continuous: the class streams simply advance) and keeps serving;
+    the stall is counted in `replenish_events`/`replenish_seconds` so a
+    service can size `copies` to keep replenishment off the online path.
+
+    Persistence: `save`/`load` round-trip the unserved tranches AND the
+    per-class RNG states via one `np.savez` archive, so a reloaded bank
+    serves the exact words the original would have — and replenishes from
+    the same stream positions.
+    """
+
+    def __init__(self, seed: int = 0, auto_replenish: bool = True,
+                 log: CommLog | None = None):
+        self.seed = int(seed)
+        self.auto_replenish = auto_replenish
+        self.log = log if log is not None else CommLog()
+        self._rngs: dict[tuple, np.random.Generator] = {}
+        self._queues: dict[tuple, list] = {}
+        self._plans: dict[tuple, TriplePlan] = {}
+        self.modelled_ot_seconds = 0.0
+        self.gen_seconds = 0.0
+        self.replenish_seconds = 0.0
+        self.replenish_events = 0
+        self.pool_bytes = 0              # live (unserved) device bytes
+        self.served_requests = 0
+
+    # -- provisioning ----------------------------------------------------
+    def _gen(self, counts: dict) -> None:
+        t0 = time.perf_counter()
+        for key in counts:
+            self._rngs.setdefault(key, _class_rng(self.seed, key))
+        pools, nbytes = _gen_tranche(self._rngs, counts)
+        for key, entries in pools.items():
+            self._queues.setdefault(key, []).extend(entries)
+        self.pool_bytes += nbytes
+        self.gen_seconds += time.perf_counter() - t0
+
+    def provision(self, key, plan: TriplePlan, copies: int = 1) -> None:
+        """Register `plan` under the lookup `key` and bulk-generate
+        `copies` executions' worth of it into the class queues (one stacked
+        draw + one batched ring op per class, like PooledDealer). Calling
+        again with the same key re-registers (a changed plan replaces the
+        old one) and tops the stock up."""
+        key = tuple(key)
+        self._plans[key] = TriplePlan(list(plan.requests))
+        if copies > 0:
+            counts = {ck: c * int(copies)
+                      for ck, c in plan.class_counts().items()}
+            self._gen(counts)
+            self.modelled_ot_seconds += _account_offline_plan(
+                plan.repeat(copies), self.log)
+
+    def keys(self) -> list:
+        return list(self._plans)
+
+    def stock(self) -> dict:
+        """{class_key: unserved request count} across the whole bank."""
+        return {k: len(q) for k, q in self._queues.items()}
+
+    def dealer(self, key, log: CommLog | None = None) -> "BankDealer":
+        key = tuple(key)
+        if key not in self._plans:
+            raise KeyError(f"TripleBank has no plan registered under "
+                           f"{key!r}; call provision() first")
+        return BankDealer(self, key, log=log)
+
+    # -- serving ---------------------------------------------------------
+    def _pop(self, class_key: tuple, plan_key: tuple) -> tuple:
+        q = self._queues.get(class_key)
+        if not q:
+            self._replenish(class_key, plan_key)
+            q = self._queues[class_key]
+        out = q.pop(0)
+        self.pool_bytes -= sum(int(np.asarray(a).size) * 8 for a in out)
+        self.served_requests += 1
+        return out
+
+    def _replenish(self, class_key: tuple, plan_key: tuple) -> None:
+        """Stock-out handling: regenerate the requesting key's whole plan
+        (keeping its classes aligned for the next request) — or, for a
+        class the plan never mentions, a single emergency request. Raises
+        `PoolExhaustedError` only when replenishment is disabled."""
+        if not self.auto_replenish:
+            raise PoolExhaustedError(
+                f"TripleBank stock-out for {class_key}: provisioned pool "
+                "consumed and auto_replenish=False")
+        t0 = time.perf_counter()
+        plan = self._plans.get(tuple(plan_key))
+        if plan is not None and class_key in plan.class_counts():
+            self._gen(plan.class_counts())
+            self.modelled_ot_seconds += _account_offline_plan(plan, self.log)
+        else:
+            self._gen({class_key: 1})
+        self.replenish_events += 1
+        self.replenish_seconds += time.perf_counter() - t0
+
+    # -- persistence -----------------------------------------------------
+    def save(self, path: str) -> None:
+        """One `np.savez` archive: per class, the unserved requests stacked
+        per tensor slot, plus a JSON manifest carrying the class keys, RNG
+        states (stream positions), and registered plans. The path is used
+        VERBATIM (np.savez's silent '.npz' suffixing is bypassed by writing
+        through a file handle), so save(p) -> load(p) always pairs up."""
+        import json
+        classes = []
+        arrays = {}
+        # every class with an RNG is saved, queued stock or not: stream
+        # position is state even when the shelf is empty
+        all_keys = set(self._rngs) | set(self._queues)
+        for i, key in enumerate(sorted(all_keys)):
+            q = self._queues.get(key, [])
+            rng = self._rngs.get(key) or _class_rng(self.seed, key)
+            n_slots = _SLOTS[key[0]]
+            for s in range(n_slots):
+                if q:
+                    arrays[f"c{i}_s{s}"] = np.stack(
+                        [np.asarray(t[s], np.uint64) for t in q])
+            classes.append({"key": _key_to_str(key), "count": len(q),
+                            "rng_state": rng.bit_generator.state})
+        plans = {
+            _key_to_str(k): [[r.kind, list(r.shape) if r.kind != "matmul"
+                              else [list(r.shape[0]), list(r.shape[1])],
+                              r.tag] for r in plan.requests]
+            for k, plan in self._plans.items()}
+        manifest = {"version": 1, "seed": self.seed, "classes": classes,
+                    "plans": plans}
+        with open(path, "wb") as f:
+            np.savez(f, manifest=np.frombuffer(
+                json.dumps(manifest).encode(), np.uint8), **arrays)
+
+    @classmethod
+    def load(cls, path: str, auto_replenish: bool = True,
+             log: CommLog | None = None) -> "TripleBank":
+        import json
+        with np.load(path) as z:
+            manifest = json.loads(bytes(z["manifest"]).decode())
+            bank = cls(seed=manifest["seed"],
+                       auto_replenish=auto_replenish, log=log)
+            for i, entry in enumerate(manifest["classes"]):
+                key = _key_from_str(entry["key"])
+                rng = np.random.default_rng(0)
+                rng.bit_generator.state = entry["rng_state"]
+                bank._rngs[key] = rng
+                count = int(entry["count"])
+                if count:
+                    slots = [jnp.asarray(z[f"c{i}_s{s}"])
+                             for s in range(_SLOTS[key[0]])]
+                    bank._queues[key] = [tuple(a[j] for a in slots)
+                                         for j in range(count)]
+                    bank.pool_bytes += sum(int(a.size) * 8 for a in slots)
+        for kstr, reqs in manifest["plans"].items():
+            reqs = [PlanRequest(kind,
+                                (tuple(shape[0]), tuple(shape[1]))
+                                if kind == "matmul" else tuple(shape), tag)
+                    for kind, shape, tag in reqs]
+            bank._plans[_key_from_str(kstr)] = TriplePlan(reqs)
+        return bank
+
+
+class BankDealer:
+    """Dealer-interface view over a `TripleBank` for one plan key —
+    interface-compatible with `TrustedDealer` (same methods and counters),
+    so it drops into `SecureKMeans.predict(..., dealer=...)` and
+    `materialize_offline`. `dealer_seconds` counts only replenishment
+    stalls incurred while THIS view was serving (online time); provisioned
+    generation stays on the bank's offline clock."""
+
+    def __init__(self, bank: TripleBank, key: tuple,
+                 log: CommLog | None = None):
+        self.bank = bank
+        self.key = tuple(key)
+        self.log = log if log is not None else CommLog()
+        self.dealer_seconds = 0.0
+        self.modelled_ot_seconds = 0.0
+        self.n_matmul = 0
+        self.n_mul = 0
+        self.n_bin = 0
+
+    def _next(self, kind: str, shape) -> tuple:
+        r0 = self.bank.replenish_seconds
+        out = self.bank._pop(_class_key(kind, shape), self.key)
+        self.dealer_seconds += self.bank.replenish_seconds - r0
+        return out
+
+    def matmul_triple(self, shape_a, shape_b, *, tag: str = "misc") -> MatmulTriple:
+        _check_matmul_dims(shape_a, shape_b)
+        u0, u1, v0, v1, z0, z1 = self._next(
+            "matmul", (tuple(shape_a), tuple(shape_b)))
+        self.n_matmul += 1
+        return MatmulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
+
+    def mul_triple(self, shape, *, tag: str = "misc") -> MulTriple:
+        _check_elemwise_shape("mul", shape)
+        u0, u1, v0, v1, z0, z1 = self._next("mul", shape)
+        self.n_mul += 1
+        return MulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
+
+    def bin_triple(self, shape, *, tag: str = "misc") -> BinTriple:
+        _check_elemwise_shape("bin", shape)
+        u0, u1, v0, v1, z0, z1 = self._next("bin", shape)
+        self.n_bin += 1
+        return BinTriple(BShare(u0, u1), BShare(v0, v1), BShare(z0, z1))
+
+    def rand(self, shape) -> jnp.ndarray:
+        return self._next("rand", shape)[0]
+
+    def mask_seed(self) -> int:
+        return int(self._next("seed", ())[0])

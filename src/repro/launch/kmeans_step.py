@@ -188,9 +188,12 @@ def _split_he(flat, shapes):
 # Program bodies — ONE implementation per online stage, all combos
 # ---------------------------------------------------------------------------
 
-def _s1_body(ctx, geo: FitGeometry, xa, xb, mu: AShare, he):
+def _s1_body(ctx, geo: FitGeometry, xa, xb, mu: AShare, he,
+             return_min: bool = False):
     """S1: vectorized distances D' = U - 2 X mu^T + tournament argmin,
-    up to the Protocol-2 boundary. Returns the (n, k) assignment shares.
+    up to the Protocol-2 boundary. Returns the (n, k) assignment shares
+    (plus, with return_min, the (n,) share of the winning D' value — the
+    scoring path's distance-to-assigned-centroid, free from the tournament).
 
     he=None  -> dense: the joint public-x-share blocks are Beaver matmuls
     consuming pool triples inside the program.
@@ -229,6 +232,8 @@ def _s1_body(ctx, geo: FitGeometry, xa, xb, mu: AShare, he):
                      jnp.concatenate([j_a.s1, loc_b + j_b.s1], 0))
     d2 = P.sub(AShare(u.s0[None, :], u.s1[None, :]), P.lshift(xmu, 1))
     dist = P.trunc(d2, ring.F)
+    if return_min:
+        return P.argmin_onehot(ctx, dist, return_min=True)
     return P.argmin_onehot(ctx, dist)
 
 
@@ -500,8 +505,115 @@ def fit_programs(partition: str, sparse: bool, shape_a, shape_b, k: int,
     return progs
 
 
+# ---------------------------------------------------------------------------
+# predict_program — the S1 body alone, serving new batches against a model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PredictGeometry:
+    """Shapes of one secure-scoring batch against a fitted (k, d) model.
+    Vertical: both parties hold the same batch rows' column slices,
+    shape_a = (m, d_a), shape_b = (m, d_b). Horizontal: each party owns
+    whole arrival rows, shape_a = (m_a, d), shape_b = (m_b, d); outputs are
+    ordered [A rows; B rows]. Hashable — it keys the compiled-program
+    cache and (through the predict-plan key) the TripleBank lookup."""
+
+    partition: str
+    sparse: bool
+    shape_a: tuple
+    shape_b: tuple
+    k: int
+    with_scores: bool = False
+
+    def fit_geometry(self) -> FitGeometry:
+        """The S1 body is geometry-parameterized by FitGeometry; a predict
+        batch is the same geometry with the batch rows in place of the
+        training rows (validation included)."""
+        return FitGeometry(self.partition, self.sparse,
+                           self.shape_a, self.shape_b, self.k)
+
+
+class PredictProgram(NamedTuple):
+    """AOT-compiled batched scoring launch plus the offline schedule one
+    call consumes. Per request:
+
+        he1  = host Protocol-2 on the centroid shares          (sparse only)
+        outs = fn(xa, xb, mu0, mu1, *he1, *flat)               ONE launch
+        (c0, c1) = outs[:2]; (v0, v1) = outs[2:]               (with_scores)
+
+    where flat = materialize_offline(requests, dealer). The min-distance
+    shares v are D'(x, mu_c) = ||mu_c||^2 - 2 x.mu_c at scale f; the caller
+    adds the locally-computable ||x||^2 share to get the true squared
+    distance (core/kmeans.SecureKMeans.score)."""
+
+    geo: PredictGeometry
+    fn: Any
+    requests: list
+
+
+_PREDICT_PROGRAM_CACHE: dict[tuple, PredictProgram] = {}
+
+
+def predict_program(partition: str, sparse: bool, shape_a, shape_b, k: int,
+                    with_scores: bool = False,
+                    backend: str = "auto") -> PredictProgram:
+    """Build (or fetch from the cross-request cache) the compiled scoring
+    launch for one batch geometry — the S1 body of `fit_programs` extracted
+    and parameterized by `PredictGeometry`. Dense combos consume pool
+    triples inside the program; sparse combos take the Protocol-2 joint
+    products (computable from the centroid shares alone, so the host runs
+    the exchange BEFORE the launch) as share inputs. Hardcodes f = ring.F
+    like the rest of the launch path."""
+    from repro.core.backend import get_backend
+    ring_backend = get_backend(backend)
+    geo = PredictGeometry(partition, bool(sparse),
+                          tuple(int(s) for s in shape_a),
+                          tuple(int(s) for s in shape_b), int(k),
+                          bool(with_scores))
+    key = (geo, ring_backend.name)
+    hit = _PREDICT_PROGRAM_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    fgeo = geo.fit_geometry()
+    n, d = fgeo.n, fgeo.d
+    rec1 = RecordingDealer()
+
+    def trace():
+        xa = jnp.zeros(geo.shape_a, ring.DTYPE)
+        xb = jnp.zeros(geo.shape_b, ring.DTYPE)
+        mu = AShare(jnp.zeros((k, d), ring.DTYPE),
+                    jnp.zeros((k, d), ring.DTYPE))
+        ctx = P.Ctx(dealer=rec1, log=CommLog(), backend=ring_backend)
+        return _s1_body(ctx, fgeo, xa, xb, mu, _zero_he(fgeo.he_shapes_s1()),
+                        return_min=with_scores)
+
+    jax.eval_shape(trace)
+    requests = list(rec1.requests)
+
+    def fn(xa, xb, mu0, mu1, *rest):
+        he, flat = _split_he(rest, fgeo.he_shapes_s1())
+        ctx = P.Ctx(dealer=ListDealer(flat), log=CommLog(),
+                    backend=ring_backend)
+        out = _s1_body(ctx, fgeo, xa, xb, AShare(mu0, mu1), he,
+                       return_min=with_scores)
+        if with_scores:
+            c, v = out
+            return c.s0, c.s1, v.s0, v.s1
+        return out.s0, out.s1
+
+    args = (_sds(geo.shape_a), _sds(geo.shape_b),
+            _sds((k, d)), _sds((k, d))) \
+        + tuple(_he_specs(fgeo.he_shapes_s1())) \
+        + tuple(offline_tensor_specs(requests, n))
+    prog = PredictProgram(geo, jax.jit(fn).lower(*args).compile(), requests)
+    _PREDICT_PROGRAM_CACHE[key] = prog
+    return prog
+
+
 def clear_program_cache() -> None:
     _PROGRAM_CACHE.clear()
+    _PREDICT_PROGRAM_CACHE.clear()
 
 
 def online_iteration_fn(n: int, d: int, k: int, d_a: int,

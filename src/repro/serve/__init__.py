@@ -1,0 +1,13 @@
+"""Secure scoring & serving subsystem.
+
+Turns a fitted `SecureKMeans` model into a service: arrival batches of new
+transactions are padded onto a small ladder of compiled `predict_program`
+geometries, scored against the secret-shared centroids (assignments and/or
+outlier scores are the ONLY reveals), and fed correlated randomness from a
+persistent `TripleBank` provisioned offline.
+"""
+from repro.serve.service import (BatchLadder, ScoringResponse,
+                                 ScoringService, ServiceStats)
+
+__all__ = ["BatchLadder", "ScoringResponse", "ScoringService",
+           "ServiceStats"]

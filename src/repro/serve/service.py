@@ -1,0 +1,310 @@
+"""Secure fraud-scoring service loop (paper Sec 5.6 deployed).
+
+A fitted model must score a continuous stream of NEW transactions. Three
+pieces make that a service rather than a per-request protocol run:
+
+* **Batch ladder** — arrival batches are ragged; compiling a
+  `predict_program` per exact batch size would trace/compile on the hot
+  path. The service pads each coalesced group up to a small ladder of fixed
+  geometries (`BatchLadder`), so steady state runs entirely from the
+  compiled-program and predict-plan caches. Pad rows are zeros; their
+  outputs are sliced off before anything is revealed.
+* **Request coalescing** — queued requests are merged FIFO until the next
+  one would overflow the top rung, then scored in ONE launch; a single
+  oversized request is chunked across launches. Per-request outputs are
+  split back out of the group results.
+* **TripleBank** — the correlated randomness for every ladder geometry is
+  provisioned ONCE (offline) under the predict-plan key and drained across
+  requests and fits; a stock-out auto-replenishes (counted — size
+  `provision_copies` so replenishment stays off the online path).
+
+The service reveals ONLY the per-transaction outputs (cluster label and/or
+outlier score) — centroids and per-cluster structure stay secret-shared.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import ring
+from repro.core.kmeans import KMeansResult, SecureKMeans
+from repro.core.triples import TripleBank, serve_seed
+
+
+class BatchLadder:
+    """Sorted rung sizes; `rung_for(m)` is the smallest rung >= m (the pad
+    target), falling back to the top rung for oversized groups (the caller
+    chunks those)."""
+
+    def __init__(self, rungs=(32, 128, 512)):
+        if not rungs:
+            raise ValueError("BatchLadder needs at least one rung")
+        self.rungs = tuple(sorted(int(r) for r in rungs))
+        if self.rungs[0] < 1:
+            raise ValueError(f"ladder rungs must be >= 1, got {self.rungs}")
+
+    @property
+    def max_rung(self) -> int:
+        return self.rungs[-1]
+
+    def rung_for(self, m: int) -> int:
+        for r in self.rungs:
+            if m <= r:
+                return r
+        return self.rungs[-1]
+
+
+@dataclasses.dataclass
+class ScoringResponse:
+    request_id: int
+    labels: np.ndarray                # horizontal: [A rows; B rows] order
+    scores: np.ndarray | None         # squared distance to assigned centroid
+    rows: int
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    requests: int = 0
+    rows: int = 0                     # real transaction rows scored
+    padded_rows: int = 0              # launch rows incl. ladder padding
+    launches: int = 0
+    online_seconds: float = 0.0       # drain wall-clock
+    online_bytes: int = 0             # per-launch protocol traffic
+    triples_served: int = 0           # correlated-randomness requests drawn
+    replenish_events: int = 0         # bank stock-outs hit on the hot path
+
+    def as_dict(self) -> dict:
+        s = max(self.online_seconds, 1e-9)
+        return {
+            "requests": self.requests, "rows": self.rows,
+            "padded_rows": self.padded_rows, "launches": self.launches,
+            "online_seconds": round(self.online_seconds, 4),
+            "rows_per_s": round(self.rows / s, 1),
+            "triples_per_request": round(
+                self.triples_served / max(1, self.requests), 1),
+            "bytes_per_request": int(
+                self.online_bytes / max(1, self.requests)),
+            "pad_overhead": round(
+                self.padded_rows / max(1, self.rows), 3),
+            "replenish_events": self.replenish_events,
+        }
+
+
+class ScoringService:
+    """Queue -> coalesce -> pad-to-ladder -> compiled secure scoring.
+
+    `model` is a `SecureKMeans` whose config describes the deployment
+    (partition, sparsity, backend); `result` the fitted model to serve
+    (defaults to `model.result_`). Vertical partitions need the feature
+    split (`d_a`, `d_b`) to pre-provision; horizontal infers `d` from the
+    centroids. `warm()` — called lazily on first drain — compiles every
+    rung's `predict_program` and provisions `provision_copies` launches of
+    correlated randomness per rung into the bank; both are pure offline
+    work."""
+
+    def __init__(self, model: SecureKMeans,
+                 result: KMeansResult | None = None, *,
+                 bank: TripleBank | None = None, ladder=(32, 128, 512),
+                 with_scores: bool = True, provision_copies: int = 4,
+                 d_a: int | None = None, d_b: int | None = None):
+        self.model = model
+        self.result = result if result is not None \
+            else getattr(model, "result_", None)
+        if self.result is None:
+            raise ValueError("ScoringService needs a fitted model")
+        self.bank = bank if bank is not None \
+            else TripleBank(seed=serve_seed(model.cfg.seed))
+        self.ladder = ladder if isinstance(ladder, BatchLadder) \
+            else BatchLadder(ladder)
+        self.with_scores = with_scores
+        self.provision_copies = int(provision_copies)
+        d = int(self.result.centroids.shape[1])
+        if model.cfg.partition == "vertical":
+            if d_a is None or d_b is None:
+                raise ValueError("vertical service needs the feature split "
+                                 "(d_a, d_b) to size its geometries")
+            if d_a + d_b != d:
+                raise ValueError(f"d_a + d_b = {d_a + d_b} != model d = {d}")
+            self.d_a, self.d_b = int(d_a), int(d_b)
+        else:
+            self.d_a = self.d_b = d
+        self._queue: list = []
+        self._next_id = 0
+        self._warmed = False
+        self.offline_seconds = 0.0    # warm(): compiles + provisioning
+        self.stats = ServiceStats()
+
+    # -- geometry helpers -------------------------------------------------
+    def _rung_shapes(self, r: int) -> tuple:
+        # vertical: column split; horizontal: d_a == d_b == d, both parties'
+        # row blocks padded to the same rung
+        return (r, self.d_a), (r, self.d_b)
+
+    def warm(self) -> None:
+        """Offline: compile every rung's program and provision its triples
+        (idempotent; re-warming only tops up unprovisioned rungs)."""
+        from repro.launch import kmeans_step as K
+        t0 = time.perf_counter()
+        cfg = self.model.cfg
+        for r in self.ladder.rungs:
+            sa, sb = self._rung_shapes(r)
+            key, plan, _ = self.model.plan_predict(sa, sb, self.with_scores)
+            if key not in self.bank.keys():
+                self.bank.provision(key, plan, copies=self.provision_copies)
+            if cfg.vectorized and cfg.f == ring.F \
+                    and self.model._traceable_backend():
+                K.predict_program(cfg.partition, cfg.sparse, sa, sb, cfg.k,
+                                  with_scores=self.with_scores,
+                                  backend=cfg.backend)
+        self._warmed = True
+        self.offline_seconds += time.perf_counter() - t0
+
+    # -- request queue ----------------------------------------------------
+    def submit(self, x_a: np.ndarray, x_b: np.ndarray) -> int:
+        """Enqueue one arrival batch; returns its request id. Vertical:
+        equal row counts (the parties' column slices of the same
+        transactions); horizontal: each party's own arrival rows."""
+        x_a = np.asarray(x_a, np.float64)
+        x_b = np.asarray(x_b, np.float64)
+        if self.model.cfg.partition == "vertical" \
+                and x_a.shape[0] != x_b.shape[0]:
+            raise ValueError("vertical request needs equal batch rows")
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append((rid, x_a, x_b))
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- the serving loop -------------------------------------------------
+    def drain(self) -> list[ScoringResponse]:
+        """Score everything queued: coalesce FIFO up to the top rung, pad,
+        launch, split per-request. Returns responses in submit order."""
+        if not self._warmed:
+            self.warm()
+        responses = []
+        t0 = time.perf_counter()
+        served0 = self.bank.served_requests
+        repl0 = self.bank.replenish_events
+        while self._queue:
+            group = [self._queue.pop(0)]
+            while self._queue and self._fits(group, self._queue[0]):
+                group.append(self._queue.pop(0))
+            responses.extend(self._run_group(group))
+        self.stats.online_seconds += time.perf_counter() - t0
+        self.stats.triples_served += self.bank.served_requests - served0
+        self.stats.replenish_events += self.bank.replenish_events - repl0
+        return responses
+
+    def _fits(self, group, nxt) -> bool:
+        top = self.ladder.max_rung
+        if self.model.cfg.partition == "vertical":
+            return sum(g[1].shape[0] for g in group) \
+                + nxt[1].shape[0] <= top
+        return (sum(g[1].shape[0] for g in group) + nxt[1].shape[0] <= top
+                and sum(g[2].shape[0] for g in group)
+                + nxt[2].shape[0] <= top)
+
+    def _run_group(self, group) -> list[ScoringResponse]:
+        """One coalesced group -> one or more padded launches; split the
+        stacked outputs back per request."""
+        cfg = self.model.cfg
+        xa = np.concatenate([g[1] for g in group], 0)
+        xb = np.concatenate([g[2] for g in group], 0)
+        # horizontal outputs come back ordered [all A rows; all B rows]
+        labels, scores = self._launch_chunked(xa, xb)
+        out = []
+        a_off = b_off = 0
+        na_tot = xa.shape[0]
+        for rid, ga, gb in group:
+            na, nb = ga.shape[0], gb.shape[0]
+            if cfg.partition == "vertical":
+                sel = slice(a_off, a_off + na)
+                lab = labels[sel]
+                sc = scores[sel] if scores is not None else None
+            else:
+                idx = np.r_[a_off:a_off + na,
+                            na_tot + b_off:na_tot + b_off + nb]
+                lab = labels[idx]
+                sc = scores[idx] if scores is not None else None
+                b_off += nb
+            a_off += na
+            out.append(ScoringResponse(rid, lab, sc,
+                                       rows=na + (0 if cfg.partition ==
+                                                  "vertical" else nb)))
+            self.stats.requests += 1
+            self.stats.rows += out[-1].rows
+        return out
+
+    def _launch_chunked(self, xa, xb):
+        """Pad to the ladder and launch; oversized inputs run as several
+        top-rung chunks. Returns (labels, scores) for the REAL rows only —
+        horizontal results ordered [all A rows; all B rows]."""
+        top = self.ladder.max_rung
+        if self.model.cfg.partition == "vertical":
+            labs, scs = [], []
+            for lo in range(0, max(1, xa.shape[0]), top):
+                la, sc = self._launch_one(xa[lo:lo + top], xb[lo:lo + top])
+                labs.append(la)
+                scs.append(sc)
+            labels = np.concatenate(labs)
+            scores = None if scs[0] is None else np.concatenate(scs)
+            return labels, scores
+        la_parts, lb_parts, sa_parts, sb_parts = [], [], [], []
+        chunks = max(1, -(-max(xa.shape[0], xb.shape[0]) // top))
+        for i in range(chunks):
+            ca = xa[i * top:(i + 1) * top]
+            cb = xb[i * top:(i + 1) * top]
+            la, sc = self._launch_one(ca, cb)
+            la_parts.append(la[:ca.shape[0]])
+            lb_parts.append(la[ca.shape[0]:])
+            if sc is not None:
+                sa_parts.append(sc[:ca.shape[0]])
+                sb_parts.append(sc[ca.shape[0]:])
+        labels = np.concatenate(la_parts + lb_parts)
+        scores = np.concatenate(sa_parts + sb_parts) if sa_parts else None
+        return labels, scores
+
+    def _launch_one(self, xa, xb):
+        """Pad one chunk up to its rung, score it with a bank dealer, and
+        reveal — returning only the real rows (vertical) or the real
+        [A block; B block] concatenation (horizontal)."""
+        cfg = self.model.cfg
+        if cfg.partition == "vertical":
+            r = self.ladder.rung_for(xa.shape[0])
+            pa = _pad_rows(xa, r)
+            pb = _pad_rows(xb, r)
+            m = xa.shape[0]
+        else:
+            r = self.ladder.rung_for(max(xa.shape[0], xb.shape[0]))
+            pa = _pad_rows(xa, r)
+            pb = _pad_rows(xb, r)
+            m = None
+        sa, sb = pa.shape, pb.shape
+        key, plan, _ = self.model.plan_predict(sa, sb, self.with_scores)
+        if key not in self.bank.keys():
+            # a rung the warmup never saw (e.g. ladder edited live)
+            self.bank.provision(key, plan, copies=self.provision_copies)
+        dealer = self.bank.dealer(key)
+        run = self.model.score if self.with_scores else self.model.predict
+        pr = run(pa, pb, self.result, dealer=dealer)
+        self.stats.launches += 1
+        self.stats.padded_rows += 2 * r if cfg.partition == "horizontal" \
+            else r
+        self.stats.online_bytes += pr.log.total_bytes("online")
+        labels = pr.labels_plain()
+        scores = pr.scores_plain() if self.with_scores else None
+        if cfg.partition == "vertical":
+            return labels[:m], None if scores is None else scores[:m]
+        idx = np.r_[0:xa.shape[0], r:r + xb.shape[0]]
+        return labels[idx], None if scores is None else scores[idx]
+
+
+def _pad_rows(x: np.ndarray, rows: int) -> np.ndarray:
+    if x.shape[0] == rows:
+        return x
+    pad = np.zeros((rows - x.shape[0], x.shape[1]), x.dtype)
+    return np.concatenate([x, pad], 0)

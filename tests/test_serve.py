@@ -1,0 +1,350 @@
+"""Secure scoring & serving subsystem tests.
+
+Load-bearing properties: (1) `SecureKMeans.predict`/`score` assigns new
+batches exactly like nearest-centroid under the (never actually revealed)
+model, for all four partition x sparsity combos; (2) the compiled
+`predict_program` launch is bit-exact with the eager reference, and a
+provisioned `TripleBank` is bit-exact with the on-demand dealer; (3) the
+bank round-trips through np.savez persistence — including the per-class
+RNG stream positions, so post-reload replenishment stays deterministic —
+and auto-replenishes on stock-out instead of crashing; (4) the
+`ScoringService` coalesce/pad/launch loop returns per-request outputs
+identical to direct scoring."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.fraud import (FraudDataset, detect_outliers, fraud_scores,
+                              jaccard)
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+from repro.core.triples import (PoolExhaustedError, TripleBank,
+                                TrustedDealer, serve_seed)
+from repro.serve import BatchLadder, ScoringService
+
+
+def _blobs(n, d, k, seed, sparse_frac=0.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-4, 4, (k, d))
+    lab = rng.integers(0, k, n)
+    x = centers[lab] + rng.normal(0, 0.3, (n, d))
+    if sparse_frac:
+        x = x * (rng.random((n, d)) >= sparse_frac)
+    return x
+
+
+def _split(x, partition):
+    n, d = x.shape
+    if partition == "vertical":
+        return x[:, :d // 2], x[:, d // 2:]
+    return x[:n // 2], x[n // 2:]
+
+
+def _fitted(partition, sparse, *, n=96, d=4, k=3, seed=5):
+    x = _blobs(n, d, k, 1, 0.5 if sparse else 0.0)
+    a, b = _split(x, partition)
+    km = SecureKMeans(KMeansConfig(k=k, iters=3, partition=partition,
+                                   sparse=sparse, seed=seed, backend="xla"))
+    res = km.fit(a, b)
+    return km, res
+
+
+def _batch(partition, sparse, m=20, d=4, k=3, seed=9):
+    xq = _blobs(m, d, k, seed, 0.5 if sparse else 0.0)
+    return (xq, *_split(xq, partition))
+
+
+# ---------------------------------------------------------------------------
+# predict parity vs the plaintext nearest-centroid oracle (4 combos)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("partition", ["vertical", "horizontal"])
+@pytest.mark.parametrize("sparse", [False, True])
+def test_predict_matches_nearest_centroid(partition, sparse):
+    km, res = _fitted(partition, sparse)
+    xq, qa, qb = _batch(partition, sparse)
+    pr = km.predict(qa, qb)
+    mu = res.centroids_plain()     # oracle only — predict never reveals mu
+    full = xq if partition == "vertical" else np.concatenate(
+        [qa, qb], 0)               # horizontal outputs: [A rows; B rows]
+    ref = ((mu ** 2).sum(1)[None] - 2 * full @ mu.T).argmin(1)
+    assert (pr.labels_plain() == ref).mean() == 1.0
+
+
+@pytest.mark.parametrize("partition", ["vertical", "horizontal"])
+def test_score_matches_squared_distance(partition):
+    km, res = _fitted(partition, False)
+    xq, qa, qb = _batch(partition, False)
+    pr = km.score(qa, qb)
+    mu = res.centroids_plain()
+    full = xq if partition == "vertical" else np.concatenate([qa, qb], 0)
+    lab = pr.labels_plain()
+    want = ((full - mu[lab]) ** 2).sum(1)
+    np.testing.assert_allclose(pr.scores_plain(), want, atol=1e-2)
+
+
+def test_predict_needs_a_fitted_model():
+    km = SecureKMeans(KMeansConfig(k=3, iters=2, backend="xla"))
+    with pytest.raises(ValueError, match="fitted"):
+        km.predict(np.zeros((4, 2)), np.zeros((4, 2)))
+
+
+def test_predict_default_randomness_is_domain_separated():
+    """The default predict dealer must NOT replay the fit's per-class
+    streams: mask reuse across protocol runs on overlapping shape-classes
+    would leak differences of secrets. serve_seed(s) != s, and the default
+    path serves different words than a fit-seeded dealer would."""
+    assert serve_seed(5) != 5
+    km, _ = _fitted("vertical", False, seed=5)
+    _, qa, qb = _batch("vertical", False)
+    default = km.score(qa, qb)                       # serve_seed(cfg.seed)
+    fit_seeded = km.score(qa, qb, dealer=TrustedDealer(seed=5))
+    assert not np.array_equal(
+        np.asarray(default.scores.s0, np.uint64),
+        np.asarray(fit_seeded.scores.s0, np.uint64))
+    # ...while the OUTPUT is dealer-independent (masks cancel)
+    np.testing.assert_array_equal(default.labels_plain(),
+                                  fit_seeded.labels_plain())
+
+
+def test_predict_compiled_true_rejects_unsupported_configs():
+    """An explicit compiled=True must error loudly rather than truncate at
+    the wrong fixed-point scale or die inside the tracer."""
+    x = _blobs(48, 4, 2, 3)
+    km = SecureKMeans(KMeansConfig(k=2, iters=2, seed=5, f=16,
+                                   backend="xla"))
+    km.fit(x[:, :2], x[:, 2:])
+    with pytest.raises(ValueError, match="hardcodes"):
+        km.predict(x[:, :2], x[:, 2:], compiled=True)
+    km2 = SecureKMeans(KMeansConfig(k=2, iters=2, seed=5, backend="numpy"))
+    km2.fit(x[:, :2], x[:, 2:])
+    with pytest.raises(ValueError, match="numpy backend"):
+        km2.predict(x[:, :2], x[:, 2:], compiled=True)
+    km2.predict(x[:, :2], x[:, 2:])                  # auto path: eager, fine
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: eager == compiled, bank == on-demand
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("partition", ["vertical", "horizontal"])
+@pytest.mark.parametrize("sparse", [False, True])
+def test_predict_eager_compiled_bit_exact(partition, sparse):
+    """Same per-class dealer streams -> identical share words whether the
+    scoring launch is the AOT-compiled predict_program or the eager
+    reference protocol, for every combo (the sparse ones run Protocol 2
+    host-side before the launch either way)."""
+    km, _ = _fitted(partition, sparse)
+    _, qa, qb = _batch(partition, sparse)
+    fast = km.score(qa, qb, dealer=TrustedDealer(seed=7))
+    ref = km.score(qa, qb, dealer=TrustedDealer(seed=7), compiled=False)
+    for field in ("assignment", "scores"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fast, field).s0, np.uint64),
+            np.asarray(getattr(ref, field).s0, np.uint64))
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fast, field).s1, np.uint64),
+            np.asarray(getattr(ref, field).s1, np.uint64))
+    # shape-determined traffic: the compiled replay equals the eager tally
+    assert fast.log.by_tag("online") == ref.log.by_tag("online")
+
+
+def test_predict_banked_bit_exact_vs_on_demand():
+    """A freshly provisioned TripleBank serves the same words as a
+    same-seeded TrustedDealer: pooled serving changes nothing downstream."""
+    km, _ = _fitted("vertical", False)
+    _, qa, qb = _batch("vertical", False)
+    key, plan, _ = km.plan_predict(qa.shape, qb.shape, True)
+    bank = TripleBank(seed=7)
+    bank.provision(key, plan, copies=1)
+    banked = km.score(qa, qb, dealer=bank.dealer(key))
+    ondemand = km.score(qa, qb, dealer=TrustedDealer(seed=7))
+    np.testing.assert_array_equal(
+        np.asarray(banked.scores.s0, np.uint64),
+        np.asarray(ondemand.scores.s0, np.uint64))
+    np.testing.assert_array_equal(
+        np.asarray(banked.assignment.s1, np.uint64),
+        np.asarray(ondemand.assignment.s1, np.uint64))
+
+
+# ---------------------------------------------------------------------------
+# TripleBank: superpool across geometries/fits, persistence, replenish
+# ---------------------------------------------------------------------------
+
+def test_bank_serves_two_geometries_across_two_fits_after_reload(tmp_path):
+    """ONE provisioning pass covers two predict geometries and two fitted
+    models, and survives a save/reload in between (the acceptance
+    criterion). The reloaded bank serves words identical to the original's."""
+    km1, res1 = _fitted("vertical", False, seed=5)
+    km2, res2 = _fitted("vertical", False, seed=6)
+    geos = [_batch("vertical", False, m=8, seed=21),
+            _batch("vertical", False, m=16, seed=22)]
+    bank = TripleBank(seed=13)
+    for _, qa, qb in geos:
+        key, plan, _ = km1.plan_predict(qa.shape, qb.shape, True)
+        bank.provision(key, plan, copies=4)     # 4 serves per geometry
+    path = os.path.join(tmp_path, "bank.npz")
+    bank.save(path)
+    loaded = TripleBank.load(path)
+    assert sorted(loaded.stock().items()) == sorted(bank.stock().items())
+    for km, res in ((km1, res1), (km2, res2)):
+        for _, qa, qb in geos:
+            key, _, _ = km.plan_predict(qa.shape, qb.shape, True)
+            a = km.score(qa, qb, res, dealer=bank.dealer(key))
+            b = km.score(qa, qb, res, dealer=loaded.dealer(key))
+            np.testing.assert_array_equal(
+                np.asarray(a.scores.s1, np.uint64),
+                np.asarray(b.scores.s1, np.uint64))
+    assert loaded.replenish_events == 0         # all from provisioned stock
+
+
+def test_bank_save_path_used_verbatim(tmp_path):
+    """save(p) -> load(p) must pair up even when p lacks the '.npz' suffix
+    (np.savez's silent suffixing is bypassed)."""
+    km, _ = _fitted("vertical", False)
+    _, qa, qb = _batch("vertical", False, m=8)
+    key, plan, _ = km.plan_predict(qa.shape, qb.shape, False)
+    bank = TripleBank(seed=1)
+    bank.provision(key, plan, copies=1)
+    path = os.path.join(tmp_path, "bank_no_suffix")
+    bank.save(path)
+    assert os.path.exists(path)
+    loaded = TripleBank.load(path)
+    assert loaded.stock() == bank.stock()
+
+
+def test_bank_reload_preserves_replenish_streams(tmp_path):
+    """Post-reload replenishment continues the SAME per-class streams the
+    original bank would have used: drain past the provisioned stock on
+    both copies and compare."""
+    km, _ = _fitted("vertical", False)
+    _, qa, qb = _batch("vertical", False, m=8)
+    key, plan, _ = km.plan_predict(qa.shape, qb.shape, False)
+    bank = TripleBank(seed=3)
+    bank.provision(key, plan, copies=1)
+    path = os.path.join(tmp_path, "bank.npz")
+    bank.save(path)
+    loaded = TripleBank.load(path)
+    for _ in range(3):                          # serve 1 copies, force 2 repl
+        a = km.predict(qa, qb, dealer=bank.dealer(key))
+        b = km.predict(qa, qb, dealer=loaded.dealer(key))
+        np.testing.assert_array_equal(
+            np.asarray(a.assignment.s0, np.uint64),
+            np.asarray(b.assignment.s0, np.uint64))
+    assert bank.replenish_events == loaded.replenish_events == 2
+
+
+def test_bank_auto_replenish_and_strict_mode():
+    km, _ = _fitted("vertical", False)
+    _, qa, qb = _batch("vertical", False, m=8)
+    key, plan, _ = km.plan_predict(qa.shape, qb.shape, True)
+    bank = TripleBank(seed=2)
+    bank.provision(key, plan, copies=1)
+    km.score(qa, qb, dealer=bank.dealer(key))
+    assert bank.replenish_events == 0
+    km.score(qa, qb, dealer=bank.dealer(key))   # stock-out -> replenish
+    assert bank.replenish_events >= 1
+    strict = TripleBank(seed=2, auto_replenish=False)
+    strict.provision(key, plan, copies=1)
+    km.score(qa, qb, dealer=strict.dealer(key))
+    with pytest.raises(PoolExhaustedError, match="stock-out"):
+        km.score(qa, qb, dealer=strict.dealer(key))
+
+
+def test_bank_unknown_key_raises():
+    bank = TripleBank(seed=0)
+    with pytest.raises(KeyError, match="no plan registered"):
+        bank.dealer(("predict", "nope"))
+
+
+# ---------------------------------------------------------------------------
+# ScoringService: coalesce + pad-to-ladder + per-request splitting
+# ---------------------------------------------------------------------------
+
+def test_batch_ladder():
+    lad = BatchLadder((128, 32))
+    assert lad.rungs == (32, 128)
+    assert lad.rung_for(1) == 32
+    assert lad.rung_for(32) == 32
+    assert lad.rung_for(33) == 128
+    assert lad.rung_for(1000) == 128            # caller chunks
+    with pytest.raises(ValueError):
+        BatchLadder(())
+
+
+@pytest.mark.parametrize("partition", ["vertical", "horizontal"])
+def test_service_matches_direct_scoring(partition):
+    """Ragged submits -> coalesced padded launches -> per-request outputs
+    identical to scoring each request alone (padding reveals nothing and
+    perturbs nothing)."""
+    km, res = _fitted(partition, False)
+    svc = ScoringService(km, res, ladder=(8, 16), with_scores=True,
+                         d_a=2, d_b=2, provision_copies=2)
+    reqs = []
+    for i, m in enumerate([3, 5, 9, 2, 40]):    # 40 > top rung: chunked
+        xq, qa, qb = _batch(partition, False, m=m, seed=100 + i)
+        reqs.append((qa, qb))
+        svc.submit(qa, qb)
+    out = svc.drain()
+    assert [r.request_id for r in out] == list(range(len(reqs)))
+    assert svc.pending() == 0
+    for r, (qa, qb) in zip(out, reqs):
+        direct = km.score(qa, qb, res, dealer=TrustedDealer(seed=1))
+        np.testing.assert_array_equal(r.labels, direct.labels_plain())
+        # padding changes the launch geometry, so the truncation share-
+        # randomness differs: scores agree to the fixed-point LSB (~2^-f),
+        # not bit-exactly
+        np.testing.assert_allclose(r.scores, direct.scores_plain(),
+                                   atol=1e-4)
+    st = svc.stats.as_dict()
+    assert st["requests"] == len(reqs)
+    assert st["rows"] == sum(qa.shape[0] + (qb.shape[0] if partition ==
+                             "horizontal" else 0) for qa, qb in reqs)
+    assert st["padded_rows"] >= st["rows"]
+    assert st["launches"] < len(reqs) + 3       # coalescing actually merges
+
+
+def test_service_drains_bank_and_reports_traffic():
+    km, _ = _fitted("vertical", False)
+    bank = TripleBank(seed=4)
+    svc = ScoringService(km, bank=bank, ladder=(8,), with_scores=True,
+                         d_a=2, d_b=2, provision_copies=3)
+    svc.warm()
+    stock0 = sum(bank.stock().values())
+    assert stock0 > 0                           # provisioned offline
+    for i in range(3):
+        _, qa, qb = _batch("vertical", False, m=6, seed=50 + i)
+        svc.submit(qa, qb)
+    svc.drain()
+    assert sum(bank.stock().values()) < stock0  # the service drained it
+    st = svc.stats.as_dict()
+    assert st["triples_per_request"] > 0
+    assert st["bytes_per_request"] > 0
+    assert st["replenish_events"] == 0          # provisioning covered it
+
+
+def test_service_requires_feature_split_for_vertical():
+    km, _ = _fitted("vertical", False)
+    with pytest.raises(ValueError, match="feature split"):
+        ScoringService(km, ladder=(8,))
+
+
+# ---------------------------------------------------------------------------
+# fraud: secure scoring replaces the revealed-model path
+# ---------------------------------------------------------------------------
+
+def test_fraud_secure_scoring_matches_revealed_model_quality():
+    """The leak-free score path flags (almost) the same outliers as the
+    reveal_model=True escape hatch — secure scoring costs nothing in
+    detection quality. (Scores may differ at cluster boundaries: predict
+    assigns against the FINAL centroids, the revealed path re-uses the
+    last iteration's labels.)"""
+    ds = FraudDataset.synthesize(n=600, d_a=4, d_b=6, seed=1)
+    km = SecureKMeans(KMeansConfig(k=5, iters=5, seed=2))
+    res = km.fit(ds.x_a, ds.x_b)
+    sec = fraud_scores(km, res, ds)
+    rev = fraud_scores(km, res, ds, reveal_model=True)
+    f_sec = detect_outliers(sec, 0.02)          # = the planted fraction
+    f_rev = detect_outliers(rev, 0.02)
+    assert jaccard(f_sec, f_rev) > 0.8
+    assert jaccard(f_sec, ds.y_outlier) > 0.4
