@@ -1,0 +1,167 @@
+"""Minibatch pipeline suite: overlap measured, residency measured.
+
+Two claims from DESIGN.md §11 are made *measured* here, on the sparse-
+vertical workload (the combo whose online path carries real host work —
+the Protocol-2 exchanges — between launches):
+
+* **Overlap**: a pipelined minibatch fit (`pipeline=True`: batch t+1's
+  host exchange + tranche pin run while batch t's S1 launch is on device)
+  is faster than the stream-identical sequential escape hatch
+  (`pipeline=False`) on ONLINE wall-clock. Both fits are asserted
+  bit-exact before timing is reported — the speedup cannot come from
+  computing something different. The headline row uses `offline="pooled"`
+  (randomness pregenerated, so online wall IS the host/device interleave);
+  the streamed rows additionally report the tranche-wait stalls the
+  overlap hides.
+* **Residency**: with `offline="streamed"`, peak triple-pool residency is
+  O(window x batch) — the same fit at 4x the rows holds the same peak pool
+  bytes (`residency_ratio` ~ 1), which is what opens fits whose full pool
+  would not fit in device memory.
+
+Plus a serving row: `ScoringService.drain` with `pipeline` on/off over the
+same request stream (request t+1's exchange + bank draw overlapping
+request t's launch), responses asserted identical.
+
+Writes benchmarks/BENCH_pipeline.json. Full mode: n=16384, batch 2048;
+--quick: n=4096, batch 512 (wired as `python -m benchmarks.run
+--only pipeline --quick`).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import make_blobs
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+from repro.core.triples import TripleBank, serve_seed
+from repro.serve import ScoringService
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "BENCH_pipeline.json")
+
+
+def _assert_bit_exact(r0, r1):
+    np.testing.assert_array_equal(np.asarray(r0.centroids.s0, np.uint64),
+                                  np.asarray(r1.centroids.s0, np.uint64))
+    np.testing.assert_array_equal(np.asarray(r0.assignment.s1, np.uint64),
+                                  np.asarray(r1.assignment.s1, np.uint64))
+
+
+def _fit_row(n, d, k, iters, batch_size, offline, reps=3):
+    x = make_blobs(n, d, k, seed=4, sparse_frac=0.8)
+    a, b = x[:, :d // 2], x[:, d // 2:]
+    base = dict(k=k, iters=iters, seed=3, backend="pallas", sparse=True,
+                batch_size=batch_size)
+    # warmup: compile the batch/finalize programs, trace the stage plans
+    SecureKMeans(KMeansConfig(**base, offline=offline)).fit(a, b)
+    res, secs = {}, {False: [], True: []}
+    for _ in range(reps):
+        for pipe in (False, True):
+            res[pipe] = SecureKMeans(
+                KMeansConfig(**base, offline=offline,
+                             pipeline=pipe)).fit(a, b)
+            secs[pipe].append(res[pipe].online_seconds)
+    _assert_bit_exact(res[False], res[True])
+    # best-of-reps: the container's CPU time is shared, so min is the
+    # least-perturbed observation of each mode
+    seq, pipe = min(secs[False]), min(secs[True])
+    row = {
+        "workload": "fit", "offline": offline, "sparse": True,
+        "partition": "vertical", "n": n, "k": k, "d": d, "iters": iters,
+        "batch_size": batch_size,
+        "batches_per_iter": -(-n // batch_size), "reps": reps,
+        "online_sequential_s": round(seq, 4),
+        "online_pipelined_s": round(pipe, 4),
+        "pipeline_speedup": round(seq / max(pipe, 1e-9), 2),
+        "peak_pool_MB": round(res[True].dealer.pool_bytes / 2**20, 2),
+    }
+    if offline == "streamed":
+        row["tranche_wait_sequential_s"] = round(
+            res[False].dealer.wait_seconds, 4)
+        row["tranche_wait_pipelined_s"] = round(
+            res[True].dealer.wait_seconds, 4)
+    return row
+
+
+def _serve_row(n_train, d, k, rung, requests):
+    x = make_blobs(n_train, d, k, seed=7, sparse_frac=0.8)
+    a, b = x[:, :d // 2], x[:, d // 2:]
+    km = SecureKMeans(KMeansConfig(k=k, iters=2, seed=3, sparse=True,
+                                   backend="pallas", offline="pooled"))
+    res = km.fit(a, b)
+    stream = make_blobs(rung * requests, d, k, seed=9, sparse_frac=0.8)
+    outs, secs = {}, {}
+    for pipe in (False, True):
+        svc = ScoringService(km, res,
+                             bank=TripleBank(seed=serve_seed(km.cfg.seed)),
+                             rungs=(rung,), with_scores=True,
+                             d_a=d // 2, d_b=d // 2,
+                             provision_copies=requests, pipeline=pipe)
+        svc.warm()
+        for i in range(requests):
+            q = stream[i * rung:(i + 1) * rung]
+            svc.submit(q[:, :d // 2], q[:, d // 2:])
+        t0 = svc.stats.online_seconds
+        outs[pipe] = svc.drain()
+        secs[pipe] = svc.stats.online_seconds - t0
+    for r0, r1 in zip(outs[False], outs[True]):
+        np.testing.assert_array_equal(r0.labels, r1.labels)
+        np.testing.assert_array_equal(r0.scores, r1.scores)
+    return {
+        "workload": "serve", "sparse": True, "partition": "vertical",
+        "n_train": n_train, "k": k, "d": d, "rung": rung,
+        "requests": requests,
+        "drain_sequential_s": round(secs[False], 4),
+        "drain_pipelined_s": round(secs[True], 4),
+        "pipeline_speedup": round(secs[False] / max(secs[True], 1e-9), 2),
+    }
+
+
+def run(quick: bool = False):
+    n, bs, iters = (4096, 512, 2) if quick else (16384, 2048, 3)
+    k, d = 8, 32
+    rows = [_fit_row(n, d, k, iters, bs, "pooled")]
+    # residency: SAME batch size at n and n/4 — the streamed peak pool
+    # tracks the batch, so it must not move with n
+    big = _fit_row(n, d, k, iters, bs, "streamed")
+    small = _fit_row(n // 4, d, k, iters, bs, "streamed")
+    big["residency_ratio_vs_quarter_n"] = round(
+        big["peak_pool_MB"] / max(small["peak_pool_MB"], 1e-9), 2)
+    rows += [big, small]
+    rows.append(_serve_row(1024 if quick else 2048, d, k,
+                           128 if quick else 256, 8 if quick else 12))
+    import os as _os
+    with open(BENCH_PATH, "w") as f:
+        json.dump({"rows": rows, "host_cpus": _os.cpu_count(),
+                   "note": "pipeline=True overlaps batch/request t+1's "
+                           "host Protocol-2 exchange + tranche pin with "
+                           "t's in-flight launch; pipeline=False is the "
+                           "stream-identical sequential escape hatch "
+                           "(asserted bit-exact before timing). Pooled fit "
+                           "row = the online host/device interleave alone; "
+                           "streamed rows add tranche-generation stalls "
+                           "(wait_*) and show peak pool residency "
+                           "independent of n at fixed batch "
+                           "(residency_ratio_vs_quarter_n ~ 1 while n "
+                           "grows 4x). CAVEAT on fit overlap: on a host "
+                           "whose 'device' is the CPU itself (host_cpus "
+                           "cores shared between XLA compute threads and "
+                           "the protocol host work), host/device overlap "
+                           "is zero-sum once XLA saturates the cores — "
+                           "the fit rows then measure only the queue-gap "
+                           "hiding (~1.0-1.2x here on 2 cores), while the "
+                           "serve row's long host segments (pad, encode, "
+                           "bank draw, reveal) overlap fully (>1.8x "
+                           "measured). On an accelerator-backed device "
+                           "the fit-side exchange overlap is the same "
+                           "mechanism as the serve row's."},
+                  f, indent=1)
+    return rows
+
+
+def derived(rows):
+    """Headline: fit overlap x serve overlap (pooled fit row, serve row)."""
+    serve = [r for r in rows if r["workload"] == "serve"][0]
+    return (f"fit x{rows[0]['pipeline_speedup']} "
+            f"serve x{serve['pipeline_speedup']}")

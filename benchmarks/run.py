@@ -23,7 +23,7 @@ def main() -> None:
 
     from benchmarks import (fig2_online_offline, fig3_vectorization,
                             fig4_sparse, kernel_bench, online_offline,
-                            q5_fraud, serve_bench, table1_2)
+                            pipeline_bench, q5_fraud, serve_bench, table1_2)
 
     suites = {
         "table1_2_runtime_comm": lambda: table1_2.run(quick=args.quick),
@@ -44,6 +44,11 @@ def main() -> None:
         # service throughput over dense and sparse batch ladders, persisted
         # to benchmarks/BENCH_serve.json
         "serve": lambda: serve_bench.run(quick=args.quick),
+        # `--only pipeline --quick` is the overlap smoke: pipelined vs
+        # sequential minibatch fit + serve drain (bit-exact asserted) and
+        # streamed peak-pool residency vs n, persisted to
+        # benchmarks/BENCH_pipeline.json
+        "pipeline": lambda: pipeline_bench.run(quick=args.quick),
     }
     derived_fns = {
         "table1_2_runtime_comm": table1_2.derived,
@@ -54,6 +59,7 @@ def main() -> None:
         "kernels_interpret": kernel_bench.derived,
         "online_offline": online_offline.derived,
         "serve": serve_bench.derived,
+        "pipeline": pipeline_bench.derived,
     }
     if args.only:
         keep = set(args.only.split(","))

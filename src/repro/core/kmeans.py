@@ -38,7 +38,7 @@ from repro.core.channel import CommLog, NetModel
 from repro.core.he import OU_COST_S, SimulatedPHE
 from repro.core.sharing import AShare, rec, rec_real, share
 from repro.core.sparse import CSRMatrix, secure_sparse_matmul
-from repro.core.triples import (PlanningDealer, PooledDealer,
+from repro.core.triples import (PlanningDealer, PooledDealer, SlotDealer,
                                 StreamingPooledDealer, TriplePlan,
                                 TrustedDealer, serve_seed)
 
@@ -63,6 +63,20 @@ class KMeansConfig:
     # peak pool residency is O(1 iteration) instead of O(iters).
     # "on_demand": synthesize triples inside the loop (baseline).
     offline: Literal["on_demand", "pooled", "streamed"] = "on_demand"
+    # Minibatch Lloyd: each iteration is still one full pass over the data,
+    # but processed as ceil(n / batch_size)-row batches whose S3 partial
+    # sums accumulate in secret-shared running-sum/count accumulators —
+    # peak launch/pool memory becomes O(batch), and the per-batch host
+    # exchanges can overlap device launches (`pipeline`). None = full batch
+    # (the unchanged single-pass path). batch_size >= n is bit-exact with
+    # the full-batch pooled fast path. Requires offline="pooled"/"streamed"
+    # and a compilable config (vectorized, f=ring.F, traceable backend).
+    batch_size: int | None = None
+    # With batch_size set: run batch t+1's Protocol-2 exchange + tranche pin
+    # on the host while batch t's S1 launch is on device (launch/pipeline).
+    # pipeline=False is the stream-identical sequential escape hatch — same
+    # shares, same CommLog, same dealer words.
+    pipeline: bool = True
 
     def __post_init__(self):
         if self.iters < 1:
@@ -74,6 +88,10 @@ class KMeansConfig:
             raise ValueError(
                 f"KMeansConfig.offline must be 'on_demand', 'pooled' or "
                 f"'streamed', got {self.offline!r}")
+        if self.batch_size is not None and self.batch_size < 1:
+            raise ValueError(
+                f"KMeansConfig.batch_size must be None (full batch) or "
+                f">= 1, got {self.batch_size}")
 
 
 @dataclasses.dataclass
@@ -82,7 +100,7 @@ class KMeansResult:
     assignment: AShare                # (n, k) one-hot shares, scale 1
     iters_run: int
     log: CommLog
-    dealer: "TrustedDealer | PooledDealer | StreamingPooledDealer"
+    dealer: "TrustedDealer | PooledDealer | StreamingPooledDealer | SlotDealer"
     online_seconds: float             # loop wall minus in-loop dealer work
     offline_dealer_seconds: float     # triple synthesis (+ plan, if pooled)
     offline_modelled_ot_seconds: float
@@ -135,6 +153,24 @@ class PredictResult:
         return np.asarray(ring.decode(rec(self.scores), self.f))
 
 
+@dataclasses.dataclass
+class PreparedPredict:
+    """Host-phase output of one compiled scoring launch
+    (`SecureKMeans.predict_prepare`): everything `predict_launch` needs to
+    dispatch and `predict_collect` needs to finish. Produced on the main
+    thread; the pipelined serving loop prepares request t+1 while request
+    t's launch is on device."""
+
+    prog: object                      # launch.kmeans_step.PredictProgram
+    args: tuple                       # staged program inputs (device-ready)
+    log: CommLog                      # the request's live log
+    comm: CommLog                     # traced per-launch traffic to replay
+    with_scores: bool
+    x_a: np.ndarray                   # plaintext slices (for ||x||^2)
+    x_b: np.ndarray
+    t0: float
+
+
 # (shapes, cfg-key) -> (one-iteration TriplePlan, one-iteration CommLog).
 # The schedule is data-independent, so identical-shape fits share it; see
 # SecureKMeans._plan_offline_iter.
@@ -181,6 +217,13 @@ class SecureKMeans:
 
         mu = self._init_centroids(ctx, rng, x_a, x_b)
 
+        if cfg.batch_size is not None:
+            # minibatch Lloyd: batched S1/S3-partial launches with secret-
+            # shared running-sum accumulators and (optionally) pipelined
+            # host exchanges — its own loop below
+            return self._fit_minibatch(ctx, enc_a, enc_b, csr_a, csr_b,
+                                       mu, n, d)
+
         # pooled/streamed offline phase: trace the schedule (cached across
         # same-shape fits), bulk-generate the pools, upload once, and AOT-
         # compile the per-iteration S1/S3 program pair that consumes them —
@@ -217,9 +260,11 @@ class SecureKMeans:
                 ctx.dealer = PooledDealer(iter_plan.repeat(cfg.iters),
                                           seed=cfg.seed, log=ctx.log)
             else:
+                # group="auto": tiny k*d tranches share one background-
+                # worker wakeup (bit-exact either way)
                 ctx.dealer = StreamingPooledDealer(iter_plan, cfg.iters,
                                                    seed=cfg.seed,
-                                                   log=ctx.log)
+                                                   log=ctx.log, group="auto")
 
         t_start = time.perf_counter()
         dealer_s_pre = ctx.dealer.dealer_seconds
@@ -305,6 +350,268 @@ class SecureKMeans:
         return self.result_
 
     # ------------------------------------------------------------------ #
+    # Minibatch Lloyd — batched S1/S3-partial launches, pipelined exchanges
+    # ------------------------------------------------------------------ #
+    def _fit_minibatch(self, ctx, enc_a, enc_b, csr_a, csr_b, mu: AShare,
+                       n: int, d: int) -> KMeansResult:
+        """Each iteration is one full pass over the data in
+        ceil(n / batch_size)-row batches: per batch an S1 launch (distances
+        + argmin on the CURRENT centroids) and an S3-partial launch whose
+        (k, d)/(k,) sums accumulate in secret-shared running accumulators
+        (share addition — free), then ONE finalize launch divides. This is
+        blocked full-batch Lloyd, not stochastic minibatching: bit-exact
+        with the single-pass pooled path at batch_size >= n, and within
+        truncation-LSB noise of it otherwise.
+
+        With cfg.pipeline, batch t+1's Protocol-2 exchange and tranche pin
+        run on the host while batch t's S1 launch is on device
+        (launch/pipeline.run_pipeline); the SlotDealer pins each (iteration,
+        batch, stage) slot's randomness at generation time — in canonical
+        slot order — so pipeline=False is stream-identical."""
+        cfg = self.cfg
+        if cfg.offline not in ("pooled", "streamed"):
+            raise ValueError(
+                "batch_size (minibatch Lloyd) requires the planned offline "
+                "phase: set offline='pooled' or 'streamed' "
+                f"(got {cfg.offline!r})")
+        if not (cfg.vectorized and cfg.f == ring.F
+                and self._traceable_backend()):
+            raise ValueError(
+                "minibatch Lloyd runs on the compiled S1/S3 fast path only: "
+                f"it needs vectorized=True, f={ring.F} and a device-"
+                "traceable backend (numpy is host-only)")
+        from repro.launch import kmeans_step as K
+        from repro.launch.pipeline import run_pipeline
+
+        t0 = time.perf_counter()
+        bounds = _minibatch_bounds(cfg.partition, enc_a.shape[0],
+                                   enc_b.shape[0], cfg.batch_size)
+        batches = []
+        for (alo, ahi), (blo, bhi) in bounds:
+            ea, eb = enc_a[alo:ahi], enc_b[blo:bhi]
+            ca = CSRMatrix.from_dense(ea) if cfg.sparse else None
+            cb = CSRMatrix.from_dense(eb) if cfg.sparse else None
+            s1_plan, s1_comm = self._plan_batch_stage(ea.shape, eb.shape,
+                                                      "s1")
+            s3_plan, s3_comm = self._plan_batch_stage(ea.shape, eb.shape,
+                                                      "s3p")
+            batches.append({
+                "enc_a": ea, "enc_b": eb,
+                "dev_a": jnp.asarray(ea), "dev_b": jnp.asarray(eb),
+                "csr_a": ca, "csr_b": cb,
+                "csr_at": ca.transpose() if cfg.sparse else None,
+                "csr_bt": cb.transpose() if cfg.sparse else None,
+                "progs": K.fit_batch_programs(cfg.partition, cfg.sparse,
+                                              ea.shape, eb.shape, cfg.k,
+                                              backend=cfg.backend),
+                "s1_plan": s1_plan, "s1_comm": s1_comm,
+                "s3_plan": s3_plan, "s3_comm": s3_comm,
+                "a_rows": ahi - alo,
+            })
+        fin_prog = K.finalize_program(cfg.k, d, n, backend=cfg.backend)
+        fin_plan, fin_comm = self._plan_finalize(d, n)
+        iter_slots = []
+        for b in batches:
+            iter_slots += [b["s1_plan"], b["s3_plan"]]
+        iter_slots.append(fin_plan)
+        spi = len(iter_slots)                    # slots per iteration
+        dealer = SlotDealer(iter_slots * cfg.iters, seed=cfg.seed,
+                            log=ctx.log,
+                            stream=(cfg.offline == "streamed"))
+        ctx.dealer = dealer
+        plan_s = time.perf_counter() - t0
+
+        t_start = time.perf_counter()
+        it = 0
+        c_parts = [None] * len(batches)
+        try:
+            for it in range(1, cfg.iters + 1):
+                mu_old = mu
+                base = (it - 1) * spi
+                acc = [jnp.zeros((cfg.k, d), ring.DTYPE),
+                       jnp.zeros((cfg.k, d), ring.DTYPE),
+                       jnp.zeros((cfg.k,), ring.DTYPE),
+                       jnp.zeros((cfg.k,), ring.DTYPE)]
+                tasks = [self._batch_task(ctx, dealer, b, mu,
+                                          base + 2 * t, acc, c_parts, t)
+                         for t, b in enumerate(batches)]
+                run_pipeline(tasks, pipeline=cfg.pipeline)
+                fin_view = dealer.acquire(base + 2 * len(batches))
+                flat_f = K.materialize_offline(fin_prog.requests, fin_view)
+                mu0, mu1 = fin_prog.fn(mu.s0, mu.s1, acc[0], acc[1],
+                                       acc[2], acc[3], *flat_f)
+                mu = AShare(mu0, mu1)
+                ctx.log.merge(fin_comm, phase="online")
+                if cfg.tol is not None:
+                    # CSC triples live at the tail of the finalize slot
+                    cctx = P.Ctx(dealer=fin_view, log=ctx.log, tag="CSC",
+                                 backend=ctx.backend)
+                    if self._converged(cctx, mu_old, mu, cfg.tol):
+                        break
+            jnp.asarray(mu.s0).block_until_ready()
+            wall = time.perf_counter() - t_start
+        finally:
+            dealer.close()
+
+        c = _assemble_assignment(cfg.partition, c_parts, batches)
+        self.result_ = KMeansResult(
+            centroids=mu, assignment=c, iters_run=it, log=ctx.log,
+            dealer=dealer,
+            # SlotDealer stalls (wait_seconds) stay in the online clock on
+            # purpose — they are real online stalls, like the streaming
+            # dealer's
+            # same convention as the streamed full-batch path: overlapped
+            # worker generation (gen_seconds) stays OFF the offline column
+            # — it already overlaps the online wall
+            online_seconds=wall,
+            offline_dealer_seconds=dealer.dealer_seconds + plan_s,
+            offline_modelled_ot_seconds=dealer.modelled_ot_seconds,
+            he_seconds=getattr(ctx, "he_seconds", 0.0),
+            loop_seconds=wall,
+            offline_plan_seconds=plan_s,
+        )
+        return self.result_
+
+    def _batch_task(self, ctx, dealer, b: dict, mu: AShare, slot0: int,
+                    acc: list, c_parts: list, t: int):
+        """One minibatch as a 4-phase pipeline step (launch/pipeline.py):
+        pre = exchange #1 (centroid shares only) + S1 tranche pin; launch =
+        S1 dispatch; mid = exchange #2 on the assignment shares (the S2
+        callback — blocks on the device) + S3 tranche pin; post = S3-partial
+        dispatch + accumulator adds."""
+        cfg = self.cfg
+        from repro.launch import kmeans_step as K
+        from repro.launch.pipeline import StageTask
+        progs = b["progs"]
+
+        def hx_ctx(view, tag):
+            return P.Ctx(dealer=view, log=CommLog(), tag=tag,
+                         backend=ctx.backend)
+
+        def flow_he(hx):
+            ctx.he_seconds = getattr(ctx, "he_seconds", 0.0) \
+                + getattr(hx, "he_seconds", 0.0)
+
+        def pre():
+            view = dealer.acquire(slot0)
+            he1 = []
+            if cfg.sparse:
+                hx = hx_ctx(view, "S1")
+                he1 = self._s1_he_inputs(hx, b["enc_a"], b["enc_b"],
+                                         b["csr_a"], b["csr_b"], mu)
+                flow_he(hx)
+            flat1 = K.materialize_offline(progs.s1_requests, view)
+            ctx.log.merge(b["s1_comm"], phase="online")
+            return he1, flat1
+
+        def launch(prep):
+            he1, flat1 = prep
+            c0, c1 = progs.s1(b["dev_a"], b["dev_b"], mu.s0, mu.s1,
+                              *he1, *flat1)
+            return AShare(c0, c1)
+
+        def mid(prep, c):
+            view = dealer.acquire(slot0 + 1)
+            he3 = []
+            if cfg.sparse:
+                hx = hx_ctx(view, "S3")
+                he3 = self._s3_he_inputs(hx, b["csr_at"], b["csr_bt"], c)
+                flow_he(hx)
+            flat3 = K.materialize_offline(progs.s3p_requests, view)
+            ctx.log.merge(b["s3_comm"], phase="online")
+            return he3, flat3
+
+        def post(prep, c, m):
+            he3, flat3 = m
+            n0, n1, d0, d1 = progs.s3p(b["dev_a"], b["dev_b"], c.s0, c.s1,
+                                       *he3, *flat3)
+            acc[0] = acc[0] + n0
+            acc[1] = acc[1] + n1
+            acc[2] = acc[2] + d0
+            acc[3] = acc[3] + d1
+            c_parts[t] = c
+            return None
+
+        return StageTask(pre, launch, mid, post)
+
+    def _plan_batch_stage(self, shape_a, shape_b, stage: str):
+        """(plan, comm) of ONE minibatch stage — 's1' (distances + argmin)
+        or 's3p' (C^T X partial sums) — cached like the full-iteration
+        plans. Concatenated per iteration (batch stages + finalize) the
+        slot plans equal the full-batch iteration plan when
+        batch_size >= n: the bit-exactness anchor."""
+        key = ("mb", stage) + self._plan_cache_key(shape_a, shape_b)
+        hit = _PLAN_CACHE.get(key)
+        if hit is None:
+            hit = _PLAN_CACHE[key] = self._trace_batch_stage(
+                shape_a, shape_b, stage)
+        plan, comm = hit
+        return TriplePlan(list(plan.requests)), comm.copy()
+
+    def _trace_batch_stage(self, shape_a, shape_b, stage: str):
+        """Dry-run trace of one minibatch stage on zero-filled batch
+        slices with a PlanningDealer (the per-stage analogue of
+        `_trace_iteration`)."""
+        cfg = self.cfg
+        ctx = P.Ctx(dealer=PlanningDealer(), log=CommLog(),
+                    backend=cfg.backend)
+        ctx.vectorized = cfg.vectorized
+        enc_a = np.zeros(tuple(shape_a), np.uint64)
+        enc_b = np.zeros(tuple(shape_b), np.uint64)
+        d = enc_a.shape[1] + enc_b.shape[1] if cfg.partition == "vertical" \
+            else enc_a.shape[1]
+        csr_a = CSRMatrix.from_dense(enc_a) if cfg.sparse else None
+        csr_b = CSRMatrix.from_dense(enc_b) if cfg.sparse else None
+        if stage == "s1":
+            mu = AShare(jnp.zeros((cfg.k, d), ring.DTYPE),
+                        jnp.zeros((cfg.k, d), ring.DTYPE))
+            ctx.tag = "S1"
+            dist = self._distances(ctx, enc_a, enc_b, csr_a, csr_b, mu)
+            ctx.tag = "S2"
+            P.argmin_onehot(ctx, dist)
+        else:
+            rows = enc_a.shape[0] if cfg.partition == "vertical" \
+                else enc_a.shape[0] + enc_b.shape[0]
+            c = AShare(jnp.zeros((rows, cfg.k), ring.DTYPE),
+                       jnp.zeros((rows, cfg.k), ring.DTYPE))
+            ctx.tag = "S3"
+            self._ct_x(ctx, enc_a, enc_b, csr_a, csr_b, c)
+        comm = CommLog()
+        comm.merge(ctx.log, phase="online")
+        return ctx.dealer.plan(), comm
+
+    def _plan_finalize(self, d: int, n: int):
+        """(plan, comm) of the per-iteration finalize launch (+ CSC when
+        tol is set); keyed by the division constants, not the batch
+        layout."""
+        cfg = self.cfg
+        key = ("mb", "fin", cfg.k, int(d), int(n), cfg.f, cfg.vectorized,
+               cfg.tol is not None)
+        hit = _PLAN_CACHE.get(key)
+        if hit is None:
+            hit = _PLAN_CACHE[key] = self._trace_finalize(d, n)
+        plan, comm = hit
+        return TriplePlan(list(plan.requests)), comm.copy()
+
+    def _trace_finalize(self, d: int, n: int):
+        cfg = self.cfg
+        ctx = P.Ctx(dealer=PlanningDealer(), log=CommLog(),
+                    backend=cfg.backend)
+        ctx.vectorized = cfg.vectorized
+        z = lambda s: jnp.zeros(s, ring.DTYPE)  # noqa: E731
+        mu = AShare(z((cfg.k, d)), z((cfg.k, d)))
+        num = AShare(z((cfg.k, d)), z((cfg.k, d)))
+        den = AShare(z((cfg.k,)), z((cfg.k,)))
+        ctx.tag = "S3"
+        mu_new = self._update_final(ctx, num, den, mu, n)
+        comm = CommLog()
+        comm.merge(ctx.log, phase="online")
+        if cfg.tol is not None:
+            ctx.tag = "CSC"
+            self._converged(ctx, mu, mu_new, cfg.tol)
+        return ctx.dealer.plan(), comm
+
+    # ------------------------------------------------------------------ #
     # Secure scoring: batched predict/score against the secret-shared model
     # ------------------------------------------------------------------ #
     def predict(self, x_a: np.ndarray, x_b: np.ndarray,
@@ -338,8 +645,7 @@ class SecureKMeans:
         return self._predict(x_a, x_b, result, dealer=dealer,
                              compiled=compiled, with_scores=True)
 
-    def _predict(self, x_a, x_b, result, *, dealer, compiled,
-                 with_scores: bool) -> PredictResult:
+    def _check_predict_args(self, x_a, x_b, result):
         cfg = self.cfg
         if result is None:
             result = getattr(self, "result_", None)
@@ -360,6 +666,30 @@ class SecureKMeans:
             if x_a.shape[1] != d or x_b.shape[1] != d:
                 raise ValueError("horizontal predict rows must carry all "
                                  f"{d} model features")
+        return x_a, x_b, result
+
+    def _predict(self, x_a, x_b, result, *, dealer, compiled,
+                 with_scores: bool) -> PredictResult:
+        cfg = self.cfg
+        x_a, x_b, result = self._check_predict_args(x_a, x_b, result)
+        if compiled:
+            # an explicit request for the compiled path must not silently
+            # truncate at the wrong scale or die in an obscure trace error
+            if cfg.f != ring.F:
+                raise ValueError(
+                    f"compiled predict hardcodes f = {ring.F}; cfg.f = "
+                    f"{cfg.f} must use the eager path (compiled=False)")
+            if not self._traceable_backend():
+                raise ValueError(
+                    "the host-only numpy backend cannot lower into the "
+                    "compiled predict program; use compiled=False")
+        use_fast = compiled if compiled is not None \
+            else (cfg.vectorized and cfg.f == ring.F
+                  and self._traceable_backend())
+        if use_fast:
+            prep = self.predict_prepare(x_a, x_b, result, dealer=dealer,
+                                        with_scores=with_scores)
+            return self.predict_collect(prep, self.predict_launch(prep))
         t0 = time.perf_counter()
         enc_a = _encode_np(x_a, cfg.f)
         enc_b = _encode_np(x_b, cfg.f)
@@ -375,53 +705,12 @@ class SecureKMeans:
         ctx.vectorized = cfg.vectorized
         ctx.tag = "predict"
         mu = result.centroids
-        if compiled:
-            # an explicit request for the compiled path must not silently
-            # truncate at the wrong scale or die in an obscure trace error
-            if cfg.f != ring.F:
-                raise ValueError(
-                    f"compiled predict hardcodes f = {ring.F}; cfg.f = "
-                    f"{cfg.f} must use the eager path (compiled=False)")
-            if not self._traceable_backend():
-                raise ValueError(
-                    "the host-only numpy backend cannot lower into the "
-                    "compiled predict program; use compiled=False")
-        use_fast = compiled if compiled is not None \
-            else (cfg.vectorized and cfg.f == ring.F
-                  and self._traceable_backend())
         vmin = None
-        if use_fast:
-            from repro.launch import kmeans_step as K
-            prog = K.predict_program(cfg.partition, cfg.sparse,
-                                     enc_a.shape, enc_b.shape, cfg.k,
-                                     with_scores=with_scores,
-                                     backend=cfg.backend)
-            _, comm = self._plan_predict_cached(x_a.shape, x_b.shape,
-                                                with_scores)
-            he1 = []
-            hx = None
-            if cfg.sparse:
-                # scratch log (Ctx.fork): the launch's shape-determined
-                # traffic — the exchange's included — replays from the
-                # traced plan's CommLog below
-                hx = ctx.fork(tag="predict")
-                he1 = self._s1_he_inputs(hx, enc_a, enc_b, csr_a, csr_b, mu)
-            flat = K.materialize_offline(prog.requests, ctx.dealer)
-            outs = prog.fn(jnp.asarray(enc_a), jnp.asarray(enc_b),
-                           mu.s0, mu.s1, *he1, *flat)
-            c = AShare(outs[0], outs[1])
-            if with_scores:
-                vmin = AShare(outs[2], outs[3])
-            if hx is not None:
-                ctx.he_seconds = getattr(ctx, "he_seconds", 0.0) \
-                    + getattr(hx, "he_seconds", 0.0)
-            log.merge(comm, phase="online")
+        dist = self._distances(ctx, enc_a, enc_b, csr_a, csr_b, mu)
+        if with_scores:
+            c, vmin = P.argmin_onehot(ctx, dist, return_min=True)
         else:
-            dist = self._distances(ctx, enc_a, enc_b, csr_a, csr_b, mu)
-            if with_scores:
-                c, vmin = P.argmin_onehot(ctx, dist, return_min=True)
-            else:
-                c = P.argmin_onehot(ctx, dist)
+            c = P.argmin_onehot(ctx, dist)
         scores = None
         if with_scores:
             # ||x - mu_c||^2 = ||x||^2 + (||mu_c||^2 - 2 x.mu_c): the first
@@ -432,6 +721,83 @@ class SecureKMeans:
         jnp.asarray(c.s0).block_until_ready()
         return PredictResult(assignment=c, scores=scores, log=log,
                              seconds=time.perf_counter() - t0, f=cfg.f)
+
+    # -- compiled scoring, split into pipelineable phases ---------------- #
+    def predict_prepare(self, x_a, x_b, result: KMeansResult | None = None,
+                        *, dealer=None,
+                        with_scores: bool = False) -> "PreparedPredict":
+        """Host phase of ONE compiled scoring launch: validate, encode, run
+        the Protocol-2 pre-launch exchange (computable from the centroid
+        shares alone), draw the offline tranche, stage the program
+        arguments. `predict_launch` dispatches (async under jax) and
+        `predict_collect` assembles the PredictResult; prepare -> launch ->
+        collect in sequence IS the compiled predict path, and the serving
+        loop overlaps request t+1's prepare with request t's in-flight
+        launch (launch/pipeline.py) — same calls, same order per request,
+        so the pipelined and sequential drains are stream-identical."""
+        cfg = self.cfg
+        x_a, x_b, result = self._check_predict_args(x_a, x_b, result)
+        if not (cfg.vectorized and cfg.f == ring.F
+                and self._traceable_backend()):
+            raise ValueError(
+                "predict_prepare stages the compiled scoring program only; "
+                "non-default f / unvectorized / numpy-backend configs must "
+                "score through predict/score (eager path)")
+        from repro.launch import kmeans_step as K
+        t0 = time.perf_counter()
+        enc_a = _encode_np(x_a, cfg.f)
+        enc_b = _encode_np(x_b, cfg.f)
+        csr_a = CSRMatrix.from_dense(enc_a) if cfg.sparse else None
+        csr_b = CSRMatrix.from_dense(enc_b) if cfg.sparse else None
+        log = CommLog()
+        if dealer is None:
+            # domain-separated from the fit's streams (see _predict)
+            dealer = TrustedDealer(seed=serve_seed(cfg.seed), log=log)
+        ctx = P.Ctx(dealer=dealer, log=log, backend=cfg.backend)
+        ctx.vectorized = cfg.vectorized
+        ctx.tag = "predict"
+        mu = result.centroids
+        prog = K.predict_program(cfg.partition, cfg.sparse,
+                                 enc_a.shape, enc_b.shape, cfg.k,
+                                 with_scores=with_scores,
+                                 backend=cfg.backend)
+        _, comm = self._plan_predict_cached(x_a.shape, x_b.shape,
+                                            with_scores)
+        he1 = []
+        if cfg.sparse:
+            # scratch log (Ctx.fork): the launch's shape-determined traffic
+            # — the exchange's included — replays from the traced plan's
+            # CommLog at collect time
+            hx = ctx.fork(tag="predict")
+            he1 = self._s1_he_inputs(hx, enc_a, enc_b, csr_a, csr_b, mu)
+        flat = K.materialize_offline(prog.requests, ctx.dealer)
+        args = (jnp.asarray(enc_a), jnp.asarray(enc_b), mu.s0, mu.s1,
+                *he1, *flat)
+        return PreparedPredict(prog=prog, args=args, log=log, comm=comm,
+                               with_scores=with_scores, x_a=x_a, x_b=x_b,
+                               t0=t0)
+
+    def predict_launch(self, prep: "PreparedPredict"):
+        """Dispatch the staged scoring program — asynchronous under jax:
+        the raw output buffers come back immediately while the device
+        computes."""
+        return prep.prog.fn(*prep.args)
+
+    def predict_collect(self, prep: "PreparedPredict",
+                        outs) -> PredictResult:
+        """Reveal-side assembly of one launch's outputs (blocks on the
+        device): assignment shares, optional score shares (winning D' +
+        locally-encoded ||x||^2), replayed traffic tallies."""
+        c = AShare(outs[0], outs[1])
+        scores = None
+        if prep.with_scores:
+            vmin = AShare(outs[2], outs[3])
+            scores = P.add(vmin, self._norm_shares(prep.x_a, prep.x_b))
+        prep.log.merge(prep.comm, phase="online")
+        jnp.asarray(c.s0).block_until_ready()
+        return PredictResult(assignment=c, scores=scores, log=prep.log,
+                             seconds=time.perf_counter() - prep.t0,
+                             f=self.cfg.f)
 
     def _traceable_backend(self) -> bool:
         """The numpy ring backend runs host-side and cannot lower into the
@@ -687,10 +1053,19 @@ class SecureKMeans:
     def _update(self, ctx, enc_a, enc_b, csr_a, csr_b, c: AShare,
                 mu_old: AShare, n: int) -> AShare:
         """F_SCU: mu = C^T X / 1^T C with empty-cluster MUX guard."""
-        cfg = self.cfg
-        k = cfg.k
         num = self._ct_x(ctx, enc_a, enc_b, csr_a, csr_b, c)   # (k, d) scale f
         den = AShare(c.s0.sum(0), c.s1.sum(0))                 # (k,) scale 1
+        return self._update_final(ctx, num, den, mu_old, n)
+
+    def _update_final(self, ctx, num: AShare, den: AShare, mu_old: AShare,
+                      n: int) -> AShare:
+        """The S3 tail on (possibly cross-batch accumulated) sums: empty-
+        cluster guard + balanced-split division + MUX. ONE implementation
+        shared by the eager loop and the minibatch finalize trace, so both
+        consume the dealer streams identically (kmeans_step._s3_final_body
+        compiles the same algebra)."""
+        cfg = self.cfg
+        k = cfg.k
         one = AShare(jnp.full((k,), 1, ring.DTYPE), jnp.zeros((k,), ring.DTYPE))
         is_empty = P.cmp_lt(ctx, den, one)                     # [den < 1]
         den_safe = P.mux(ctx, is_empty, one, den)
@@ -835,6 +1210,53 @@ def plaintext_kmeans(x: np.ndarray, k: int, iters: int, seed: int = 0,
         if tol is not None and ((mu - mu_old) ** 2).sum() < tol:
             break
     return mu, labels
+
+
+def _minibatch_bounds(partition: str, na: int, nb: int,
+                      batch_size: int) -> list:
+    """Per-batch row windows [((a_lo, a_hi), (b_lo, b_hi)), ...].
+
+    Vertical: both parties hold column slices of the SAME rows, so batches
+    are shared contiguous chunks of `batch_size` rows — at most two
+    distinct shapes (full + remainder). Horizontal: each party's rows are
+    split into the same NUMBER of contiguous near-equal chunks
+    (B = ceil((na+nb)/batch_size), clamped so no chunk is empty); chunk
+    sizes differ by at most one per party, so a fit compiles at most a
+    handful of batch geometries regardless of batch count."""
+    if partition == "vertical":
+        bs = max(1, min(int(batch_size), na))
+        return [((lo, min(lo + bs, na)),) * 2 for lo in range(0, na, bs)]
+    n_batches = max(1, min(-(-(na + nb) // int(batch_size)), na, nb))
+    return list(zip(_even_chunks(na, n_batches),
+                    _even_chunks(nb, n_batches)))
+
+
+def _even_chunks(n: int, parts: int) -> list:
+    """Exactly `parts` contiguous windows over n rows, sizes q+1 x r then
+    q x (parts - r) — never empty for parts <= n."""
+    q, r = divmod(n, parts)
+    out, lo = [], 0
+    for i in range(parts):
+        hi = lo + q + (1 if i < r else 0)
+        out.append((lo, hi))
+        lo = hi
+    return out
+
+
+def _assemble_assignment(partition: str, c_parts: list,
+                         batches: list) -> AShare:
+    """Stitch the last iteration's per-batch assignment shares back into
+    the full-fit (n, k) layout: vertical concatenates rows in batch order;
+    horizontal restores the [all A rows; all B rows] order the full-batch
+    path produces (each batch's rows come back [A chunk; B chunk])."""
+    if partition == "vertical":
+        return AShare(jnp.concatenate([p.s0 for p in c_parts], 0),
+                      jnp.concatenate([p.s1 for p in c_parts], 0))
+    a0 = [p.s0[:b["a_rows"]] for p, b in zip(c_parts, batches)]
+    a1 = [p.s1[:b["a_rows"]] for p, b in zip(c_parts, batches)]
+    b0 = [p.s0[b["a_rows"]:] for p, b in zip(c_parts, batches)]
+    b1 = [p.s1[b["a_rows"]:] for p, b in zip(c_parts, batches)]
+    return AShare(jnp.concatenate(a0 + b0, 0), jnp.concatenate(a1 + b1, 0))
 
 
 def _encode_np(x: np.ndarray, f: int) -> np.ndarray:

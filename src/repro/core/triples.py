@@ -23,7 +23,13 @@ Provider flavours:
   t+1 is generated while iteration t's launches consume tranche t, so peak
   pool residency is O(1 iteration) — independent of `iters` — and fits whose
   total pool exceeds device memory become possible. Bit-exact with both other
-  dealers (persistent per-class streams + draw concatenation).
+  dealers (persistent per-class streams + draw concatenation). `group`
+  merges several small iterations into one generation wakeup.
+* `SlotDealer` — the minibatch/pipeline generalization: the schedule is a
+  SEQUENCE of per-(iteration, batch, stage) slot plans, tranches generated
+  in canonical slot order (streamed on a worker, or all up front), and
+  `acquire(i)` hands slot i out as a dealer view in ANY order within the
+  window — the pipelined executor's double-buffer contract (DESIGN.md §11).
 * OT-based generation is *cost-modelled* (we cannot run a real network OT
   extension here): per 64-bit scalar product the Gilboa/ABY protocol transfers
   l correlated OTs of (kappa + l)-bit strings per direction. Offline bytes and
@@ -353,6 +359,58 @@ class TriplePlan:
             out[key] = out.get(key, 0) + 1
         return out
 
+    def pool_words(self) -> int:
+        """uint64 words a generated pool/tranche of this plan holds (six
+        share tensors per triple, one tensor per rand, one word per seed) —
+        the device-residency estimate the tranche-grouping heuristics size
+        against."""
+        words = 0
+        for r in self.requests:
+            if r.kind == "matmul":
+                (n, d), (_, k) = r.shape
+                words += 2 * (n * d + d * k + n * k)
+            elif r.kind in ("mul", "bin"):
+                words += 6 * _nelem(r.shape)
+            elif r.kind == "rand":
+                words += _nelem(r.shape)
+            else:  # seed
+                words += 1
+        return words
+
+
+class _TripleServing:
+    """Shared dealer-interface surface for pool-backed providers: validate
+    the request, draw its word tuple from ``self._next(kind, shape)``, wrap
+    into the triple type, bump the counters. PooledDealer,
+    StreamingPooledDealer, BankDealer and SlotDealer views all serve
+    through this one implementation — only their `_next` differs."""
+
+    def matmul_triple(self, shape_a, shape_b, *,
+                      tag: str = "misc") -> MatmulTriple:
+        _check_matmul_dims(shape_a, shape_b)
+        u0, u1, v0, v1, z0, z1 = self._next(
+            "matmul", (tuple(shape_a), tuple(shape_b)))
+        self.n_matmul += 1
+        return MatmulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
+
+    def mul_triple(self, shape, *, tag: str = "misc") -> MulTriple:
+        _check_elemwise_shape("mul", shape)
+        u0, u1, v0, v1, z0, z1 = self._next("mul", shape)
+        self.n_mul += 1
+        return MulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
+
+    def bin_triple(self, shape, *, tag: str = "misc") -> BinTriple:
+        _check_elemwise_shape("bin", shape)
+        u0, u1, v0, v1, z0, z1 = self._next("bin", shape)
+        self.n_bin += 1
+        return BinTriple(BShare(u0, u1), BShare(v0, v1), BShare(z0, z1))
+
+    def rand(self, shape) -> jnp.ndarray:
+        return self._next("rand", shape)[0]
+
+    def mask_seed(self) -> int:
+        return int(self._next("seed", ())[0])
+
 
 class PlanningDealer:
     """Records the (kind, shape, tag) schedule while the traced code runs on
@@ -450,7 +508,7 @@ def _gen_tranche(rngs: dict, counts: dict):
     return pools, nbytes
 
 
-class PooledDealer:
+class PooledDealer(_TripleServing):
     """Executes a `TriplePlan` up front and serves it back with device-array
     slicing only.
 
@@ -503,31 +561,6 @@ class PooledDealer:
         self._served[key] = i + 1
         return pool[i]
 
-    def matmul_triple(self, shape_a, shape_b, *, tag: str = "misc") -> MatmulTriple:
-        _check_matmul_dims(shape_a, shape_b)
-        u0, u1, v0, v1, z0, z1 = self._next(
-            "matmul", (tuple(shape_a), tuple(shape_b)))
-        self.n_matmul += 1
-        return MatmulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
-
-    def mul_triple(self, shape, *, tag: str = "misc") -> MulTriple:
-        _check_elemwise_shape("mul", shape)
-        u0, u1, v0, v1, z0, z1 = self._next("mul", shape)
-        self.n_mul += 1
-        return MulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
-
-    def bin_triple(self, shape, *, tag: str = "misc") -> BinTriple:
-        _check_elemwise_shape("bin", shape)
-        u0, u1, v0, v1, z0, z1 = self._next("bin", shape)
-        self.n_bin += 1
-        return BinTriple(BShare(u0, u1), BShare(v0, v1), BShare(z0, z1))
-
-    def rand(self, shape) -> jnp.ndarray:
-        return self._next("rand", shape)[0]
-
-    def mask_seed(self) -> int:
-        return int(self._next("seed", ())[0])
-
     def remaining(self) -> dict:
         """{class_key: unserved} — surplus after e.g. tol early-stop."""
         return {k: len(p) - self._served[k] for k, p in self._pools.items()}
@@ -537,7 +570,15 @@ class PooledDealer:
 # StreamingPooledDealer — double-buffered per-iteration pool generation
 # ---------------------------------------------------------------------------
 
-class StreamingPooledDealer:
+GROUP_TRANCHE_BYTES = 4 << 20
+# auto-grouping target: when one iteration's tranche is tiny (small k*d),
+# generating it alone makes the background worker wake up per iteration for
+# microseconds of work — group consecutive iterations until a tranche
+# reaches ~this many device bytes (bit-exact either way: the per-class
+# streams just advance in bigger stacked draws).
+
+
+class StreamingPooledDealer(_TripleServing):
     """`PooledDealer` semantics with O(1-iteration) device residency.
 
     Instead of materializing `iters` iterations' worth of every shape-class
@@ -572,7 +613,7 @@ class StreamingPooledDealer:
 
     def __init__(self, iter_plan: TriplePlan, iters: int, seed: int = 0,
                  log: CommLog | None = None, prefetch: int = 2,
-                 async_gen: bool = True):
+                 async_gen: bool = True, group: int | str = 1):
         t0 = time.perf_counter()
         self.iter_plan = TriplePlan(list(iter_plan.requests))
         self.iters = int(iters)
@@ -583,6 +624,16 @@ class StreamingPooledDealer:
         self.n_bin = 0
         self._iter_counts = self.iter_plan.class_counts()
         self._per_iter = len(self.iter_plan)
+        # tranche grouping: `group` iterations share one generation wakeup
+        # (one stacked draw per class covers them all — the concatenation
+        # property keeps every served word identical to group=1); "auto"
+        # sizes tranches to ~GROUP_TRANCHE_BYTES so tiny k*d fits don't pay
+        # a worker wakeup per iteration
+        if group == "auto":
+            words = max(1, self.iter_plan.pool_words())
+            group = max(1, GROUP_TRANCHE_BYTES // (8 * words))
+        self.group = max(1, min(int(group), max(1, self.iters)))
+        self._tranche_iters = 1      # iterations covered by _current
         self._rngs = {key: _class_rng(seed, key) for key in self._iter_counts}
         self.modelled_ot_seconds = _account_offline_plan(
             self.iter_plan.repeat(self.iters), self.log)
@@ -614,9 +665,9 @@ class StreamingPooledDealer:
         self.dealer_seconds = time.perf_counter() - t0
 
     # -- tranche lifecycle ----------------------------------------------
-    def _generate(self):
+    def _generate(self, counts):
         t0 = time.perf_counter()
-        pools, nbytes = _gen_tranche(self._rngs, self._iter_counts)
+        pools, nbytes = _gen_tranche(self._rngs, counts)
         with self._lock:
             self.gen_seconds += time.perf_counter() - t0
             self._live_bytes += nbytes
@@ -624,23 +675,29 @@ class StreamingPooledDealer:
         return pools, nbytes
 
     def _dispatch(self) -> None:
-        """Queue generation of the next tranche (async on the worker). The
-        single worker serializes tranches, so the per-class streams advance
-        in tranche order no matter when the futures are submitted."""
+        """Queue generation of the next tranche (async on the worker) —
+        covering `group` iterations (fewer for the tail). The single worker
+        serializes tranches, so the per-class streams advance in tranche
+        order no matter when the futures are submitted."""
         if self._next_gen >= self.iters:
             return
-        self._next_gen += 1
+        g = min(self.group, self.iters - self._next_gen)
+        self._next_gen += g
+        counts = self._iter_counts if g == 1 else \
+            {k: c * g for k, c in self._iter_counts.items()}
         if self._executor is None:
-            self._pending.append(("done", self._generate()))
+            self._pending.append((g, "done", self._generate(counts)))
         else:
-            self._pending.append(("fut", self._executor.submit(self._generate)))
+            self._pending.append(
+                (g, "fut", self._executor.submit(self._generate, counts)))
 
     def _advance(self) -> None:
-        kind, payload = self._pending.pop(0)
+        g, kind, payload = self._pending.pop(0)
         t0 = time.perf_counter()
         pools, nbytes = payload.result() if kind == "fut" else payload
         self.wait_seconds += time.perf_counter() - t0
         self._current, self._current_bytes = pools, nbytes
+        self._tranche_iters = g
         self._cursors = {}
         self._served_in_tranche = 0
 
@@ -655,7 +712,7 @@ class StreamingPooledDealer:
         ADVANCE to the prefetched tranche is deferred to the next serve
         call: blocking here would make the LAST iteration of a tol
         early-stopped fit stall on randomness it is about to throw away."""
-        self.served_iters += 1
+        self.served_iters += self._tranche_iters
         self._drop_current()
         self._cursors = {}
         self._served_in_tranche = 0
@@ -674,7 +731,7 @@ class StreamingPooledDealer:
         if self._current is None and self.served_iters < self.iters:
             self._advance()                  # lazy: first request of an iter
         i = self._cursors.get(key, 0)
-        if self._current is None or i >= per_iter:
+        if self._current is None or i >= per_iter * self._tranche_iters:
             raise PoolExhaustedError(
                 f"pool exhausted for {kind} {shape}: planned {per_iter} "
                 f"requests/iteration x {self.iters} iterations, online "
@@ -682,34 +739,9 @@ class StreamingPooledDealer:
         self._cursors[key] = i + 1
         out = self._current[key][i]
         self._served_in_tranche += 1
-        if self._served_in_tranche == self._per_iter:
+        if self._served_in_tranche == self._per_iter * self._tranche_iters:
             self._finish_tranche()
         return out
-
-    def matmul_triple(self, shape_a, shape_b, *, tag: str = "misc") -> MatmulTriple:
-        _check_matmul_dims(shape_a, shape_b)
-        u0, u1, v0, v1, z0, z1 = self._next(
-            "matmul", (tuple(shape_a), tuple(shape_b)))
-        self.n_matmul += 1
-        return MatmulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
-
-    def mul_triple(self, shape, *, tag: str = "misc") -> MulTriple:
-        _check_elemwise_shape("mul", shape)
-        u0, u1, v0, v1, z0, z1 = self._next("mul", shape)
-        self.n_mul += 1
-        return MulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
-
-    def bin_triple(self, shape, *, tag: str = "misc") -> BinTriple:
-        _check_elemwise_shape("bin", shape)
-        u0, u1, v0, v1, z0, z1 = self._next("bin", shape)
-        self.n_bin += 1
-        return BinTriple(BShare(u0, u1), BShare(v0, v1), BShare(z0, z1))
-
-    def rand(self, shape) -> jnp.ndarray:
-        return self._next("rand", shape)[0]
-
-    def mask_seed(self) -> int:
-        return int(self._next("seed", ())[0])
 
     def remaining(self) -> dict:
         """{class_key: unserved across ALL remaining iterations} — surplus
@@ -729,7 +761,7 @@ class StreamingPooledDealer:
         it is pure counter arithmetic."""
         if self._executor is not None:
             self._executor.shutdown(wait=True)   # let in-flight gen finish
-        for kind, payload in self._pending:
+        for _g, kind, payload in self._pending:
             pools, nbytes = payload.result() if kind == "fut" else payload
             del pools
             with self._lock:
@@ -737,6 +769,314 @@ class StreamingPooledDealer:
         self._pending.clear()
         if self._current is not None:
             self._drop_current()
+
+
+# ---------------------------------------------------------------------------
+# SlotDealer — per-(iteration, batch) tranches for the pipelined executor
+# ---------------------------------------------------------------------------
+
+def _gen_tranche_split(rngs: dict, counts_list: list):
+    """Generate several consecutive tranches in ONE merged stacked draw per
+    shape-class, then split the per-request tuples back out per tranche.
+    Stream-identical to generating each tranche separately (the uint64
+    draw-concatenation property) — this is what lets one worker wakeup
+    amortize over several small slots. Returns [(pools, nbytes), ...]."""
+    merged: dict[tuple, int] = {}
+    for counts in counts_list:
+        for key, c in counts.items():
+            merged[key] = merged.get(key, 0) + c
+    pools, _ = _gen_tranche(rngs, merged)
+    cursors = {key: 0 for key in merged}
+    out = []
+    for counts in counts_list:
+        slot_pools: dict[tuple, list] = {}
+        slot_bytes = 0
+        for key, c in counts.items():
+            i = cursors[key]
+            entries = pools[key][i:i + c]
+            cursors[key] = i + c
+            slot_pools[key] = entries
+            slot_bytes += sum(int(a.size) * 8 for t in entries for a in t)
+        out.append((slot_pools, slot_bytes))
+    return out
+
+
+class _SlotView(_TripleServing):
+    """Dealer view over ONE acquired slot tranche: serves exactly the
+    slot's planned requests (per-class cursors, `PoolExhaustedError` past
+    them). Counters aggregate on the owning SlotDealer; when the last
+    request is served the tranche's device buffers are released and the
+    dealer's generation window frees a slot."""
+
+    def __init__(self, dealer: "SlotDealer", index: int, pools: dict,
+                 counts: dict, total: int, nbytes: int):
+        self.dealer = dealer
+        self.index = index
+        self.log = dealer.log
+        self._pools = pools
+        self._counts = counts
+        self._total = total
+        self._nbytes = nbytes
+        self._cursors: dict[tuple, int] = {}
+        self._served = 0
+
+    # the fit-level dealer counters live on the SlotDealer so results can
+    # compare them across offline/pipeline modes
+    @property
+    def n_matmul(self):
+        return self.dealer.n_matmul
+
+    @n_matmul.setter
+    def n_matmul(self, v):
+        self.dealer.n_matmul = v
+
+    @property
+    def n_mul(self):
+        return self.dealer.n_mul
+
+    @n_mul.setter
+    def n_mul(self, v):
+        self.dealer.n_mul = v
+
+    @property
+    def n_bin(self):
+        return self.dealer.n_bin
+
+    @n_bin.setter
+    def n_bin(self, v):
+        self.dealer.n_bin = v
+
+    def _next(self, kind: str, shape) -> tuple:
+        key = _class_key(kind, shape)
+        limit = self._counts.get(key)
+        if limit is None:
+            raise PoolExhaustedError(
+                f"no pool for {kind} {shape} in slot {self.index}: the slot "
+                "plan never scheduled this shape-class (planner/online "
+                "mismatch)")
+        i = self._cursors.get(key, 0)
+        if i >= limit:
+            raise PoolExhaustedError(
+                f"slot {self.index} pool exhausted for {kind} {shape}: "
+                f"planned {limit} requests, online asked for more")
+        self._cursors[key] = i + 1
+        out = self._pools[key][i]
+        self._served += 1
+        if self._served == self._total:
+            self._pools = {}
+            self.dealer._release(self.index, self._nbytes)
+        return out
+
+
+class SlotDealer:
+    """Per-slot tranche pools for the pipelined minibatch executor
+    (DESIGN.md §11).
+
+    The offline schedule is a SEQUENCE of slot plans — e.g. per Lloyd
+    iteration ``[S1(batch 0), S3(batch 0), S1(batch 1), ..., finalize]`` —
+    and each slot's correlated randomness is generated as its own tranche
+    from the SAME persistent per-class PCG64 streams as every other dealer,
+    always in canonical slot order. ``acquire(i)`` hands slot i's tranche
+    out as a dealer view; acquisition may run AHEAD of lower slots (the
+    pipelined executor pins batch t+1's S1 tranche while batch t's launch
+    is still in flight) without perturbing a single served word, because
+    GENERATION order — not acquisition order — fixes the streams. That is
+    the double-buffer contract that makes ``pipeline=True`` stream-identical
+    to ``pipeline=False``.
+
+    stream=False (the pooled offline phase): every slot is generated up
+    front in one merged stacked draw per shape-class — PooledDealer
+    residency and bulk-generation speed, slot-indexed serving. stream=True:
+    a background worker generates slots in order with at most ``window``
+    generated-but-unconsumed slots alive (backpressure), so peak residency
+    is O(window x slot bytes) — independent of n and iters. ``group_bytes``
+    merges consecutive small slots into one generation wakeup (still split
+    and served per slot; "auto" targets GROUP_TRANCHE_BYTES).
+
+    Bit-exact with ``PooledDealer(concat(slot_plans), seed)`` for any
+    acquisition order that consumes each slot's own plan exactly
+    (property-tested in tests/test_pipeline.py)."""
+
+    def __init__(self, slot_plans, seed: int = 0, log: CommLog | None = None,
+                 stream: bool = True, window: int = 4, async_gen: bool = True,
+                 group_bytes: int | str = "auto"):
+        import threading
+        t0 = time.perf_counter()
+        self.slot_plans = [TriplePlan(list(p.requests)) for p in slot_plans]
+        self.seed = seed
+        self.log = log if log is not None else CommLog()
+        self.stream = bool(stream)
+        self.n_matmul = 0
+        self.n_mul = 0
+        self.n_bin = 0
+        self.gen_seconds = 0.0
+        self.wait_seconds = 0.0      # online acquire() stalls
+        self.pool_bytes = 0          # PEAK concurrent device residency
+        self._live_bytes = 0
+        self._live_slots = 0
+        self._counts = [p.class_counts() for p in self.slot_plans]
+        self._totals = [len(p) for p in self.slot_plans]
+        keys = sorted({k for c in self._counts for k in c})
+        self._rngs = {key: _class_rng(seed, key) for key in keys}
+        self.modelled_ot_seconds = _account_offline_plan(
+            TriplePlan([r for p in self.slot_plans for r in p.requests]),
+            self.log)
+        if group_bytes == "auto":
+            group_bytes = GROUP_TRANCHE_BYTES
+        # partition slots into generation groups of >= group_bytes each
+        self._groups: list[tuple[int, int]] = []
+        i = 0
+        while i < len(self.slot_plans):
+            j = i + 1
+            b = 8 * self.slot_plans[i].pool_words()
+            while j < len(self.slot_plans) and b < int(group_bytes):
+                b += 8 * self.slot_plans[j].pool_words()
+                j += 1
+            self._groups.append((i, j))
+            i = j
+        self._ready: dict[int, tuple] = {}   # slot -> (pools, nbytes)
+        self._acquired: set[int] = set()
+        self._served_class: dict[tuple, int] = {}
+        self._cond = threading.Condition()
+        self._closed = False
+        self._error: BaseException | None = None
+        self._next_group = 0
+        self._max_requested = -1     # highest slot a caller is waiting on
+        self._worker = None
+        if not self.stream:
+            # pooled: ONE merged generation pass over the whole schedule
+            for i, tr in enumerate(_gen_tranche_split(self._rngs,
+                                                      self._counts)):
+                self._ready[i] = tr
+                self._live_bytes += tr[1]
+                self._live_slots += 1
+            self._next_group = len(self._groups)
+            self.pool_bytes = self._live_bytes
+        elif async_gen and self._groups:
+            max_group = max(hi - lo for lo, hi in self._groups)
+            self._window = max(int(window), max_group + 1)
+            self._worker = threading.Thread(target=self._worker_loop,
+                                            name="slot-dealer", daemon=True)
+            self._worker.start()
+        else:
+            self._window = max(2, int(window))
+        self.dealer_seconds = time.perf_counter() - t0
+
+    # -- generation ------------------------------------------------------
+    def _gen_group(self, gi: int) -> None:
+        """Generate group gi's slots (caller holds no lock); fill _ready."""
+        lo, hi = self._groups[gi]
+        t0 = time.perf_counter()
+        tranches = _gen_tranche_split(self._rngs, self._counts[lo:hi])
+        with self._cond:
+            self.gen_seconds += time.perf_counter() - t0
+            for i, tr in zip(range(lo, hi), tranches):
+                self._ready[i] = tr
+                self._live_slots += 1
+                self._live_bytes += tr[1]
+            self.pool_bytes = max(self.pool_bytes, self._live_bytes)
+            self._cond.notify_all()
+
+    def _worker_loop(self) -> None:
+        try:
+            for gi, (lo, hi) in enumerate(self._groups):
+                with self._cond:
+                    # backpressure: hold generation at `window` live slots —
+                    # unless a caller is already WAITING on a slot this
+                    # group must be generated for (acquire can run ahead of
+                    # consumption; stalling it here would deadlock)
+                    while (self._live_slots + (hi - lo) > self._window
+                           and lo > self._max_requested
+                           and not self._closed):
+                        self._cond.wait()
+                    if self._closed:
+                        return
+                self._gen_group(gi)
+        except BaseException as e:             # surface on the next acquire
+            with self._cond:
+                self._error = e
+                self._cond.notify_all()
+
+    # -- acquisition -----------------------------------------------------
+    def acquire(self, i: int) -> _SlotView:
+        """Slot i's tranche as a dealer view (blocking until generated).
+        Each slot can be acquired exactly once; out-of-order acquisition is
+        fine within the generation window — the words a slot serves are
+        fixed at generation time."""
+        if not 0 <= i < len(self.slot_plans):
+            raise IndexError(f"slot {i} out of range "
+                             f"({len(self.slot_plans)} slots planned)")
+        t0 = time.perf_counter()
+        with self._cond:
+            if i in self._acquired:
+                raise PoolExhaustedError(
+                    f"slot {i} was already acquired: each slot serves its "
+                    "plan exactly once")
+            if self._worker is None:
+                # inline generation (pooled mode is pre-filled; streamed
+                # sync mode generates groups on demand, in canonical order)
+                while i not in self._ready \
+                        and self._next_group < len(self._groups):
+                    gi = self._next_group
+                    self._next_group += 1
+                    self._cond.release()
+                    try:
+                        self._gen_group(gi)
+                    finally:
+                        self._cond.acquire()
+            else:
+                self._max_requested = max(self._max_requested, i)
+                self._cond.notify_all()
+                while i not in self._ready and self._error is None \
+                        and not self._closed:
+                    self._cond.wait()
+            if self._error is not None:
+                raise RuntimeError("slot-dealer worker failed") \
+                    from self._error
+            if i not in self._ready:
+                raise PoolExhaustedError(f"slot {i} unavailable "
+                                         "(dealer closed or out of range)")
+            pools, nbytes = self._ready.pop(i)
+            self._acquired.add(i)
+            self.wait_seconds += time.perf_counter() - t0
+        view = _SlotView(self, i, pools, self._counts[i], self._totals[i],
+                         nbytes)
+        if self._totals[i] == 0:               # empty slot: nothing to serve
+            self._release(i, nbytes)
+        return view
+
+    def _release(self, i: int, nbytes: int) -> None:
+        with self._cond:
+            for key, c in self._counts[i].items():
+                self._served_class[key] = self._served_class.get(key, 0) + c
+            self._live_slots -= 1
+            self._live_bytes -= nbytes
+            self._cond.notify_all()
+
+    def remaining(self) -> dict:
+        """{class_key: unserved across unacquired + unconsumed slots} —
+        surplus after e.g. a tol early-stop."""
+        total: dict[tuple, int] = {}
+        for counts in self._counts:
+            for key, c in counts.items():
+                total[key] = total.get(key, 0) + c
+        return {key: c - self._served_class.get(key, 0)
+                for key, c in total.items()}
+
+    def close(self) -> None:
+        """Early-stop cleanup: stop the worker and drop generated-but-
+        unacquired tranches (idempotent)."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        with self._cond:
+            for i, (_pools, nbytes) in self._ready.items():
+                self._live_slots -= 1
+                self._live_bytes -= nbytes
+            self._ready.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -930,7 +1270,7 @@ class TripleBank:
         return bank
 
 
-class BankDealer:
+class BankDealer(_TripleServing):
     """Dealer-interface view over a `TripleBank` for one plan key —
     interface-compatible with `TrustedDealer` (same methods and counters),
     so it drops into `SecureKMeans.predict(..., dealer=...)` and
@@ -954,28 +1294,3 @@ class BankDealer:
         out = self.bank._pop(_class_key(kind, shape), self.key)
         self.dealer_seconds += self.bank.replenish_seconds - r0
         return out
-
-    def matmul_triple(self, shape_a, shape_b, *, tag: str = "misc") -> MatmulTriple:
-        _check_matmul_dims(shape_a, shape_b)
-        u0, u1, v0, v1, z0, z1 = self._next(
-            "matmul", (tuple(shape_a), tuple(shape_b)))
-        self.n_matmul += 1
-        return MatmulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
-
-    def mul_triple(self, shape, *, tag: str = "misc") -> MulTriple:
-        _check_elemwise_shape("mul", shape)
-        u0, u1, v0, v1, z0, z1 = self._next("mul", shape)
-        self.n_mul += 1
-        return MulTriple(AShare(u0, u1), AShare(v0, v1), AShare(z0, z1))
-
-    def bin_triple(self, shape, *, tag: str = "misc") -> BinTriple:
-        _check_elemwise_shape("bin", shape)
-        u0, u1, v0, v1, z0, z1 = self._next("bin", shape)
-        self.n_bin += 1
-        return BinTriple(BShare(u0, u1), BShare(v0, v1), BShare(z0, z1))
-
-    def rand(self, shape) -> jnp.ndarray:
-        return self._next("rand", shape)[0]
-
-    def mask_seed(self) -> int:
-        return int(self._next("seed", ())[0])

@@ -237,15 +237,20 @@ def _s1_body(ctx, geo: FitGeometry, xa, xb, mu: AShare, he,
     return P.argmin_onehot(ctx, dist)
 
 
-def _s3_body(ctx, geo: FitGeometry, xa, xb, mu: AShare, c: AShare, he):
-    """S3: centroid update mu' = C^T X / 1^T C with the empty-cluster MUX
-    guard and balanced-split division (see core/kmeans.py for the numerics).
+def _s3_partial_body(ctx, geo: FitGeometry, xa, xb, c: AShare, he):
+    """S3 head: the (k, d) numerator C^T X and (k,) denominator 1^T C sums
+    of one batch — pure local/Beaver products, no division. These are the
+    secret-shared running-sum accumulators of the minibatch mode: partial
+    sums from several batch launches ADD (share addition is free), and one
+    `_s3_final_body` launch per iteration closes the update. The full-batch
+    `_s3_body` is partial + final composed, so the minibatch path at
+    batch_size >= n is the same trace.
 
     he=None -> dense Beaver joint blocks; he=(ja, jb) -> the Protocol-2
     results of the MID-ITERATION host exchange on the assignment shares S1
     produced (the S2 callback)."""
     mm = ctx.backend.ring_mm
-    k, n = geo.k, geo.n
+    k = geo.k
     ct = AShare(c.s0.T, c.s1.T)
     if geo.partition == "vertical":
         da, db = geo.shape_a[1], geo.shape_b[1]
@@ -280,6 +285,16 @@ def _s3_body(ctx, geo: FitGeometry, xa, xb, mu: AShare, c: AShare, he):
         zb = AShare(jb.s0, loc_b + jb.s1)
         num = P.add(za, zb)
     den = AShare(c.s0.sum(0), c.s1.sum(0))
+    return num, den
+
+
+def _s3_final_body(ctx, k: int, n: int, mu: AShare, num: AShare,
+                   den: AShare):
+    """S3 tail: mu' = num / den with the empty-cluster MUX guard and
+    balanced-split division (see core/kmeans.py for the numerics) on the
+    (possibly cross-batch accumulated) sums. `n` is the TOTAL sample count
+    — it sizes the division constants, which is what keeps the minibatch
+    update bit-exact with the full-batch S3 at batch_size >= n."""
     one = AShare(jnp.full((k,), 1, ring.DTYPE), jnp.zeros((k,), ring.DTYPE))
     is_empty = P.cmp_lt(ctx, den, one)
     den_safe = P.mux(ctx, is_empty, one, den)
@@ -292,6 +307,13 @@ def _s3_body(ctx, geo: FitGeometry, xa, xb, mu: AShare, c: AShare, he):
                     trunc_f=ring.F)
     guard = AShare(is_empty.s0[:, None], is_empty.s1[:, None])
     return P.mux(ctx, guard, mu, mu_new)
+
+
+def _s3_body(ctx, geo: FitGeometry, xa, xb, mu: AShare, c: AShare, he):
+    """S3: centroid update mu' = C^T X / 1^T C — the partial-sum head and
+    the finalize tail composed back to back (the full-batch form)."""
+    num, den = _s3_partial_body(ctx, geo, xa, xb, c, he)
+    return _s3_final_body(ctx, geo.k, geo.n, mu, num, den)
 
 
 def _iteration(xa_enc, xb_enc, mu: AShare, dealer, n: int, k: int,
@@ -506,6 +528,165 @@ def fit_programs(partition: str, sparse: bool, shape_a, shape_b, k: int,
 
 
 # ---------------------------------------------------------------------------
+# Minibatch programs — S1 + S3-partial per batch geometry, one finalize
+# ---------------------------------------------------------------------------
+
+class BatchPrograms(NamedTuple):
+    """Compiled (S1, S3-partial) pair for ONE minibatch geometry plus the
+    offline schedule each launch consumes. Per batch t of an iteration:
+
+        he1 = host Protocol-2 on the centroid shares            (sparse)
+        c   = s1(xa_t, xb_t, mu0, mu1, *he1, *flat1)            launch 1
+        he3 = host Protocol-2 on the assignment shares          (sparse,
+                                                                 S2 callback)
+        n0, n1, d0, d1 = s3p(xa_t, xb_t, c0, c1, *he3, *flat3)  launch 2
+
+    The (k, d) numerator and (k,) denominator partials accumulate across
+    batches by share addition; the iteration closes with one
+    `finalize_program` launch. One cached pair serves every batch of its
+    geometry — a fit needs at most a handful of entries (full batch shape
+    + remainder)."""
+
+    geo: FitGeometry
+    s1: Any
+    s3p: Any
+    s1_requests: list
+    s3p_requests: list
+
+
+_BATCH_PROGRAM_CACHE: dict[tuple, BatchPrograms] = {}
+
+
+def fit_batch_programs(partition: str, sparse: bool, shape_a, shape_b,
+                       k: int, backend: str = "auto") -> BatchPrograms:
+    """Build (or fetch from the cross-fit cache) the compiled S1/S3-partial
+    pair for one BATCH geometry. The S1 body is the same one `fit_programs`
+    compiles — a batch is just a fit geometry with the batch rows in place
+    of the training rows; S3-partial stops at the running sums."""
+    from repro.core.backend import get_backend
+    ring_backend = get_backend(backend)
+    geo = FitGeometry(partition, bool(sparse),
+                      tuple(int(s) for s in shape_a),
+                      tuple(int(s) for s in shape_b), int(k))
+    key = (geo, ring_backend.name)
+    hit = _BATCH_PROGRAM_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    n, d = geo.n, geo.d
+    base = (_sds(geo.shape_a), _sds(geo.shape_b), _sds((k, d)), _sds((k, d)))
+
+    rec1 = RecordingDealer()
+
+    def trace1():
+        xa = jnp.zeros(geo.shape_a, ring.DTYPE)
+        xb = jnp.zeros(geo.shape_b, ring.DTYPE)
+        mu = AShare(jnp.zeros((k, d), ring.DTYPE),
+                    jnp.zeros((k, d), ring.DTYPE))
+        ctx = P.Ctx(dealer=rec1, log=CommLog(), backend=ring_backend)
+        return _s1_body(ctx, geo, xa, xb, mu, _zero_he(geo.he_shapes_s1()))
+
+    jax.eval_shape(trace1)
+    s1_requests = list(rec1.requests)
+
+    def s1_fn(xa, xb, mu0, mu1, *rest):
+        he, flat = _split_he(rest, geo.he_shapes_s1())
+        ctx = P.Ctx(dealer=ListDealer(flat), log=CommLog(),
+                    backend=ring_backend)
+        c = _s1_body(ctx, geo, xa, xb, AShare(mu0, mu1), he)
+        return c.s0, c.s1
+
+    s1_args = base + tuple(_he_specs(geo.he_shapes_s1())) \
+        + tuple(offline_tensor_specs(s1_requests, n))
+    s1 = jax.jit(s1_fn).lower(*s1_args).compile()
+
+    rec3 = RecordingDealer()
+
+    def trace3():
+        xa = jnp.zeros(geo.shape_a, ring.DTYPE)
+        xb = jnp.zeros(geo.shape_b, ring.DTYPE)
+        c = AShare(jnp.zeros((n, k), ring.DTYPE),
+                   jnp.zeros((n, k), ring.DTYPE))
+        ctx = P.Ctx(dealer=rec3, log=CommLog(), backend=ring_backend)
+        return _s3_partial_body(ctx, geo, xa, xb, c,
+                                _zero_he(geo.he_shapes_s3()))
+
+    jax.eval_shape(trace3)
+    s3p_requests = list(rec3.requests)
+
+    def s3p_fn(xa, xb, c0, c1, *rest):
+        he, flat = _split_he(rest, geo.he_shapes_s3())
+        ctx = P.Ctx(dealer=ListDealer(flat), log=CommLog(),
+                    backend=ring_backend)
+        num, den = _s3_partial_body(ctx, geo, xa, xb, AShare(c0, c1), he)
+        return num.s0, num.s1, den.s0, den.s1
+
+    s3p_args = (_sds(geo.shape_a), _sds(geo.shape_b),
+                _sds((n, k)), _sds((n, k))) \
+        + tuple(_he_specs(geo.he_shapes_s3())) \
+        + tuple(offline_tensor_specs(s3p_requests, n))
+    s3p = jax.jit(s3p_fn).lower(*s3p_args).compile()
+
+    progs = BatchPrograms(geo, s1, s3p, s1_requests, s3p_requests)
+    _BATCH_PROGRAM_CACHE[key] = progs
+    return progs
+
+
+class FinalizeProgram(NamedTuple):
+    """Compiled per-iteration S3 tail: one launch on the accumulated sums.
+
+        mu'0, mu'1 = fn(mu0, mu1, num0, num1, den0, den1, *flat)
+
+    where flat = materialize_offline(requests, dealer)."""
+
+    fn: Any
+    requests: list
+
+
+_FINALIZE_CACHE: dict[tuple, FinalizeProgram] = {}
+
+
+def finalize_program(k: int, d: int, n: int,
+                     backend: str = "auto") -> FinalizeProgram:
+    """Build (or fetch) the compiled minibatch finalize launch. `n` is the
+    TOTAL sample count (division constants), so every batch layout of one
+    fit shares a single entry — and the batch_size >= n fit runs the exact
+    algebra of the full-batch S3 program's tail."""
+    from repro.core.backend import get_backend
+    ring_backend = get_backend(backend)
+    key = (int(k), int(d), int(n), ring_backend.name)
+    hit = _FINALIZE_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    rec = RecordingDealer()
+
+    def trace():
+        z = lambda s: jnp.zeros(s, ring.DTYPE)  # noqa: E731
+        ctx = P.Ctx(dealer=rec, log=CommLog(), backend=ring_backend)
+        return _s3_final_body(ctx, k, n, AShare(z((k, d)), z((k, d))),
+                              AShare(z((k, d)), z((k, d))),
+                              AShare(z((k,)), z((k,))))
+
+    jax.eval_shape(trace)
+    requests = list(rec.requests)
+
+    def fn(mu0, mu1, num0, num1, den0, den1, *flat):
+        ctx = P.Ctx(dealer=ListDealer(list(flat)), log=CommLog(),
+                    backend=ring_backend)
+        out = _s3_final_body(ctx, k, n, AShare(mu0, mu1),
+                             AShare(num0, num1), AShare(den0, den1))
+        return out.s0, out.s1
+
+    args = (_sds((k, d)), _sds((k, d)), _sds((k, d)), _sds((k, d)),
+            _sds((k,)), _sds((k,))) \
+        + tuple(offline_tensor_specs(requests, n))
+    prog = FinalizeProgram(jax.jit(fn).lower(*args).compile(), requests)
+    _FINALIZE_CACHE[key] = prog
+    return prog
+
+
+# ---------------------------------------------------------------------------
 # predict_program — the S1 body alone, serving new batches against a model
 # ---------------------------------------------------------------------------
 
@@ -614,6 +795,8 @@ def predict_program(partition: str, sparse: bool, shape_a, shape_b, k: int,
 def clear_program_cache() -> None:
     _PROGRAM_CACHE.clear()
     _PREDICT_PROGRAM_CACHE.clear()
+    _BATCH_PROGRAM_CACHE.clear()
+    _FINALIZE_CACHE.clear()
 
 
 def online_iteration_fn(n: int, d: int, k: int, d_a: int,

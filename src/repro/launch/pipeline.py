@@ -1,0 +1,76 @@
+"""Double-buffered host/device pipeline executor (DESIGN.md §11).
+
+One online *step* — a minibatch of a Lloyd iteration, or one serving
+launch — decomposes into four phases:
+
+    pre     host work that depends on nothing in flight: the Protocol-2
+            exchange computable from the centroid shares, plus pinning the
+            step's offline tranche (SlotDealer.acquire / bank draw +
+            materialize_offline)
+    launch  the compiled program dispatch — ASYNC under jax, so the host
+            gets control back while the device crunches
+    mid     host work on the launch's outputs: the sparse S2 callback runs
+            here and blocks on the assignment shares coming off the device
+    post    the final dispatch / result assembly
+
+`run_pipeline(pipeline=True)` slides step t+1's `pre` into the window
+where step t's launch is on device — that is the ONLY reordering. Every
+phase still runs exactly once per step, `pre` order stays monotonic in t,
+and all correlated randomness is pinned per slot (the dealer fixes served
+words at GENERATION time, in canonical slot order — never at acquisition
+time), so pipeline=True and pipeline=False consume identical dealer words
+and produce identical shares and CommLog tallies: the escape hatch is
+stream-identical by construction, and any measured speedup cannot come
+from computing something different.
+
+Used by `SecureKMeans._fit_minibatch` (overlap batch t+1's Protocol-2
+exchange + tranche pin with batch t's S1 launch) and by
+`repro.serve.ScoringService.drain` (overlap request t+1's pre-launch
+exchange + bank draw with request t's scoring launch).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+
+class StageTask(NamedTuple):
+    """One pipeline step. `mid`/`post` are optional; phase signatures:
+
+        prep = pre()
+        out  = launch(prep)
+        m    = mid(prep, out)          # may block on device results
+        res  = post(prep, out, m)      # appended to run_pipeline's result
+    """
+
+    pre: Callable[[], Any]
+    launch: Callable[[Any], Any]
+    mid: Callable[[Any, Any], Any] | None = None
+    post: Callable[[Any, Any, Any], Any] | None = None
+
+
+def run_pipeline(tasks, pipeline: bool = True) -> list:
+    """Execute `tasks` in order, returning one result per task.
+
+    pipeline=False: strict sequence pre -> launch -> mid -> post per task.
+    pipeline=True: after dispatching task t's launch, task t+1's `pre` runs
+    while the device is busy; then t's mid/post complete before t+1's
+    launch. Single-threaded on the host — the overlap comes from jax's
+    asynchronous dispatch, not from host threads."""
+    tasks = list(tasks)
+    results = []
+    if not pipeline:
+        for t in tasks:
+            prep = t.pre()
+            out = t.launch(prep)
+            m = t.mid(prep, out) if t.mid is not None else None
+            results.append(t.post(prep, out, m) if t.post is not None
+                           else out)
+        return results
+    prep = tasks[0].pre() if tasks else None
+    for i, t in enumerate(tasks):
+        out = t.launch(prep)
+        nxt = tasks[i + 1].pre() if i + 1 < len(tasks) else None
+        m = t.mid(prep, out) if t.mid is not None else None
+        results.append(t.post(prep, out, m) if t.post is not None else out)
+        prep = nxt
+    return results

@@ -28,21 +28,25 @@ from repro.serve import ScoringService
 
 
 def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
-          iters: int = 5, sparse: bool = False, ladder=(32, 128),
+          iters: int = 5, sparse: bool = False, rungs=(32, 128),
           requests: int = 24, mean_batch: int = 32, frac: float = 0.02,
           provision_copies: int | None = None, bank_path: str | None = None,
+          pipeline: bool = True, fit_batch_size: int | None = None,
           seed: int = 0, verbose: bool = True) -> dict:
     ds = FraudDataset.synthesize(n=n_train, d_a=d_a, d_b=d_b,
                                  n_clusters=k, seed=seed)
     km = SecureKMeans(KMeansConfig(k=k, iters=iters, seed=seed,
-                                   sparse=sparse, offline="pooled"))
+                                   sparse=sparse, offline="pooled",
+                                   batch_size=fit_batch_size,
+                                   pipeline=pipeline))
     t0 = time.perf_counter()
     res = km.fit(ds.x_a, ds.x_b)
     t_fit = time.perf_counter() - t0
 
     bank = TripleBank(seed=serve_seed(seed))
-    svc = ScoringService(km, res, bank=bank, ladder=ladder,
+    svc = ScoringService(km, res, bank=bank, rungs=rungs,
                          with_scores=True, d_a=d_a, d_b=d_b,
+                         pipeline=pipeline,
                          provision_copies=provision_copies or requests)
     t0 = time.perf_counter()
     svc.warm()
@@ -96,20 +100,30 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--sparse", action="store_true")
-    ap.add_argument("--ladder", default="32,128",
-                    help="comma-separated padded batch rungs")
+    ap.add_argument("--rungs", "--ladder", dest="rungs", default="32,128",
+                    help="comma-separated padded batch rungs (strictly "
+                         "increasing positive ints)")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--mean-batch", type=int, default=32)
     ap.add_argument("--frac", type=float, default=0.02)
     ap.add_argument("--bank-path", default=None,
                     help="save + reload the provisioned TripleBank here")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="sequential escape hatch: disable the overlap of "
+                         "request t+1's exchange/bank draw with request "
+                         "t's launch (stream-identical outputs)")
+    ap.add_argument("--fit-batch-size", type=int, default=None,
+                    help="minibatch Lloyd batch rows for the fit "
+                         "(default: full batch)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(n_train=args.n_train, d_a=args.d_a, d_b=args.d_b, k=args.k,
           iters=args.iters, sparse=args.sparse,
-          ladder=tuple(int(r) for r in args.ladder.split(",")),
+          rungs=tuple(int(r) for r in args.rungs.split(",")),
           requests=args.requests, mean_batch=args.mean_batch,
-          frac=args.frac, bank_path=args.bank_path, seed=args.seed)
+          frac=args.frac, bank_path=args.bank_path,
+          pipeline=not args.no_pipeline,
+          fit_batch_size=args.fit_batch_size, seed=args.seed)
 
 
 if __name__ == "__main__":

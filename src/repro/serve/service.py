@@ -36,14 +36,19 @@ from repro.core.triples import TripleBank, serve_seed
 class BatchLadder:
     """Sorted rung sizes; `rung_for(m)` is the smallest rung >= m (the pad
     target), falling back to the top rung for oversized groups (the caller
-    chunks those)."""
+    chunks those). Rungs must come in strictly increasing positive order —
+    an unsorted or duplicated ladder is almost always a typo in a config
+    or CLI flag, so it is rejected rather than silently reordered."""
 
     def __init__(self, rungs=(32, 128, 512)):
         if not rungs:
             raise ValueError("BatchLadder needs at least one rung")
-        self.rungs = tuple(sorted(int(r) for r in rungs))
+        self.rungs = tuple(int(r) for r in rungs)
         if self.rungs[0] < 1:
             raise ValueError(f"ladder rungs must be >= 1, got {self.rungs}")
+        if any(a >= b for a, b in zip(self.rungs, self.rungs[1:])):
+            raise ValueError("ladder rungs must be sorted strictly "
+                             f"increasing, got {self.rungs}")
 
     @property
     def max_rung(self) -> int:
@@ -102,13 +107,21 @@ class ScoringService:
     centroids. `warm()` — called lazily on first drain — compiles every
     rung's `predict_program` and provisions `provision_copies` launches of
     correlated randomness per rung into the bank; both are pure offline
-    work."""
+    work.
+
+    `rungs` configures the pad ladder (alias: `ladder`, which also accepts
+    a built `BatchLadder`); rungs must be strictly increasing positive
+    ints. `pipeline=True` overlaps request t+1's pre-launch host work (the
+    Protocol-2 exchange and the bank draw) with request t's in-flight
+    compiled launch — stream-identical to `pipeline=False` because the
+    per-request prepare order is the same either way."""
 
     def __init__(self, model: SecureKMeans,
                  result: KMeansResult | None = None, *,
-                 bank: TripleBank | None = None, ladder=(32, 128, 512),
+                 bank: TripleBank | None = None, ladder=None, rungs=None,
                  with_scores: bool = True, provision_copies: int = 4,
-                 d_a: int | None = None, d_b: int | None = None):
+                 d_a: int | None = None, d_b: int | None = None,
+                 pipeline: bool = True):
         self.model = model
         self.result = result if result is not None \
             else getattr(model, "result_", None)
@@ -116,9 +129,14 @@ class ScoringService:
             raise ValueError("ScoringService needs a fitted model")
         self.bank = bank if bank is not None \
             else TripleBank(seed=serve_seed(model.cfg.seed))
+        if rungs is not None and ladder is not None:
+            raise ValueError("pass rungs= or ladder=, not both")
+        ladder = rungs if rungs is not None \
+            else (ladder if ladder is not None else (32, 128, 512))
         self.ladder = ladder if isinstance(ladder, BatchLadder) \
             else BatchLadder(ladder)
         self.with_scores = with_scores
+        self.pipeline = bool(pipeline)
         self.provision_copies = int(provision_copies)
         d = int(self.result.centroids.shape[1])
         if model.cfg.partition == "vertical":
@@ -182,18 +200,52 @@ class ScoringService:
     # -- the serving loop -------------------------------------------------
     def drain(self) -> list[ScoringResponse]:
         """Score everything queued: coalesce FIFO up to the top rung, pad,
-        launch, split per-request. Returns responses in submit order."""
+        launch, split per-request. Returns responses in submit order.
+
+        With `pipeline`, the drain runs as a launch pipeline: while chunk
+        t's compiled launch is on device, chunk t+1's pre-launch host work
+        (padding, Protocol-2 exchange, bank draw) runs on the main thread
+        (launch/pipeline.run_pipeline). Prepare order is monotonic either
+        way, so the bank serves identical words and pipeline=False returns
+        identical responses."""
         if not self._warmed:
             self.warm()
-        responses = []
+        from repro.launch.pipeline import StageTask, run_pipeline
         t0 = time.perf_counter()
         served0 = self.bank.served_requests
         repl0 = self.bank.replenish_events
+        groups = []
         while self._queue:
             group = [self._queue.pop(0)]
             while self._queue and self._fits(group, self._queue[0]):
                 group.append(self._queue.pop(0))
-            responses.extend(self._run_group(group))
+            groups.append(group)
+        units = []                # one entry per launch: (group idx, chunk)
+        for gi, group in enumerate(groups):
+            xa = np.concatenate([g[1] for g in group], 0)
+            xb = np.concatenate([g[2] for g in group], 0)
+            units.extend((gi, ca, cb) for ca, cb in self._chunks(xa, xb))
+        tasks = [StageTask(
+            pre=lambda ca=ca, cb=cb: self._prepare_one(ca, cb),
+            launch=self._launch_prepared,
+            post=lambda prep, outs, _m, ca=ca, cb=cb:
+                self._collect_one(prep, outs, ca, cb))
+            for _gi, ca, cb in units]
+        try:
+            chunk_outs = run_pipeline(tasks, pipeline=self.pipeline)
+            per_group: dict[int, list] = {}
+            for (gi, _ca, _cb), out in zip(units, chunk_outs):
+                per_group.setdefault(gi, []).append(out)
+            responses = []
+            for gi, group in enumerate(groups):
+                labels, scores = self._stitch(per_group[gi])
+                responses.extend(self._split_group(group, labels, scores))
+        except BaseException:
+            # a failed launch must not swallow the whole drain: requeue
+            # EVERY request no response was produced for (submit order
+            # preserved) so a later drain can retry
+            self._queue[:0] = [g for group in groups for g in group]
+            raise
         self.stats.online_seconds += time.perf_counter() - t0
         self.stats.triples_served += self.bank.served_requests - served0
         self.stats.replenish_events += self.bank.replenish_events - repl0
@@ -208,17 +260,100 @@ class ScoringService:
                 and sum(g[2].shape[0] for g in group)
                 + nxt[2].shape[0] <= top)
 
-    def _run_group(self, group) -> list[ScoringResponse]:
-        """One coalesced group -> one or more padded launches; split the
-        stacked outputs back per request."""
+    def _chunks(self, xa, xb) -> list:
+        """Top-rung row windows of one coalesced group (an oversized group
+        runs as several launches)."""
+        top = self.ladder.max_rung
+        if self.model.cfg.partition == "vertical":
+            return [(xa[lo:lo + top], xb[lo:lo + top])
+                    for lo in range(0, max(1, xa.shape[0]), top)]
+        n_chunks = max(1, -(-max(xa.shape[0], xb.shape[0]) // top))
+        return [(xa[i * top:(i + 1) * top], xb[i * top:(i + 1) * top])
+                for i in range(n_chunks)]
+
+    def _compiled(self) -> bool:
         cfg = self.model.cfg
-        xa = np.concatenate([g[1] for g in group], 0)
-        xb = np.concatenate([g[2] for g in group], 0)
-        # horizontal outputs come back ordered [all A rows; all B rows]
-        labels, scores = self._launch_chunked(xa, xb)
+        return cfg.vectorized and cfg.f == ring.F \
+            and self.model._traceable_backend()
+
+    def _prepare_one(self, ca, cb):
+        """Pre-launch host phase of one chunk: pad to its rung, plan/bank
+        lookup, bank draw, Protocol-2 exchange (model.predict_prepare).
+        For configs the compiled path can't serve, returns an eager marker
+        — the whole protocol then runs in the launch phase (nothing to
+        overlap, but the drain stays correct)."""
+        cfg = self.model.cfg
+        if cfg.partition == "vertical":
+            r = self.ladder.rung_for(ca.shape[0])
+        else:
+            r = self.ladder.rung_for(max(ca.shape[0], cb.shape[0]))
+        pa = _pad_rows(ca, r)
+        pb = _pad_rows(cb, r)
+        key, plan, _ = self.model.plan_predict(pa.shape, pb.shape,
+                                               self.with_scores)
+        if key not in self.bank.keys():
+            # a rung the warmup never saw (e.g. ladder edited live)
+            self.bank.provision(key, plan, copies=self.provision_copies)
+        dealer = self.bank.dealer(key)
+        if self._compiled():
+            prep = self.model.predict_prepare(pa, pb, self.result,
+                                              dealer=dealer,
+                                              with_scores=self.with_scores)
+            return prep, r, None
+        return None, r, (pa, pb, dealer)
+
+    def _launch_prepared(self, prep_state):
+        prep, _r, eager = prep_state
+        if prep is not None:
+            return self.model.predict_launch(prep)
+        pa, pb, dealer = eager
+        run = self.model.score if self.with_scores else self.model.predict
+        return run(pa, pb, self.result, dealer=dealer)
+
+    def _collect_one(self, prep_state, outs, ca, cb):
+        """Finish one chunk (blocks on the device): PredictResult assembly,
+        stats, pad-row slicing. Returns (labels, scores, a_rows) with
+        horizontal labels ordered [real A rows; real B rows]."""
+        prep, r, _eager = prep_state
+        cfg = self.model.cfg
+        pr = self.model.predict_collect(prep, outs) if prep is not None \
+            else outs
+        self.stats.launches += 1
+        self.stats.padded_rows += 2 * r if cfg.partition == "horizontal" \
+            else r
+        self.stats.online_bytes += pr.log.total_bytes("online")
+        labels = pr.labels_plain()
+        scores = pr.scores_plain() if self.with_scores else None
+        if cfg.partition == "vertical":
+            m = ca.shape[0]
+            return labels[:m], None if scores is None else scores[:m], m
+        idx = np.r_[0:ca.shape[0], r:r + cb.shape[0]]
+        return (labels[idx], None if scores is None else scores[idx],
+                ca.shape[0])
+
+    def _stitch(self, chunk_outs) -> tuple:
+        """Recombine one group's chunk outputs: vertical concatenates rows;
+        horizontal restores the [all A rows; all B rows] group order from
+        each chunk's [A block; B block]."""
+        if self.model.cfg.partition == "vertical":
+            labels = np.concatenate([o[0] for o in chunk_outs])
+            scores = None if chunk_outs[0][1] is None \
+                else np.concatenate([o[1] for o in chunk_outs])
+            return labels, scores
+        labels = np.concatenate([o[0][:o[2]] for o in chunk_outs]
+                                + [o[0][o[2]:] for o in chunk_outs])
+        if chunk_outs[0][1] is None:
+            return labels, None
+        scores = np.concatenate([o[1][:o[2]] for o in chunk_outs]
+                                + [o[1][o[2]:] for o in chunk_outs])
+        return labels, scores
+
+    def _split_group(self, group, labels, scores) -> list[ScoringResponse]:
+        """Split one coalesced group's stacked outputs back per request."""
+        cfg = self.model.cfg
         out = []
         a_off = b_off = 0
-        na_tot = xa.shape[0]
+        na_tot = sum(g[1].shape[0] for g in group)
         for rid, ga, gb in group:
             na, nb = ga.shape[0], gb.shape[0]
             if cfg.partition == "vertical":
@@ -238,69 +373,6 @@ class ScoringService:
             self.stats.requests += 1
             self.stats.rows += out[-1].rows
         return out
-
-    def _launch_chunked(self, xa, xb):
-        """Pad to the ladder and launch; oversized inputs run as several
-        top-rung chunks. Returns (labels, scores) for the REAL rows only —
-        horizontal results ordered [all A rows; all B rows]."""
-        top = self.ladder.max_rung
-        if self.model.cfg.partition == "vertical":
-            labs, scs = [], []
-            for lo in range(0, max(1, xa.shape[0]), top):
-                la, sc = self._launch_one(xa[lo:lo + top], xb[lo:lo + top])
-                labs.append(la)
-                scs.append(sc)
-            labels = np.concatenate(labs)
-            scores = None if scs[0] is None else np.concatenate(scs)
-            return labels, scores
-        la_parts, lb_parts, sa_parts, sb_parts = [], [], [], []
-        chunks = max(1, -(-max(xa.shape[0], xb.shape[0]) // top))
-        for i in range(chunks):
-            ca = xa[i * top:(i + 1) * top]
-            cb = xb[i * top:(i + 1) * top]
-            la, sc = self._launch_one(ca, cb)
-            la_parts.append(la[:ca.shape[0]])
-            lb_parts.append(la[ca.shape[0]:])
-            if sc is not None:
-                sa_parts.append(sc[:ca.shape[0]])
-                sb_parts.append(sc[ca.shape[0]:])
-        labels = np.concatenate(la_parts + lb_parts)
-        scores = np.concatenate(sa_parts + sb_parts) if sa_parts else None
-        return labels, scores
-
-    def _launch_one(self, xa, xb):
-        """Pad one chunk up to its rung, score it with a bank dealer, and
-        reveal — returning only the real rows (vertical) or the real
-        [A block; B block] concatenation (horizontal)."""
-        cfg = self.model.cfg
-        if cfg.partition == "vertical":
-            r = self.ladder.rung_for(xa.shape[0])
-            pa = _pad_rows(xa, r)
-            pb = _pad_rows(xb, r)
-            m = xa.shape[0]
-        else:
-            r = self.ladder.rung_for(max(xa.shape[0], xb.shape[0]))
-            pa = _pad_rows(xa, r)
-            pb = _pad_rows(xb, r)
-            m = None
-        sa, sb = pa.shape, pb.shape
-        key, plan, _ = self.model.plan_predict(sa, sb, self.with_scores)
-        if key not in self.bank.keys():
-            # a rung the warmup never saw (e.g. ladder edited live)
-            self.bank.provision(key, plan, copies=self.provision_copies)
-        dealer = self.bank.dealer(key)
-        run = self.model.score if self.with_scores else self.model.predict
-        pr = run(pa, pb, self.result, dealer=dealer)
-        self.stats.launches += 1
-        self.stats.padded_rows += 2 * r if cfg.partition == "horizontal" \
-            else r
-        self.stats.online_bytes += pr.log.total_bytes("online")
-        labels = pr.labels_plain()
-        scores = pr.scores_plain() if self.with_scores else None
-        if cfg.partition == "vertical":
-            return labels[:m], None if scores is None else scores[:m]
-        idx = np.r_[0:xa.shape[0], r:r + xb.shape[0]]
-        return labels[idx], None if scores is None else scores[idx]
 
 
 def _pad_rows(x: np.ndarray, rows: int) -> np.ndarray:

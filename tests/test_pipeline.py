@@ -1,0 +1,326 @@
+"""Minibatch Lloyd + pipelined executor tests (DESIGN.md §11).
+
+Load-bearing properties:
+* minibatch fit at batch_size >= n is BIT-EXACT vs the existing full-batch
+  pooled fast path for all four partition x sparsity combos (same share
+  words, same dealer counters, same CommLog tallies);
+* pipeline=True is stream-identical to pipeline=False (the executor only
+  reorders host work into the device window — the SlotDealer pins every
+  slot's randomness at generation time, in canonical order);
+* batch geometries are reused — a many-batch fit compiles at most a
+  handful of program pairs (full shape + remainder), never one per batch;
+* SlotDealer serves the words PooledDealer would, for ANY acquisition
+  order within the window, streamed or pregenerated, grouped or not.
+"""
+import numpy as np
+import pytest
+
+from repro.core.kmeans import (KMeansConfig, SecureKMeans,
+                               _assemble_assignment, _minibatch_bounds)
+from repro.core.triples import (PlanRequest, PooledDealer,
+                                PoolExhaustedError, SlotDealer, TriplePlan)
+from repro.launch import kmeans_step as K
+from repro.launch.pipeline import StageTask, run_pipeline
+
+
+def _blobs(n, d, k, seed, sparse_frac=0.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-4, 4, (k, d))
+    lab = rng.integers(0, k, n)
+    x = centers[lab] + rng.normal(0, 0.3, (n, d))
+    if sparse_frac:
+        x = x * (rng.random((n, d)) >= sparse_frac)
+    return x
+
+
+def _split(x, partition):
+    n, d = x.shape
+    if partition == "vertical":
+        return x[:, :d // 2], x[:, d // 2:]
+    return x[:n // 2], x[n // 2:]
+
+
+def _assert_same_fit(r0, r1):
+    for field in ("centroids", "assignment"):
+        for s in ("s0", "s1"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(getattr(r0, field), s), np.uint64),
+                np.asarray(getattr(getattr(r1, field), s), np.uint64))
+    assert (r0.dealer.n_matmul, r0.dealer.n_mul, r0.dealer.n_bin) == \
+           (r1.dealer.n_matmul, r1.dealer.n_mul, r1.dealer.n_bin)
+    assert r0.log.by_tag("online") == r1.log.by_tag("online")
+
+
+# ---------------------------------------------------------------------------
+# minibatch fit vs the full-batch fast path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("partition", ["vertical", "horizontal"])
+@pytest.mark.parametrize("sparse", [False, True])
+def test_minibatch_full_batch_bit_exact(partition, sparse):
+    """batch_size = n (one batch covering the fit) must replay the existing
+    full-batch pooled path word for word: same shares, dealer counters, and
+    online/offline CommLog tallies — the accumulator algebra composes to
+    exactly the single-launch S3."""
+    n, d, k = 48, 4, 2
+    x = _blobs(n, d, k, seed=11, sparse_frac=0.5 if sparse else 0.0)
+    a, b = _split(x, partition)
+    base = dict(k=k, iters=2, partition=partition, sparse=sparse, seed=5,
+                backend="xla")
+    r_full = SecureKMeans(KMeansConfig(**base, offline="pooled")).fit(a, b)
+    r_mb = SecureKMeans(KMeansConfig(**base, offline="pooled",
+                                     batch_size=n)).fit(a, b)
+    _assert_same_fit(r_full, r_mb)
+    assert r_full.log.by_tag("offline") == r_mb.log.by_tag("offline")
+
+
+@pytest.mark.parametrize("partition", ["vertical", "horizontal"])
+@pytest.mark.parametrize("sparse", [False, True])
+def test_minibatch_pipeline_on_off_stream_identical(partition, sparse):
+    """pipeline=True == pipeline=False, multi-batch, with a remainder
+    batch, across pooled and streamed dealers: identical shares, dealer
+    counters, CommLog tallies — the overlap cannot change a single word."""
+    n, d, k = 48, 4, 2
+    x = _blobs(n, d, k, seed=9, sparse_frac=0.5 if sparse else 0.0)
+    a, b = _split(x, partition)
+    base = dict(k=k, iters=2, partition=partition, sparse=sparse, seed=5,
+                backend="xla", batch_size=17)        # 17 -> ragged batches
+    res = {}
+    for pipe in (True, False):
+        for off in ("pooled", "streamed"):
+            cfg = KMeansConfig(**base, offline=off, pipeline=pipe)
+            res[(pipe, off)] = SecureKMeans(cfg).fit(a, b)
+    ref = res[(False, "pooled")]
+    for key, r in res.items():
+        _assert_same_fit(ref, r)
+    # and the minibatch split agrees with the full-batch fit on the data
+    # itself (well-separated blobs: truncation LSB noise flips nothing)
+    full = SecureKMeans(KMeansConfig(k=k, iters=2, partition=partition,
+                                     sparse=sparse, seed=5, backend="xla",
+                                     offline="pooled")).fit(a, b)
+    assert ref.labels_plain().tolist() == full.labels_plain().tolist()
+    np.testing.assert_allclose(ref.centroids_plain(),
+                               full.centroids_plain(), atol=1e-3)
+
+
+def test_minibatch_remainder_geometry_reuse():
+    """A many-batch fit compiles ONE program pair per distinct batch
+    geometry (full + remainder) plus one finalize — never per batch."""
+    K.clear_program_cache()
+    n = 80
+    x = _blobs(n, 4, 2, seed=3)
+    cfg = KMeansConfig(k=2, iters=2, seed=5, backend="xla",
+                       offline="pooled", batch_size=16)  # 5 equal batches
+    SecureKMeans(cfg).fit(x[:, :2], x[:, 2:])
+    assert len(K._BATCH_PROGRAM_CACHE) == 1
+    assert len(K._FINALIZE_CACHE) == 1
+    cfg2 = KMeansConfig(k=2, iters=2, seed=5, backend="xla",
+                        offline="pooled", batch_size=32)  # 32,32,16
+    SecureKMeans(cfg2).fit(x[:, :2], x[:, 2:])
+    # the 16-row remainder reuses the FIRST fit's 16-row program: only the
+    # 32-row geometry is new
+    assert len(K._BATCH_PROGRAM_CACHE) == 2
+    assert len(K._FINALIZE_CACHE) == 1        # finalize keyed by (k, d, n)
+
+
+def test_minibatch_requires_planned_offline():
+    x = _blobs(24, 4, 2, seed=1)
+    with pytest.raises(ValueError, match="pooled"):
+        SecureKMeans(KMeansConfig(k=2, iters=1, batch_size=8)) \
+            .fit(x[:, :2], x[:, 2:])
+    with pytest.raises(ValueError, match="fast path"):
+        SecureKMeans(KMeansConfig(k=2, iters=1, batch_size=8,
+                                  offline="pooled", backend="numpy")) \
+            .fit(x[:, :2], x[:, 2:])
+    with pytest.raises(ValueError, match="batch_size"):
+        KMeansConfig(k=2, batch_size=0)
+
+
+def test_minibatch_tol_early_stop_closes_cleanly():
+    """A tol early-stop mid-schedule leaves SlotDealer surplus, never an
+    error — undispatched slots are dropped by close()."""
+    x = _blobs(120, 4, 3, seed=4)
+    cfg = KMeansConfig(k=3, iters=40, seed=5, tol=1e-6, backend="xla",
+                       offline="streamed", batch_size=48)
+    res = SecureKMeans(cfg).fit(x[:, :2], x[:, 2:])
+    assert res.iters_run < 40
+    assert any(v > 0 for v in res.dealer.remaining().values())
+    res.dealer.close()                      # idempotent
+
+
+# ---------------------------------------------------------------------------
+# _minibatch_bounds / assignment reassembly
+# ---------------------------------------------------------------------------
+
+def test_minibatch_bounds_vertical():
+    assert _minibatch_bounds("vertical", 10, 10, 4) == \
+        [((0, 4), (0, 4)), ((4, 8), (4, 8)), ((8, 10), (8, 10))]
+    assert _minibatch_bounds("vertical", 10, 10, 100) == [((0, 10), (0, 10))]
+
+
+def test_minibatch_bounds_horizontal_alignment():
+    """Both parties get the same NUMBER of contiguous chunks, sizes within
+    one of each other, covering all rows — even for uneven row counts."""
+    for na, nb, bs in [(9, 7, 4), (10, 10, 4), (5, 29, 8), (3, 3, 100)]:
+        bounds = _minibatch_bounds("horizontal", na, nb, bs)
+        a_spans = [b[0] for b in bounds]
+        b_spans = [b[1] for b in bounds]
+        assert a_spans[0][0] == 0 and a_spans[-1][1] == na
+        assert b_spans[0][0] == 0 and b_spans[-1][1] == nb
+        for spans in (a_spans, b_spans):
+            for (l0, h0), (l1, _h1) in zip(spans, spans[1:]):
+                assert h0 == l1
+            sizes = [h - l for l, h in spans]
+            assert max(sizes) - min(sizes) <= 1
+            assert min(sizes) >= 1
+
+
+# ---------------------------------------------------------------------------
+# SlotDealer: the acquisition-order-independence contract
+# ---------------------------------------------------------------------------
+
+_SHAPES = {"matmul": ((5, 3), (3, 2)), "mul": (4, 3), "bin": (2, 7),
+           "rand": (6,), "seed": ()}
+
+
+def _slot_plans(seed, n_slots=6, per_slot=3):
+    rng = np.random.default_rng(seed)
+    kinds = list(_SHAPES)
+    return [TriplePlan([PlanRequest(k, _SHAPES[k], "t")
+                        for k in rng.choice(kinds, per_slot)])
+            for _ in range(n_slots)]
+
+
+def _serve_slot(view, plan):
+    out = []
+    for r in plan.requests:
+        if r.kind == "matmul":
+            t = view.matmul_triple(*r.shape)
+            out += [t.u.s0, t.u.s1, t.v.s0, t.v.s1, t.z.s0, t.z.s1]
+        elif r.kind == "mul":
+            t = view.mul_triple(r.shape)
+            out += [t.u.s0, t.u.s1, t.v.s0, t.v.s1, t.z.s0, t.z.s1]
+        elif r.kind == "bin":
+            t = view.bin_triple(r.shape)
+            out += [t.u.b0, t.u.b1, t.v.b0, t.v.b1, t.z.b0, t.z.b1]
+        elif r.kind == "rand":
+            out.append(view.rand(r.shape))
+        else:
+            out.append(np.uint64(view.mask_seed()))
+    return [np.asarray(a, np.uint64) for a in out]
+
+
+@pytest.mark.parametrize("stream", [False, True])
+@pytest.mark.parametrize("group_bytes", [0, "auto"])
+def test_slot_dealer_matches_pooled_any_order(stream, group_bytes):
+    """Acquiring slots out of order (the pipelined lead) serves the same
+    words as PooledDealer over the concatenated plan — streamed or
+    pregenerated, grouped or per-slot generation."""
+    plans = _slot_plans(seed=8)
+    concat = TriplePlan([r for p in plans for r in p.requests])
+    pooled = PooledDealer(concat, seed=13)
+    want = {}
+    cursor = []
+    for i, p in enumerate(plans):
+        want[i] = _serve_slot(pooled, p)
+        cursor.append(p)
+    order = [0, 2, 1, 4, 3, 5]          # the executor's S1-ahead pattern
+    dealer = SlotDealer(plans, seed=13, stream=stream, async_gen=False,
+                        group_bytes=group_bytes)
+    for i in order:
+        got = _serve_slot(dealer.acquire(i), plans[i])
+        assert len(got) == len(want[i])
+        for x, y in zip(got, want[i]):
+            np.testing.assert_array_equal(x, y)
+    dealer.close()
+
+
+def test_slot_dealer_async_worker_matches_sync():
+    plans = _slot_plans(seed=21, n_slots=8)
+    serve = {}
+    for async_gen in (False, True):
+        dealer = SlotDealer(plans, seed=4, stream=True, async_gen=async_gen,
+                            window=4)
+        serve[async_gen] = [w for i in range(len(plans))
+                            for w in _serve_slot(dealer.acquire(i),
+                                                 plans[i])]
+        dealer.close()
+    for x, y in zip(serve[False], serve[True]):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_slot_dealer_forward_acquire_past_window_no_deadlock():
+    """acquire(i) far beyond the backpressure window must generate through
+    to slot i (a waiting caller overrides the window) — and the words stay
+    canonical."""
+    plans = [TriplePlan([PlanRequest("mul", (8, 8), "t")])
+             for _ in range(10)]
+    dealer = SlotDealer(plans, seed=2, stream=True, window=2, group_bytes=0)
+    got = dealer.acquire(7).mul_triple((8, 8))
+    concat = TriplePlan([r for p in plans for r in p.requests])
+    pooled = PooledDealer(concat, seed=2)
+    for _ in range(8):                   # the 8th draw is slot 7's word
+        want = pooled.mul_triple((8, 8))
+    np.testing.assert_array_equal(np.asarray(got.u.s0, np.uint64),
+                                  np.asarray(want.u.s0, np.uint64))
+    dealer.close()
+
+
+def test_slot_dealer_exhaustion_and_reacquire():
+    plans = [TriplePlan([PlanRequest("mul", (2, 2), "t")])] * 2
+    dealer = SlotDealer(plans, seed=1, stream=False)
+    v = dealer.acquire(0)
+    v.mul_triple((2, 2))
+    with pytest.raises(PoolExhaustedError, match="exhausted"):
+        v.mul_triple((2, 2))
+    with pytest.raises(PoolExhaustedError, match="never"):
+        dealer.acquire(1).bin_triple((2, 2))
+    with pytest.raises(PoolExhaustedError, match="already"):
+        dealer.acquire(0)
+    with pytest.raises(IndexError):
+        dealer.acquire(7)
+
+
+# ---------------------------------------------------------------------------
+# the executor itself
+# ---------------------------------------------------------------------------
+
+def test_run_pipeline_phase_order_and_results():
+    """Pipelined execution returns the same results as sequential; the only
+    reordering is pre(t+1) sliding before mid/post(t)."""
+    for pipeline in (False, True):
+        trace = []
+
+        def mk(t):
+            return StageTask(
+                pre=lambda t=t: trace.append(("pre", t)) or t * 10,
+                launch=lambda p, t=t: trace.append(("launch", t)) or p + 1,
+                mid=lambda p, o, t=t: trace.append(("mid", t)) or o + p,
+                post=lambda p, o, m, t=t: trace.append(("post", t)) or m)
+
+        out = run_pipeline([mk(t) for t in range(3)], pipeline=pipeline)
+        assert out == [1, 21, 41]
+        # every phase ran exactly once per task, launch after its pre
+        for t in range(3):
+            assert trace.index(("pre", t)) < trace.index(("launch", t)) \
+                < trace.index(("mid", t)) < trace.index(("post", t))
+        if pipeline:
+            assert trace.index(("pre", 1)) < trace.index(("mid", 0))
+        else:
+            assert trace.index(("pre", 1)) > trace.index(("post", 0))
+
+
+def test_assemble_assignment_horizontal_order():
+    """Horizontal reassembly restores [all A rows; all B rows] from per-
+    batch [A chunk; B chunk] outputs."""
+    import jax.numpy as jnp
+
+    from repro.core.sharing import AShare
+    parts = [AShare(jnp.asarray(np.array([[1], [2], [10]], np.uint64)),
+                    jnp.asarray(np.array([[0], [0], [0]], np.uint64))),
+             AShare(jnp.asarray(np.array([[3], [11]], np.uint64)),
+                    jnp.asarray(np.array([[0], [0]], np.uint64)))]
+    batches = [{"a_rows": 2}, {"a_rows": 1}]
+    c = _assemble_assignment("horizontal", parts, batches)
+    np.testing.assert_array_equal(np.asarray(c.s0, np.uint64).ravel(),
+                                  [1, 2, 3, 10, 11])

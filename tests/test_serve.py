@@ -262,7 +262,7 @@ def test_bank_unknown_key_raises():
 # ---------------------------------------------------------------------------
 
 def test_batch_ladder():
-    lad = BatchLadder((128, 32))
+    lad = BatchLadder((32, 128))
     assert lad.rungs == (32, 128)
     assert lad.rung_for(1) == 32
     assert lad.rung_for(32) == 32
@@ -270,6 +270,46 @@ def test_batch_ladder():
     assert lad.rung_for(1000) == 128            # caller chunks
     with pytest.raises(ValueError):
         BatchLadder(())
+    # rungs are validated, not silently fixed up: unsorted/duplicate/
+    # non-positive ladders are config typos
+    with pytest.raises(ValueError, match="strictly increasing"):
+        BatchLadder((128, 32))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        BatchLadder((32, 32, 128))
+    with pytest.raises(ValueError, match=">= 1"):
+        BatchLadder((0, 32))
+
+
+def test_service_rungs_param():
+    """ScoringService(..., rungs=...) configures the ladder (alias of
+    ladder=; passing both is ambiguous and rejected)."""
+    km, res = _fitted("vertical", False)
+    svc = ScoringService(km, res, rungs=(8, 16), d_a=2, d_b=2)
+    assert svc.ladder.rungs == (8, 16)
+    with pytest.raises(ValueError, match="not both"):
+        ScoringService(km, res, rungs=(8,), ladder=(8,), d_a=2, d_b=2)
+
+
+def test_service_pipeline_matches_sequential():
+    """pipeline=True (request t+1's exchange/bank draw overlapping request
+    t's launch) returns responses identical to the sequential drain — same
+    bank words, same labels and scores."""
+    from repro.core.triples import TripleBank, serve_seed
+    km, res = _fitted("vertical", False)
+    outs = {}
+    for pipe in (True, False):
+        svc = ScoringService(km, res,
+                             bank=TripleBank(seed=serve_seed(km.cfg.seed)),
+                             rungs=(8, 16), with_scores=True, d_a=2, d_b=2,
+                             provision_copies=2, pipeline=pipe)
+        for i, m in enumerate([3, 5, 9, 2, 40]):
+            _, qa, qb = _batch("vertical", False, m=m, seed=100 + i)
+            svc.submit(qa, qb)
+        outs[pipe] = svc.drain()
+    for a, b in zip(outs[True], outs[False]):
+        assert a.request_id == b.request_id
+        np.testing.assert_array_equal(a.labels, b.labels)
+        np.testing.assert_array_equal(a.scores, b.scores)
 
 
 @pytest.mark.parametrize("partition", ["vertical", "horizontal"])

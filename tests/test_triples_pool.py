@@ -231,6 +231,45 @@ def test_streaming_replays_pooled_bit_exact(kinds, iters, seed):
     assert all(v == 0 for v in stream.remaining().values())
 
 
+@given(st.lists(st.sampled_from(["matmul", "mul", "bin", "rand", "seed"]),
+                min_size=1, max_size=8),
+       st.integers(1, 6), st.integers(1, 7), st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=15)
+def test_streaming_grouped_tranches_equal_ungrouped(kinds, iters, group,
+                                                    seed):
+    """Tranche grouping (several iterations per generation wakeup) serves
+    the SAME words as group=1 — the grouped stacked draw is the
+    concatenation of the per-iteration draws. Any group size, including
+    group > iters and a ragged tail group."""
+    requests = [PlanRequest(k, _SHAPES[k], "t") for k in kinds]
+    iter_plan = TriplePlan(requests)
+    full = requests * iters
+    a = _consume(StreamingPooledDealer(iter_plan, iters, seed=seed), full)
+    grouped = StreamingPooledDealer(iter_plan, iters, seed=seed, group=group)
+    b = _consume(grouped, full)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert grouped.served_iters == iters
+    assert all(v == 0 for v in grouped.remaining().values())
+
+
+def test_streaming_auto_group_sizes_to_tranche_bytes():
+    """group="auto" groups tiny per-iteration tranches (amortizing worker
+    wakeups) but never more than the fit has iterations; a big tranche
+    stays ungrouped."""
+    small = TriplePlan([PlanRequest("mul", (2, 2), "t")])
+    d = StreamingPooledDealer(small, 5, seed=1, group="auto",
+                              async_gen=False)
+    assert d.group == 5                      # tiny tranche: one wakeup
+    big = TriplePlan([PlanRequest("matmul", ((512, 256), (256, 64)), "t")])
+    d2 = StreamingPooledDealer(big, 5, seed=1, group="auto",
+                               async_gen=False)
+    assert d2.group == 1                     # ~7 MB/iteration: no grouping
+    d2.close()
+    d.close()
+
+
 def test_streaming_sync_mode_matches_async():
     """async_gen=False (generation inline at dispatch) serves the same
     words — the worker thread is an overlap optimization, not semantics."""
