@@ -22,8 +22,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_online_offline, fig3_vectorization,
-                            fig4_sparse, kernel_bench, online_offline,
-                            pipeline_bench, q5_fraud, serve_bench, table1_2)
+                            fig4_sparse, kernel_bench, offline_bench,
+                            online_offline, pipeline_bench, q5_fraud,
+                            serve_bench, table1_2)
 
     suites = {
         "table1_2_runtime_comm": lambda: table1_2.run(quick=args.quick),
@@ -49,6 +50,11 @@ def main() -> None:
         # streamed peak-pool residency vs n, persisted to
         # benchmarks/BENCH_pipeline.json
         "pipeline": lambda: pipeline_bench.run(quick=args.quick),
+        # `--only offline --quick` is the cold-start smoke: cold vs warm vs
+        # bank-provisioned fit offline walls, batched-vs-legacy HE exchange
+        # accounting + real-Paillier wall, and provisioning worker scaling,
+        # persisted to benchmarks/BENCH_offline.json
+        "offline": lambda: offline_bench.run(quick=args.quick),
     }
     derived_fns = {
         "table1_2_runtime_comm": table1_2.derived,
@@ -60,6 +66,7 @@ def main() -> None:
         "online_offline": online_offline.derived,
         "serve": serve_bench.derived,
         "pipeline": pipeline_bench.derived,
+        "offline": offline_bench.derived,
     }
     if args.only:
         keep = set(args.only.split(","))

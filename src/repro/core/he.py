@@ -112,6 +112,17 @@ class Ciphertext:
             return Ciphertext(self.pk, self.c * other.c % self.pk.n2)
         return self + self.pk.encrypt(int(other))
 
+    def add_plain(self, m: int) -> "Ciphertext":
+        """[[x + m]] without fresh randomness: g^m = (1 + m*n) mod n^2.
+
+        Deterministic (unlike `ct + int`, which re-randomizes via a full
+        encrypt) — the cost of one modular mul instead of one encryption.
+        Callers that transmit the result must re-randomize it themselves
+        (e.g. add a fresh [[0]]) or the recipient who produced `self` could
+        recover m from the known randomness."""
+        m = int(m) % self.pk.n
+        return Ciphertext(self.pk, self.c * (1 + m * self.pk.n) % self.pk.n2)
+
     def __rmul__(self, k: int):
         k = int(k) % self.pk.n
         return Ciphertext(self.pk, pow(self.c, k, self.pk.n2))
@@ -162,6 +173,10 @@ class SimCiphertext:
     def __add__(self, other):
         o = other.m if isinstance(other, SimCiphertext) else int(other)
         return SimCiphertext(self.he, self.m + o)
+
+    def add_plain(self, m: int) -> "SimCiphertext":
+        """Deterministic plaintext add — same interface as Paillier's."""
+        return SimCiphertext(self.he, self.m + int(m))
 
     def __rmul__(self, k: int):
         return SimCiphertext(self.he, int(k) * self.m)

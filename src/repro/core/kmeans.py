@@ -38,8 +38,8 @@ from repro.core.channel import CommLog, NetModel
 from repro.core.he import OU_COST_S, SimulatedPHE
 from repro.core.sharing import AShare, rec, rec_real, share
 from repro.core.sparse import CSRMatrix, secure_sparse_matmul
-from repro.core.triples import (PlanningDealer, PooledDealer, SlotDealer,
-                                StreamingPooledDealer, TriplePlan,
+from repro.core.triples import (BankSlotDealer, PlanningDealer, PooledDealer,
+                                SlotDealer, StreamingPooledDealer, TriplePlan,
                                 TrustedDealer, serve_seed)
 
 
@@ -197,7 +197,16 @@ class SecureKMeans:
         self.he = cfg.he_backend or SimulatedPHE()
 
     # ------------------------------------------------------------------ #
-    def fit(self, x_a: np.ndarray, x_b: np.ndarray) -> KMeansResult:
+    def fit(self, x_a: np.ndarray, x_b: np.ndarray, *,
+            dealer=None) -> KMeansResult:
+        """Jointly cluster the two parties' data. `dealer` (optional)
+        supplies the fit's correlated randomness from an EXTERNAL provider —
+        pass a `TripleBank.dealer(key)` view over a bank provisioned with
+        `plan_fit`'s (key, plan) to fit with zero in-process generation
+        work. The bank must share the fit's seed (`cfg.seed`): per-class
+        streams then make the served words — and hence every share and
+        CommLog tally — bit-identical to the built-in dealers
+        (test-enforced on all partition x sparsity combos)."""
         cfg = self.cfg
         rng = np.random.default_rng(cfg.seed)
         ctx = P.make_ctx(cfg.seed, backend=cfg.backend)
@@ -222,7 +231,7 @@ class SecureKMeans:
             # shared running-sum accumulators and (optionally) pipelined
             # host exchanges — its own loop below
             return self._fit_minibatch(ctx, enc_a, enc_b, csr_a, csr_b,
-                                       mu, n, d)
+                                       mu, n, d, ext_dealer=dealer)
 
         # pooled/streamed offline phase: trace the schedule (cached across
         # same-shape fits), bulk-generate the pools, upload once, and AOT-
@@ -233,7 +242,7 @@ class SecureKMeans:
         # two launches.
         plan_s = 0.0
         fast = None
-        if cfg.offline in ("pooled", "streamed"):
+        if dealer is not None or cfg.offline in ("pooled", "streamed"):
             t0 = time.perf_counter()
             iter_plan, iter_comm = self._plan_offline_iter(
                 x_a.shape, x_b.shape)
@@ -256,7 +265,12 @@ class SecureKMeans:
                         jnp.asarray(enc_a), jnp.asarray(enc_b),
                         csr_at, csr_bt)
             plan_s = time.perf_counter() - t0
-            if cfg.offline == "pooled":
+            if dealer is not None:
+                # external provider (e.g. a provisioned TripleBank view):
+                # its generation cost lives on the bank's offline books —
+                # this fit pays only the (cached) plan + any stock-out stall
+                ctx.dealer = dealer
+            elif cfg.offline == "pooled":
                 ctx.dealer = PooledDealer(iter_plan.repeat(cfg.iters),
                                           seed=cfg.seed, log=ctx.log)
             else:
@@ -302,8 +316,7 @@ class SecureKMeans:
                                         *he3, *flat3)
                     mu = AShare(mu0, mu1)
                     if hx is not None:
-                        ctx.he_seconds = getattr(ctx, "he_seconds", 0.0) \
-                            + getattr(hx, "he_seconds", 0.0)
+                        ctx.add_he_seconds(hx.he_seconds)
                     # per-iteration traffic is shape-determined; replay the
                     # traced iteration's online tallies (protocol sends only
                     # fire at trace time inside a compiled step)
@@ -343,7 +356,7 @@ class SecureKMeans:
             online_seconds=max(0.0, wall - in_loop_dealer_s),
             offline_dealer_seconds=dealer.dealer_seconds + plan_s,
             offline_modelled_ot_seconds=dealer.modelled_ot_seconds,
-            he_seconds=getattr(ctx, "he_seconds", 0.0),
+            he_seconds=ctx.he_seconds,
             loop_seconds=wall,
             offline_plan_seconds=plan_s,
         )
@@ -353,7 +366,7 @@ class SecureKMeans:
     # Minibatch Lloyd — batched S1/S3-partial launches, pipelined exchanges
     # ------------------------------------------------------------------ #
     def _fit_minibatch(self, ctx, enc_a, enc_b, csr_a, csr_b, mu: AShare,
-                       n: int, d: int) -> KMeansResult:
+                       n: int, d: int, ext_dealer=None) -> KMeansResult:
         """Each iteration is one full pass over the data in
         ceil(n / batch_size)-row batches: per batch an S1 launch (distances
         + argmin on the CURRENT centroids) and an S3-partial launch whose
@@ -384,17 +397,14 @@ class SecureKMeans:
         from repro.launch.pipeline import run_pipeline
 
         t0 = time.perf_counter()
-        bounds = _minibatch_bounds(cfg.partition, enc_a.shape[0],
-                                   enc_b.shape[0], cfg.batch_size)
+        bounds, stage_plans, (fin_plan, fin_comm), _ = \
+            self._minibatch_slot_plans(enc_a.shape, enc_b.shape)
         batches = []
-        for (alo, ahi), (blo, bhi) in bounds:
+        for ((alo, ahi), (blo, bhi)), plans in zip(bounds, stage_plans):
             ea, eb = enc_a[alo:ahi], enc_b[blo:bhi]
             ca = CSRMatrix.from_dense(ea) if cfg.sparse else None
             cb = CSRMatrix.from_dense(eb) if cfg.sparse else None
-            s1_plan, s1_comm = self._plan_batch_stage(ea.shape, eb.shape,
-                                                      "s1")
-            s3_plan, s3_comm = self._plan_batch_stage(ea.shape, eb.shape,
-                                                      "s3p")
+            s1_plan, s1_comm, s3_plan, s3_comm = plans
             batches.append({
                 "enc_a": ea, "enc_b": eb,
                 "dev_a": jnp.asarray(ea), "dev_b": jnp.asarray(eb),
@@ -409,15 +419,24 @@ class SecureKMeans:
                 "a_rows": ahi - alo,
             })
         fin_prog = K.finalize_program(cfg.k, d, n, backend=cfg.backend)
-        fin_plan, fin_comm = self._plan_finalize(d, n)
         iter_slots = []
         for b in batches:
             iter_slots += [b["s1_plan"], b["s3_plan"]]
         iter_slots.append(fin_plan)
         spi = len(iter_slots)                    # slots per iteration
-        dealer = SlotDealer(iter_slots * cfg.iters, seed=cfg.seed,
-                            log=ctx.log,
-                            stream=(cfg.offline == "streamed"))
+        if ext_dealer is not None:
+            bank = getattr(ext_dealer, "bank", None)
+            if bank is None:
+                raise ValueError(
+                    "minibatch fit(dealer=...) takes a TripleBank dealer "
+                    "view (bank.dealer(key) over a plan_fit provisioning); "
+                    f"got {type(ext_dealer).__name__}")
+            dealer = BankSlotDealer(bank, ext_dealer.key,
+                                    iter_slots * cfg.iters, log=ctx.log)
+        else:
+            dealer = SlotDealer(iter_slots * cfg.iters, seed=cfg.seed,
+                                log=ctx.log,
+                                stream=(cfg.offline == "streamed"))
         ctx.dealer = dealer
         plan_s = time.perf_counter() - t0
 
@@ -466,7 +485,7 @@ class SecureKMeans:
             online_seconds=wall,
             offline_dealer_seconds=dealer.dealer_seconds + plan_s,
             offline_modelled_ot_seconds=dealer.modelled_ot_seconds,
-            he_seconds=getattr(ctx, "he_seconds", 0.0),
+            he_seconds=ctx.he_seconds,
             loop_seconds=wall,
             offline_plan_seconds=plan_s,
         )
@@ -489,8 +508,7 @@ class SecureKMeans:
                          backend=ctx.backend)
 
         def flow_he(hx):
-            ctx.he_seconds = getattr(ctx, "he_seconds", 0.0) \
-                + getattr(hx, "he_seconds", 0.0)
+            ctx.add_he_seconds(hx.he_seconds)
 
         def pre():
             view = dealer.acquire(slot0)
@@ -610,6 +628,35 @@ class SecureKMeans:
             ctx.tag = "CSC"
             self._converged(ctx, mu, mu_new, cfg.tol)
         return ctx.dealer.plan(), comm
+
+    def _minibatch_slot_plans(self, shape_a, shape_b):
+        """Canonical minibatch offline layout for party-input shapes — the
+        single source of truth shared by `plan_fit` (bank provisioning) and
+        `_fit_minibatch` (consumption), so a provisioned bank and a live fit
+        can never disagree on slot order. Returns (bounds, per-batch
+        [(s1_plan, s1_comm, s3_plan, s3_comm)], (fin_plan, fin_comm),
+        iter_comm): per iteration the slots run [s1(b0), s3p(b0), s1(b1),
+        ..., finalize]."""
+        cfg = self.cfg
+        na, nb = int(shape_a[0]), int(shape_b[0])
+        if cfg.partition == "vertical":
+            n, d = na, int(shape_a[1]) + int(shape_b[1])
+        else:
+            n, d = na + nb, int(shape_a[1])
+        bounds = _minibatch_bounds(cfg.partition, na, nb, cfg.batch_size)
+        stage_plans = []
+        iter_comm = CommLog()
+        for (alo, ahi), (blo, bhi) in bounds:
+            sa = (ahi - alo, int(shape_a[1]))
+            sb = (bhi - blo, int(shape_b[1]))
+            s1_plan, s1_comm = self._plan_batch_stage(sa, sb, "s1")
+            s3_plan, s3_comm = self._plan_batch_stage(sa, sb, "s3p")
+            stage_plans.append((s1_plan, s1_comm, s3_plan, s3_comm))
+            iter_comm.merge(s1_comm, phase="online")
+            iter_comm.merge(s3_comm, phase="online")
+        fin_plan, fin_comm = self._plan_finalize(d, n)
+        iter_comm.merge(fin_comm, phase="online")
+        return bounds, stage_plans, (fin_plan, fin_comm), iter_comm
 
     # ------------------------------------------------------------------ #
     # Secure scoring: batched predict/score against the secret-shared model
@@ -883,6 +930,35 @@ class SecureKMeans:
         """
         return self._plan_offline_iter(shape_a, shape_b)[0] \
             .repeat(self.cfg.iters)
+
+    def plan_fit(self, shape_a, shape_b) -> tuple:
+        """(bank_key, TriplePlan, CommLog) of a WHOLE fit for party-input
+        shapes — the fit-side counterpart of `plan_predict`. The plan is the
+        exact correlated-randomness schedule `fit` consumes (full-batch:
+        the iteration plan repeated `iters` times; minibatch: the canonical
+        slot-plan sequence, concatenated), Protocol-2 mask seeds included;
+        the key is the fit-plan cache key extended with the loop geometry
+        (iters, batch_size), which `TripleBank.provision` uses as the pool
+        lookup key. Provision a bank under the fit's `cfg.seed`, then call
+        `fit(..., dealer=bank.dealer(key))`: the fit runs with zero
+        generation work and bit-exact shares/counters/CommLog vs the
+        built-in dealers. The returned CommLog carries ONE iteration's
+        online traffic (informational — provisioning needs only the plan)."""
+        cfg = self.cfg
+        key = self._fit_plan_key(shape_a, shape_b)
+        if cfg.batch_size is None:
+            iter_plan, iter_comm = self._plan_offline_iter(shape_a, shape_b)
+            return key, iter_plan.repeat(cfg.iters), iter_comm
+        _bounds, stage_plans, (fin_plan, _fc), iter_comm = \
+            self._minibatch_slot_plans(shape_a, shape_b)
+        iter_reqs = [r for (s1, _c1, s3, _c3) in stage_plans
+                     for r in list(s1.requests) + list(s3.requests)]
+        iter_reqs += list(fin_plan.requests)
+        return key, TriplePlan(iter_reqs * cfg.iters), iter_comm
+
+    def _fit_plan_key(self, shape_a, shape_b) -> tuple:
+        return ("fit", self.cfg.iters, self.cfg.batch_size) \
+            + self._plan_cache_key(shape_a, shape_b)
 
     def _plan_cache_key(self, shape_a, shape_b) -> tuple:
         cfg = self.cfg

@@ -40,12 +40,16 @@ class Ctx:
     log: CommLog
     tag: str = "misc"  # current Lloyd step: S1 / S2 / S3
     backend: RingBackend | str | None = None  # local ring-compute dispatch
+    he_seconds: float = 0.0  # modelled HE wall-time accumulated by Protocol 2
 
     def __post_init__(self):
         self.backend = get_backend(self.backend)
 
     def send(self, nbytes: int, rounds: int = 1) -> None:
         self.log.send(nbytes, tag=self.tag, phase="online", rounds=rounds)
+
+    def add_he_seconds(self, t: float) -> None:
+        self.he_seconds += t
 
     def fork(self, tag: str | None = None) -> "Ctx":
         """Child ctx sharing the dealer and backend but with a SCRATCH log.

@@ -235,6 +235,23 @@ def _gen_class(rng, kind: str, shape, count: int):
     return _GEN[kind](rng, shape, count)
 
 
+def _class_words(key: tuple) -> int:
+    """PCG64 words ONE request of this shape-class draws — the stream
+    advance per request. Must mirror the `_gen_*` draw widths above exactly:
+    it is what lets a worker jump its class stream to an arbitrary request
+    offset with `bit_generator.advance` and land on the same words a single
+    stacked draw would produce there."""
+    kind = key[0]
+    if kind == "matmul":
+        (n, d), (_, k) = key[1], key[2]
+        return 2 * (n * d) + 2 * (d * k) + n * k
+    if kind in ("mul", "bin"):
+        return 5 * _nelem(key[1])
+    if kind == "rand":
+        return _nelem(key[1])
+    return 1  # seed
+
+
 # ---------------------------------------------------------------------------
 # TrustedDealer — on-demand generation (oracle / no-preprocessing baseline)
 # ---------------------------------------------------------------------------
@@ -1095,6 +1112,61 @@ def _key_from_str(s: str) -> tuple:
 _SLOTS = {"matmul": 6, "mul": 6, "bin": 6, "rand": 1, "seed": 1}
 
 
+def _provision_items(counts: dict, workers: int) -> list:
+    """Deterministic split of a bulk-generation request into `(class_key,
+    start, count)` chunks: whole classes, the heavy ones subdivided by word
+    volume so no worker idles behind one giant class. A pure function of
+    `(counts, workers)` — scheduling and completion order cannot influence
+    which words a chunk draws, because each chunk re-derives its stream
+    position from (class stream start, request offset) alone."""
+    total = sum(int(c) * _class_words(k) for k, c in counts.items())
+    target = max(1, -(-total // max(1, int(workers))))
+    items = []
+    for key in sorted(counts):
+        count = int(counts[key])
+        if count <= 0:
+            continue
+        wpr = _class_words(key)
+        nchunks = max(1, min(count, -(-(count * wpr) // target)))
+        base, extra = divmod(count, nchunks)
+        start = 0
+        for i in range(nchunks):
+            cnt = base + (1 if i < extra else 0)
+            items.append((key, start, cnt))
+            start += cnt
+    return items
+
+
+def _gen_provision_item(states: dict, item: tuple) -> tuple:
+    """Generate one chunk from a PRIVATE clone of its class stream, advanced
+    to the chunk's request offset. `ring.rand_np` draws exactly
+    `_class_words(key)` PCG64 words per request, so advance(start*words)
+    lands the clone on the words request `start` of the serial stacked draw
+    would consume — chunked generation concatenates to the serial draw
+    bit-for-bit."""
+    key, start, count = item
+    rng = np.random.default_rng(0)
+    rng.bit_generator.state = states[key]
+    if start:
+        rng.bit_generator.advance(int(start) * _class_words(key))
+    kind = key[0]
+    shape = key[1:] if kind == "matmul" else key[1]
+    arrays = _gen_class(rng, kind, shape, count)
+    stacked = tuple(jnp.asarray(a) for a in arrays)
+    entries = [tuple(a[i] for a in stacked) for i in range(count)]
+    nbytes = sum(int(a.size) * 8 for a in stacked)
+    return entries, nbytes
+
+
+def _run_provision_items(items: list, states: dict, workers: int) -> list:
+    """Run the chunks on a thread pool; results come back in ITEM order
+    regardless of completion order (positional assembly), which together
+    with per-chunk stream derivation makes the whole pass order-oblivious."""
+    from concurrent.futures import ThreadPoolExecutor
+    with ThreadPoolExecutor(max_workers=int(workers)) as ex:
+        return list(ex.map(lambda it: _gen_provision_item(states, it), items))
+
+
 class TripleBank:
     """A persistent correlated-randomness store serving MANY protocol runs
     (fits, predict batches, scoring services) from one provisioning pass.
@@ -1138,28 +1210,51 @@ class TripleBank:
         self.served_requests = 0
 
     # -- provisioning ----------------------------------------------------
-    def _gen(self, counts: dict) -> None:
+    def _gen(self, counts: dict, workers: int = 1) -> None:
         t0 = time.perf_counter()
         for key in counts:
             self._rngs.setdefault(key, _class_rng(self.seed, key))
-        pools, nbytes = _gen_tranche(self._rngs, counts)
-        for key, entries in pools.items():
-            self._queues.setdefault(key, []).extend(entries)
-        self.pool_bytes += nbytes
+        if workers <= 1 or len(counts) == 0:
+            pools, nbytes = _gen_tranche(self._rngs, counts)
+            for key, entries in pools.items():
+                self._queues.setdefault(key, []).extend(entries)
+            self.pool_bytes += nbytes
+        else:
+            items = _provision_items(counts, workers)
+            # snapshot the CURRENT stream positions: chunks are offsets
+            # relative to where the serial draw would start
+            states = {key: self._rngs[key].bit_generator.state
+                      for key in counts}
+            for (key, _start, _cnt), (entries, nbytes) in zip(
+                    items, _run_provision_items(items, states, workers)):
+                self._queues.setdefault(key, []).extend(entries)
+                self.pool_bytes += nbytes
+            # master streams end exactly where one stacked draw would
+            for key, count in counts.items():
+                self._rngs[key].bit_generator.advance(
+                    int(count) * _class_words(key))
         self.gen_seconds += time.perf_counter() - t0
 
-    def provision(self, key, plan: TriplePlan, copies: int = 1) -> None:
+    def provision(self, key, plan: TriplePlan, copies: int = 1,
+                  workers: int = 1) -> None:
         """Register `plan` under the lookup `key` and bulk-generate
         `copies` executions' worth of it into the class queues (one stacked
         draw + one batched ring op per class, like PooledDealer). Calling
         again with the same key re-registers (a changed plan replaces the
-        old one) and tops the stock up."""
+        old one) and tops the stock up.
+
+        `workers > 1` fans the generation out over a thread pool — the bulk
+        of the work is GIL-releasing numpy RNG + einsum — split by
+        shape-class (the per-class PCG64 streams make classes order-
+        independent) and, within a heavy class, by `advance`-offset chunks.
+        The produced words are bit-identical to the serial draw for ANY
+        worker count and completion order (property-tested)."""
         key = tuple(key)
         self._plans[key] = TriplePlan(list(plan.requests))
         if copies > 0:
             counts = {ck: c * int(copies)
                       for ck, c in plan.class_counts().items()}
-            self._gen(counts)
+            self._gen(counts, workers=workers)
             self.modelled_ot_seconds += _account_offline_plan(
                 plan.repeat(copies), self.log)
 
@@ -1294,3 +1389,84 @@ class BankDealer(_TripleServing):
         out = self.bank._pop(_class_key(kind, shape), self.key)
         self.dealer_seconds += self.bank.replenish_seconds - r0
         return out
+
+
+class BankSlotDealer:
+    """SlotDealer-compatible view over a provisioned `TripleBank` for the
+    minibatch fit path: slot tranches for the pipelined executor, PINNED
+    from the bank's class queues eagerly in canonical slot order at
+    construction. The pipelined executor may `acquire` slots ahead of
+    consumption; because the bank's FIFO positions were fixed at PROVISION
+    time and this view drains every slot's words before the loop starts,
+    acquisition order can never perturb a served word — the same contract
+    `SlotDealer` gets from generation order, inherited from the bank.
+
+    Bit-exact with `SlotDealer(slot_plans, seed)` when the bank was
+    provisioned under the same seed with the concatenated slot plans: the
+    bank's one stacked draw per class IS the SlotDealer's canonical-order
+    per-class concatenation (test-enforced)."""
+
+    def __init__(self, bank: TripleBank, key: tuple, slot_plans,
+                 log: CommLog | None = None):
+        t0 = time.perf_counter()
+        self.bank = bank
+        self.key = tuple(key)
+        self.slot_plans = [TriplePlan(list(p.requests)) for p in slot_plans]
+        self.log = log if log is not None else CommLog()
+        self.n_matmul = 0
+        self.n_mul = 0
+        self.n_bin = 0
+        self.gen_seconds = 0.0
+        self.wait_seconds = 0.0
+        # provisioning's modelled OT cost lives on the bank's offline books
+        self.modelled_ot_seconds = 0.0
+        self._counts = [p.class_counts() for p in self.slot_plans]
+        self._totals = [len(p) for p in self.slot_plans]
+        self._served_class: dict[tuple, int] = {}
+        self._acquired: set[int] = set()
+        self._slots: list[tuple] = []
+        self.pool_bytes = 0
+        for plan in self.slot_plans:
+            pools: dict[tuple, list] = {}
+            nbytes = 0
+            for r in plan.requests:
+                ck = _class_key(r.kind, r.shape)
+                out = bank._pop(ck, self.key)
+                pools.setdefault(ck, []).append(out)
+                nbytes += sum(int(np.asarray(a).size) * 8 for a in out)
+            self._slots.append((pools, nbytes))
+            self.pool_bytes += nbytes
+        # the pin (pops + any replenish stall) is offline-side dealer time
+        self.dealer_seconds = time.perf_counter() - t0
+
+    def acquire(self, i: int) -> _SlotView:
+        if not 0 <= i < len(self.slot_plans):
+            raise IndexError(f"slot {i} out of range "
+                             f"({len(self.slot_plans)} slots planned)")
+        if i in self._acquired:
+            raise PoolExhaustedError(
+                f"slot {i} was already acquired: each slot serves its "
+                "plan exactly once")
+        self._acquired.add(i)
+        pools, nbytes = self._slots[i]
+        self._slots[i] = (None, nbytes)          # hand ownership to the view
+        view = _SlotView(self, i, pools, self._counts[i], self._totals[i],
+                         nbytes)
+        if self._totals[i] == 0:                 # empty slot: nothing to serve
+            self._release(i, nbytes)
+        return view
+
+    def _release(self, i: int, nbytes: int) -> None:
+        for key, c in self._counts[i].items():
+            self._served_class[key] = self._served_class.get(key, 0) + c
+
+    def remaining(self) -> dict:
+        total: dict[tuple, int] = {}
+        for counts in self._counts:
+            for key, c in counts.items():
+                total[key] = total.get(key, 0) + c
+        return {key: c - self._served_class.get(key, 0)
+                for key, c in total.items()}
+
+    def close(self) -> None:
+        self._slots = [(None, nb) for _pools, nb in self._slots]

@@ -12,7 +12,11 @@ against the SECRET-SHARED centroids and revealing only scores + outlier
 flags. Reports per-phase latency, rows/s, triples and bytes per request.
 
 `--bank-path` persists the provisioned bank to disk (np.savez) and reloads
-it before serving — the cross-restart serving story.
+it before serving — the cross-restart serving story. `--fit-from-bank`
+provisions the FIT plan into the bank too (plan_fit) and fits from the
+provisioned tranches, so the online fit does zero generation work;
+`--provision-workers N` splits all provisioning across N threads
+(bit-exact with serial — per-class streams).
 """
 from __future__ import annotations
 
@@ -32,6 +36,7 @@ def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
           requests: int = 24, mean_batch: int = 32, frac: float = 0.02,
           provision_copies: int | None = None, bank_path: str | None = None,
           pipeline: bool = True, fit_batch_size: int | None = None,
+          fit_from_bank: bool = False, provision_workers: int = 1,
           seed: int = 0, verbose: bool = True) -> dict:
     ds = FraudDataset.synthesize(n=n_train, d_a=d_a, d_b=d_b,
                                  n_clusters=k, seed=seed)
@@ -39,15 +44,28 @@ def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
                                    sparse=sparse, offline="pooled",
                                    batch_size=fit_batch_size,
                                    pipeline=pipeline))
+    t_provision_fit = 0.0
+    fit_dealer = None
+    if fit_from_bank:
+        # offline: bulk-generate the whole fit's correlated randomness into
+        # a bank keyed by the fit plan; the fit itself then does zero
+        # generation work (bit-exact with the on-the-fly dealers)
+        fit_bank = TripleBank(seed=seed)
+        fkey, fplan, _ = km.plan_fit(ds.x_a.shape, ds.x_b.shape)
+        t0 = time.perf_counter()
+        fit_bank.provision(fkey, fplan, workers=provision_workers)
+        t_provision_fit = time.perf_counter() - t0
+        fit_dealer = fit_bank.dealer(fkey)
     t0 = time.perf_counter()
-    res = km.fit(ds.x_a, ds.x_b)
+    res = km.fit(ds.x_a, ds.x_b, dealer=fit_dealer)
     t_fit = time.perf_counter() - t0
 
     bank = TripleBank(seed=serve_seed(seed))
     svc = ScoringService(km, res, bank=bank, rungs=rungs,
                          with_scores=True, d_a=d_a, d_b=d_b,
                          pipeline=pipeline,
-                         provision_copies=provision_copies or requests)
+                         provision_copies=provision_copies or requests,
+                         provision_workers=provision_workers)
     t0 = time.perf_counter()
     svc.warm()
     if bank_path:
@@ -75,9 +93,16 @@ def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
 
     out = {"fit_s": round(t_fit, 3), "warm_s": round(t_warm, 3),
            "drain_s": round(t_drain, 3), "jaccard_stream": round(j, 3),
-           "bank_loaded_from_disk": bool(bank_path)}
+           "bank_loaded_from_disk": bool(bank_path),
+           "fit_from_bank": bool(fit_from_bank),
+           "provision_fit_s": round(t_provision_fit, 3),
+           "provision_workers": int(provision_workers)}
     out.update(svc.stats.as_dict())
     if verbose:
+        if fit_from_bank:
+            print(f"fit bank provisioned in {t_provision_fit:.2f}s "
+                  f"({provision_workers} worker"
+                  f"{'s' if provision_workers != 1 else ''}) — offline")
         print(f"fit {t_fit:.2f}s ({iters} iters, n={n_train})  "
               f"warm {t_warm:.2f}s (compile + provision "
               f"{'-> ' + bank_path if bank_path else ''})")
@@ -115,6 +140,13 @@ def main() -> None:
     ap.add_argument("--fit-batch-size", type=int, default=None,
                     help="minibatch Lloyd batch rows for the fit "
                          "(default: full batch)")
+    ap.add_argument("--fit-from-bank", action="store_true",
+                    help="pre-provision the fit plan into a TripleBank "
+                         "(offline) and fit from it — zero online "
+                         "generation work")
+    ap.add_argument("--provision-workers", type=int, default=1,
+                    help="thread-pool width for bulk provisioning "
+                         "(bit-exact with serial)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(n_train=args.n_train, d_a=args.d_a, d_b=args.d_b, k=args.k,
@@ -123,7 +155,9 @@ def main() -> None:
           requests=args.requests, mean_batch=args.mean_batch,
           frac=args.frac, bank_path=args.bank_path,
           pipeline=not args.no_pipeline,
-          fit_batch_size=args.fit_batch_size, seed=args.seed)
+          fit_batch_size=args.fit_batch_size,
+          fit_from_bank=args.fit_from_bank,
+          provision_workers=args.provision_workers, seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -107,7 +107,9 @@ class ScoringService:
     centroids. `warm()` — called lazily on first drain — compiles every
     rung's `predict_program` and provisions `provision_copies` launches of
     correlated randomness per rung into the bank; both are pure offline
-    work.
+    work. `provision_workers > 1` splits each provisioning across a thread
+    pool by shape-class — bit-exact with serial provisioning because every
+    class draws from its own seeded stream (core/triples.py).
 
     `rungs` configures the pad ladder (alias: `ladder`, which also accepts
     a built `BatchLadder`); rungs must be strictly increasing positive
@@ -120,6 +122,7 @@ class ScoringService:
                  result: KMeansResult | None = None, *,
                  bank: TripleBank | None = None, ladder=None, rungs=None,
                  with_scores: bool = True, provision_copies: int = 4,
+                 provision_workers: int = 1,
                  d_a: int | None = None, d_b: int | None = None,
                  pipeline: bool = True):
         self.model = model
@@ -138,6 +141,7 @@ class ScoringService:
         self.with_scores = with_scores
         self.pipeline = bool(pipeline)
         self.provision_copies = int(provision_copies)
+        self.provision_workers = int(provision_workers)
         d = int(self.result.centroids.shape[1])
         if model.cfg.partition == "vertical":
             if d_a is None or d_b is None:
@@ -170,7 +174,8 @@ class ScoringService:
             sa, sb = self._rung_shapes(r)
             key, plan, _ = self.model.plan_predict(sa, sb, self.with_scores)
             if key not in self.bank.keys():
-                self.bank.provision(key, plan, copies=self.provision_copies)
+                self.bank.provision(key, plan, copies=self.provision_copies,
+                                    workers=self.provision_workers)
             if cfg.vectorized and cfg.f == ring.F \
                     and self.model._traceable_backend():
                 K.predict_program(cfg.partition, cfg.sparse, sa, sb, cfg.k,
@@ -293,7 +298,8 @@ class ScoringService:
                                                self.with_scores)
         if key not in self.bank.keys():
             # a rung the warmup never saw (e.g. ladder edited live)
-            self.bank.provision(key, plan, copies=self.provision_copies)
+            self.bank.provision(key, plan, copies=self.provision_copies,
+                                workers=self.provision_workers)
         dealer = self.bank.dealer(key)
         if self._compiled():
             prep = self.model.predict_prepare(pa, pb, self.result,

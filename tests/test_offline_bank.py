@@ -1,0 +1,323 @@
+"""Offline cold-start subsystem tests (fit-plan bank, batched HE exchange,
+parallel provisioning).
+
+Load-bearing properties: (1) a `TripleBank` provisioned under a
+`plan_fit` key serves `fit(dealer=...)` bit-exactly vs the pooled and
+on-demand dealers — shares, dealer counters, AND online traffic — on all
+four partition x sparsity combos, for full-batch and minibatch fits, and
+survives an np.savez round-trip; (2) parallel provisioning (any worker
+count, any chunk completion order) is word-for-word identical to serial
+provisioning, including the master streams' final positions — the
+per-class PCG64 `advance` contract; (3) the column-batched HE joint-product
+exchange is share-for-share identical to the legacy per-ciphertext loop on
+a real Paillier key, and its measured operation counts match the closed
+form `he2ss_op_counts` that prices the simulated backend."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import protocol as P
+from repro.core import ring
+from repro.core.he import KAPPA_STAT, OU_COST_S, Paillier, SimulatedPHE
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+from repro.core.sparse import (CSRMatrix, default_value_bits,
+                               he2ss_layout, he2ss_op_counts,
+                               secure_sparse_matmul)
+from repro.core.triples import (PlanningDealer, TripleBank, _class_rng,
+                                _class_words, _gen_class,
+                                _gen_provision_item, _provision_items)
+
+COMBOS = [("vertical", False), ("vertical", True),
+          ("horizontal", False), ("horizontal", True)]
+
+
+def _fit_data(partition, seed=0, sparse=False):
+    rng = np.random.default_rng(seed)
+    def blob(n, d):
+        x = rng.uniform(-2, 2, (n, d))
+        if sparse:
+            x *= rng.random((n, d)) > 0.6
+        return x
+    if partition == "vertical":
+        return blob(48, 5), blob(48, 4)
+    return blob(30, 6), blob(18, 6)
+
+
+def _shares(r):
+    return (np.asarray(r.centroids.s0), np.asarray(r.centroids.s1),
+            np.asarray(r.assignment.s0), np.asarray(r.assignment.s1))
+
+
+def _counters(r):
+    return (r.dealer.n_matmul, r.dealer.n_mul, r.dealer.n_bin)
+
+
+# ---------------------------------------------------------------------------
+# (1) fit-plan bank: provision once, fit bit-exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("partition,sparse", COMBOS)
+def test_fit_bank_full_batch_bit_exact(partition, sparse):
+    xa, xb = _fit_data(partition, seed=1, sparse=sparse)
+    kw = dict(k=3, iters=2, seed=3, partition=partition, sparse=sparse)
+    r_od = SecureKMeans(KMeansConfig(offline="on_demand", **kw)).fit(xa, xb)
+    r_pool = SecureKMeans(KMeansConfig(offline="pooled", **kw)).fit(xa, xb)
+
+    km = SecureKMeans(KMeansConfig(offline="pooled", **kw))
+    key, plan, comm = km.plan_fit(xa.shape, xb.shape)
+    bank = TripleBank(seed=3)
+    bank.provision(key, plan, workers=2)
+    r_bank = km.fit(xa, xb, dealer=bank.dealer(key))
+
+    for ref in (r_od, r_pool):
+        for a, b in zip(_shares(ref), _shares(r_bank)):
+            np.testing.assert_array_equal(a, b)
+    assert _counters(r_bank) == _counters(r_pool)
+    assert r_bank.log.total_bytes("online") == r_pool.log.total_bytes("online")
+    assert r_bank.log.total_rounds("online") \
+        == r_pool.log.total_rounds("online")
+    # the whole fit plan was consumed — zero leftover generation work
+    assert bank.served_requests == len(plan)
+
+
+@pytest.mark.parametrize("sparse", [False, True])
+def test_fit_bank_minibatch_and_disk_roundtrip(sparse):
+    """Minibatch fit from a provisioned bank == SlotDealer fit, the bank
+    survives save/load at the SAME stream position (bit-exact fit), and a
+    second fit from copy 2 agrees live vs reloaded and reconstructs the
+    same centroids (different shares by design — later stream words)."""
+    xa, xb = _fit_data("vertical", seed=2, sparse=sparse)
+    kw = dict(k=3, iters=2, seed=3, sparse=sparse, batch_size=20,
+              offline="pooled", pipeline=True)
+    r_slot = SecureKMeans(KMeansConfig(**kw)).fit(xa, xb)
+    s_slot = _shares(r_slot)
+
+    km = SecureKMeans(KMeansConfig(**kw))
+    key, plan, _ = km.plan_fit(xa.shape, xb.shape)
+    bank = TripleBank(seed=3)
+    bank.provision(key, plan, copies=2, workers=3)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "bank.npz")
+        bank.save(path)          # snapshot BEFORE any serving
+        r_bank = km.fit(xa, xb, dealer=bank.dealer(key))
+        bank2 = TripleBank.load(path)
+        r_re = SecureKMeans(KMeansConfig(**kw)).fit(
+            xa, xb, dealer=bank2.dealer(key))
+        # copy 2: live bank and reloaded bank have both served one fit and
+        # must agree on the next one (stream-continuity through the disk)
+        r2_live = SecureKMeans(KMeansConfig(**kw)).fit(
+            xa, xb, dealer=bank.dealer(key))
+        r2_re = SecureKMeans(KMeansConfig(**kw)).fit(
+            xa, xb, dealer=bank2.dealer(key))
+    for a, b in zip(s_slot, _shares(r_bank)):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(s_slot, _shares(r_re)):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(_shares(r2_live), _shares(r2_re)):
+        np.testing.assert_array_equal(a, b)
+    # copy-2 shares differ (later words) but reconstruct the same centroids
+    # up to truncation-LSB noise
+    c1 = s_slot[0] + s_slot[1]
+    c2 = _shares(r2_live)[0] + _shares(r2_live)[1]
+    assert np.abs((c1 - c2).astype(np.int64)).max() <= 2
+    assert _counters(r_bank) == _counters(r_slot)
+    assert r_bank.log.total_bytes("online") == r_slot.log.total_bytes("online")
+
+
+def test_fit_bank_rejects_non_bank_dealer_for_minibatch():
+    xa, xb = _fit_data("vertical", seed=4)
+    km = SecureKMeans(KMeansConfig(k=3, iters=1, seed=0, batch_size=20,
+                                   offline="pooled"))
+    with pytest.raises(ValueError, match="TripleBank dealer"):
+        km.fit(xa, xb, dealer=PlanningDealer())
+
+
+# ---------------------------------------------------------------------------
+# (2) parallel provisioning == serial provisioning
+# ---------------------------------------------------------------------------
+
+def _provision_plan(km, xa, xb):
+    key, plan, _ = km.plan_fit(xa.shape, xb.shape)
+    return key, plan
+
+
+def _queue_words(bank):
+    return {k: [tuple(np.asarray(a) for a in e) for e in q]
+            for k, q in bank._queues.items()}
+
+
+def _rng_states(bank):
+    return {k: repr(r.bit_generator.state) for k, r in bank._rngs.items()}
+
+
+@pytest.mark.parametrize("workers", [2, 3, 8])
+def test_parallel_provisioning_bit_exact(workers):
+    xa, xb = _fit_data("vertical", seed=5, sparse=True)
+    km = SecureKMeans(KMeansConfig(k=3, iters=2, seed=7, sparse=True,
+                                   offline="pooled"))
+    key, plan = _provision_plan(km, xa, xb)
+    serial = TripleBank(seed=11)
+    serial.provision(key, plan, copies=2)
+    par = TripleBank(seed=11)
+    par.provision(key, plan, copies=2, workers=workers)
+    qs, qp = _queue_words(serial), _queue_words(par)
+    assert qs.keys() == qp.keys()
+    for ck in qs:
+        assert len(qs[ck]) == len(qp[ck])
+        for es, ep in zip(qs[ck], qp[ck]):
+            for a, b in zip(es, ep):
+                np.testing.assert_array_equal(a, b)
+    # master streams end at the same position -> future replenishment and
+    # incremental provisioning stay identical too
+    assert _rng_states(serial) == _rng_states(par)
+
+
+def test_parallel_provisioning_completion_order_oblivious():
+    """Chunks generated in REVERSE order assemble to the same words —
+    each chunk derives its stream position from (class origin, offset)
+    alone, so scheduling cannot matter."""
+    xa, xb = _fit_data("vertical", seed=6)
+    km = SecureKMeans(KMeansConfig(k=3, iters=1, seed=13, offline="pooled"))
+    key, plan = _provision_plan(km, xa, xb)
+    counts = plan.class_counts()
+    states = {ck: _class_rng(13, ck).bit_generator.state for ck in counts}
+    items = _provision_items(counts, workers=4)
+    fwd = [_gen_provision_item(states, it) for it in items]
+    rev = [_gen_provision_item(states, it) for it in reversed(items)][::-1]
+    for (ef, _), (er, _) in zip(fwd, rev):
+        for tf, tr in zip(ef, er):
+            for a, b in zip(tf, tr):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the split covers every request exactly once, in order, per class
+    covered = {}
+    for ck, start, cnt in items:
+        assert start == covered.get(ck, 0)
+        covered[ck] = start + cnt
+    assert covered == {ck: int(c) for ck, c in counts.items() if c > 0}
+
+
+@pytest.mark.parametrize("key", [
+    ("matmul", (7, 3), (3, 2)), ("mul", (5, 4)), ("bin", (2, 6)),
+    ("rand", (8,)), ("seed", ())])
+def test_class_words_matches_draw_width(key):
+    """`advance(count * _class_words)` must land exactly where `count`
+    generated requests leave the stream — the whole basis of chunked
+    parallel generation."""
+    a = _class_rng(3, key)
+    b = _class_rng(3, key)
+    kind = key[0]
+    shape = key[1:] if kind == "matmul" else key[1]
+    _gen_class(a, kind, shape, 5)
+    b.bit_generator.advance(5 * _class_words(key))
+    assert a.bit_generator.state["state"] == b.bit_generator.state["state"]
+
+
+# ---------------------------------------------------------------------------
+# (3) batched HE exchange == legacy loop (real Paillier) + op accounting
+# ---------------------------------------------------------------------------
+
+def _matmul_inputs(seed, n=5, d=7, k=3, density=0.5):
+    rng = np.random.default_rng(seed)
+    xr = rng.uniform(-2, 2, (n, d)) * (rng.random((n, d)) > 1 - density)
+    x = CSRMatrix.from_dense_real(xr)
+    yb = rng.integers(0, 1 << 63, (d, k)).astype(np.uint64)
+    return x, yb
+
+
+def test_batched_he_exchange_matches_legacy_paillier():
+    """Same dealer seed => same masks => the column-batched path must be
+    share-for-share identical to the per-ciphertext loop, not just equal
+    after reconstruction."""
+    x, yb = _matmul_inputs(21)
+    he = Paillier(512)
+    zb = secure_sparse_matmul(P.make_ctx(5), x, yb, he, batched=True)
+    zl = secure_sparse_matmul(P.make_ctx(5), x, yb, he, batched=False)
+    np.testing.assert_array_equal(np.asarray(zb.s0), np.asarray(zl.s0))
+    np.testing.assert_array_equal(np.asarray(zb.s1), np.asarray(zl.s1))
+    want = np.asarray(x.to_dense(), np.uint64) @ yb
+    np.testing.assert_array_equal(
+        np.asarray(zb.s0) + np.asarray(zb.s1), want)
+
+
+def test_batched_he_exchange_empty_rows_and_empty_matrix():
+    he = Paillier(512)
+    # rows with no nonzeros still get correct (zero-product) shares
+    xr = np.zeros((4, 3))
+    xr[1, 2] = 1.5
+    x = CSRMatrix.from_dense_real(xr)
+    yb = np.arange(1, 13, dtype=np.uint64).reshape(3, 4)
+    z = secure_sparse_matmul(P.make_ctx(1), x, yb, he)
+    want = np.asarray(x.to_dense(), np.uint64) @ yb
+    np.testing.assert_array_equal(np.asarray(z.s0) + np.asarray(z.s1), want)
+    # fully-empty matrix: no ciphertexts at all, still well-formed shares
+    empty = CSRMatrix.from_dense_real(np.zeros((3, 2)))
+    z0 = secure_sparse_matmul(P.make_ctx(2), empty, yb[:2], he)
+    np.testing.assert_array_equal(
+        np.asarray(z0.s0) + np.asarray(z0.s1), np.zeros((3, 4), np.uint64))
+
+
+def test_measured_op_counts_match_closed_form():
+    """The counters the real path measures are exactly the closed form the
+    simulated backend prices — so `he_s` comparisons across backends mean
+    the same thing."""
+    x, yb = _matmul_inputs(22, n=6, d=5, k=4, density=0.4)
+    he = Paillier(512)
+    secure_sparse_matmul(P.make_ctx(9), x, yb, he)
+    got = dict(secure_sparse_matmul.last_op_counts)
+    n, d = x.shape
+    lay = he2ss_layout(yb.shape[1], he.plain_bits, default_value_bits(d))
+    nrows_ne = sum(1 for i in range(n) if x.indptr[i + 1] > x.indptr[i])
+    want = he2ss_op_counts(n, d, x.nnz, nrows_ne, lay)
+    assert got == want
+
+
+def test_batched_op_counts_beat_legacy():
+    """>= 3x fewer modelled HE seconds than the per-ciphertext loop on the
+    paper's sparse geometry (the offline cold-start claim)."""
+    n, d, k, density = 256, 64, 8, 0.05
+    rng = np.random.default_rng(23)
+    nnz = int(n * d * density)
+    nrows_ne = n
+    he = SimulatedPHE()
+    lay = he2ss_layout(k, he.plain_bits, default_value_bits(d))
+    ops = he2ss_op_counts(n, d, nnz, nrows_ne, lay)
+    batched_s = sum(ops[o] * OU_COST_S[o] for o in OU_COST_S)
+    # legacy loop: d*k encrypts forward, nnz*k pmuls, (nnz-rows)*k adds,
+    # n*k mask encrypts (the `ct + int` re-randomization) + n*k adds and
+    # decrypts on the return leg
+    legacy_s = ((d * k + n * k) * OU_COST_S["enc"]
+                + nnz * k * OU_COST_S["pmul"]
+                + ((nnz - nrows_ne) * k + n * k) * OU_COST_S["add"]
+                + n * k * OU_COST_S["dec"])
+    assert legacy_s / batched_s >= 3.0
+
+
+def test_sim_fast_path_prices_packed_ops_and_accumulates_he_seconds():
+    x, yb = _matmul_inputs(24)
+    he = SimulatedPHE()
+    ctx = P.make_ctx(3)
+    assert ctx.he_seconds == 0.0
+    secure_sparse_matmul(P.make_ctx(3), x, yb, he)
+    packed = dict(secure_sparse_matmul.last_op_counts)
+    ctx2 = P.make_ctx(3)
+    secure_sparse_matmul(ctx2, x, yb, he, time_model=OU_COST_S)
+    want_s = sum(packed[o] * OU_COST_S[o] for o in OU_COST_S)
+    assert ctx2.he_seconds == pytest.approx(want_s)
+    # Ctx aggregation helper
+    ctx2.add_he_seconds(1.0)
+    assert ctx2.he_seconds == pytest.approx(want_s + 1.0)
+
+
+def test_he2ss_layout_slot_capacity():
+    """Packing must stay sound: per-slot payloads fit slot_bits with the
+    statistical mask, and a full wire ciphertext stays inside plain_bits."""
+    for d in (2, 64, 4096):
+        for k in (2, 8, 100):
+            lay = he2ss_layout(k, SimulatedPHE().plain_bits,
+                               default_value_bits(d))
+            assert lay.slot_bits >= lay.value_bits + KAPPA_STAT + 2
+            assert lay.g * lay.rpc * lay.slot_bits <= SimulatedPHE().plain_bits
+            assert lay.g >= 1 and lay.rpc >= 1
+            assert lay.ngrp == -(-k // lay.g)
