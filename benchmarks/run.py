@@ -24,7 +24,7 @@ def main() -> None:
     from benchmarks import (fig2_online_offline, fig3_vectorization,
                             fig4_sparse, kernel_bench, offline_bench,
                             online_offline, pipeline_bench, q5_fraud,
-                            serve_bench, table1_2)
+                            serve_bench, table1_2, wire_bench)
 
     suites = {
         "table1_2_runtime_comm": lambda: table1_2.run(quick=args.quick),
@@ -55,6 +55,11 @@ def main() -> None:
         # accounting + real-Paillier wall, and provisioning worker scaling,
         # persisted to benchmarks/BENCH_offline.json
         "offline": lambda: offline_bench.run(quick=args.quick),
+        # `--only wire --quick` is the transport smoke: the same fit over
+        # loopback frames, a real TCP socket, and emulated LAN/WAN latency
+        # (bit-exact asserted), measured wall next to the NetModel
+        # prediction, persisted to benchmarks/BENCH_wire.json
+        "wire": lambda: wire_bench.run(quick=args.quick),
     }
     derived_fns = {
         "table1_2_runtime_comm": table1_2.derived,
@@ -67,6 +72,7 @@ def main() -> None:
         "serve": serve_bench.derived,
         "pipeline": pipeline_bench.derived,
         "offline": offline_bench.derived,
+        "wire": wire_bench.derived,
     }
     if args.only:
         keep = set(args.only.split(","))

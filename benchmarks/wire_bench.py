@@ -1,0 +1,131 @@
+"""Wire suite: the fit's network cost, measured instead of modelled.
+
+Rows compare one fit workload across transports:
+
+* **in_process** — no wire; the CommLog models the traffic (baseline).
+* **loopback** — every online byte/round ships as real frames through
+  `LoopbackTransport` + `ReliableChannel` (protocol overhead, no network).
+* **socket** — the same frames over a real TCP connection (kernel stack),
+  responder on a thread.
+* **lan / wan** — loopback wrapped in `FaultyTransport.emulate(NetModel)`
+  on BOTH endpoints: each frame pays rtt/2 + bytes/bandwidth, so the
+  measured wall sits next to `NetModel`'s closed-form `time_estimate` —
+  the paper's Table 1/2 network model, validated against an actual wire.
+
+Every wired fit is asserted bit-exact (shares + online tallies) against
+the in-process run before its timing is reported. Writes
+benchmarks/BENCH_wire.json. --quick shrinks the workload and scales WAN
+RTT down 10x (wired as `python -m benchmarks.run --only wire --quick`).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import make_blobs
+from repro.core.channel import (LAN, WAN, FaultyTransport,
+                                LoopbackTransport, NetModel,
+                                ReliableChannel, SocketTransport,
+                                WireSession, serve_peer)
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "BENCH_wire.json")
+
+
+def _assert_bit_exact(r0, r1):
+    np.testing.assert_array_equal(np.asarray(r0.centroids.s0, np.uint64),
+                                  np.asarray(r1.centroids.s0, np.uint64))
+    np.testing.assert_array_equal(np.asarray(r0.assignment.s1, np.uint64),
+                                  np.asarray(r1.assignment.s1, np.uint64))
+    assert r0.log.by_tag("online") == r1.log.by_tag("online")
+
+
+def _loopback_session(net=None, **chan_kw):
+    ta, tb = LoopbackTransport.pair()
+    ea = FaultyTransport.emulate(ta, net) if net is not None else ta
+    eb = FaultyTransport.emulate(tb, net) if net is not None else tb
+    th = threading.Thread(target=serve_peer, args=(eb,),
+                          kwargs={"idle_timeout_s": 600.0}, daemon=True)
+    th.start()
+    return WireSession(ReliableChannel(ea, **chan_kw)), th
+
+
+def _socket_session(**chan_kw):
+    srv = SocketTransport("listen", port=0, io_timeout_s=600.0)
+    cli = SocketTransport("connect", port=srv.port, io_timeout_s=600.0)
+    th = threading.Thread(target=serve_peer, args=(srv,),
+                          kwargs={"idle_timeout_s": 600.0}, daemon=True)
+    th.start()
+    return WireSession(ReliableChannel(cli, **chan_kw)), th
+
+
+def run(quick: bool = False) -> list:
+    n, d, k, iters = (256, 8, 3, 2) if quick else (1024, 16, 4, 3)
+    # --quick keeps CI under a minute: scale the WAN RTT down 10x (the
+    # model row is scaled identically, so the comparison stays honest)
+    wan = NetModel("WAN/10", WAN.bandwidth_bps, WAN.rtt_s / 10) if quick \
+        else WAN
+    x = make_blobs(n, d, k, seed=4)
+    a, b = x[:, :d // 2], x[:, d // 2:]
+    cfg = KMeansConfig(k=k, iters=iters, seed=3, offline="pooled",
+                       backend="xla")
+    SecureKMeans(cfg).fit(a, b)                      # compile warmup
+    t0 = time.perf_counter()
+    ref = SecureKMeans(cfg).fit(a, b)
+    base_wall = time.perf_counter() - t0
+    rows = [{"transport": "in_process", "fit_s": round(base_wall, 4),
+             "model_s": 0.0,
+             "online_bytes": ref.log.total_bytes("online"),
+             "online_rounds": ref.log.total_rounds("online")}]
+
+    chan_kw = dict(deadline_s=600.0, try_timeout_s=30.0)
+    cases = [("loopback", lambda: _loopback_session(**chan_kw), None),
+             ("socket", lambda: _socket_session(**chan_kw), None),
+             ("lan_emulated", lambda: _loopback_session(LAN, **chan_kw),
+              LAN),
+             ("wan_emulated", lambda: _loopback_session(wan, **chan_kw),
+              wan)]
+    for name, mk, net in cases:
+        ws, th = mk()
+        t0 = time.perf_counter()
+        r = SecureKMeans(cfg).fit(a, b, wire=ws)
+        wall = time.perf_counter() - t0
+        ws.bye()
+        th.join(timeout=60)
+        _assert_bit_exact(ref, r)
+        # the NetModel's closed-form prediction of the NETWORK's share of
+        # the wall (compute excluded) — the number the paper tables use
+        model = 0.0 if net is None \
+            else ref.log.time_estimate(net, "online")
+        rows.append({"transport": name, "fit_s": round(wall, 4),
+                     "model_s": round(model, 4),
+                     "model_plus_compute_s": round(model + base_wall, 4),
+                     "online_bytes": r.log.total_bytes("online"),
+                     "online_rounds": r.log.total_rounds("online"),
+                     "wire_payload_bytes": ws.payload_bytes,
+                     "wire_rounds": ws.rounds})
+    for row in rows:
+        row.update(n=n, d=d, k=k, iters=iters, quick=bool(quick))
+    with open(BENCH_PATH, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def derived(rows) -> str:
+    by = {r["transport"]: r for r in rows}
+    wan_row = by.get("wan_emulated")
+    if not wan_row:
+        return ""
+    ratio = wan_row["fit_s"] / max(wan_row["model_plus_compute_s"], 1e-9)
+    return (f"wan_wall={wan_row['fit_s']}s "
+            f"model+compute={wan_row['model_plus_compute_s']}s "
+            f"ratio={ratio:.2f}")
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(r)

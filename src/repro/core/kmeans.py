@@ -198,7 +198,8 @@ class SecureKMeans:
 
     # ------------------------------------------------------------------ #
     def fit(self, x_a: np.ndarray, x_b: np.ndarray, *,
-            dealer=None) -> KMeansResult:
+            dealer=None, wire=None, checkpoint=None,
+            resume: bool = False) -> KMeansResult:
         """Jointly cluster the two parties' data. `dealer` (optional)
         supplies the fit's correlated randomness from an EXTERNAL provider —
         pass a `TripleBank.dealer(key)` view over a bank provisioned with
@@ -206,10 +207,23 @@ class SecureKMeans:
         work. The bank must share the fit's seed (`cfg.seed`): per-class
         streams then make the served words — and hence every share and
         CommLog tally — bit-identical to the built-in dealers
-        (test-enforced on all partition x sparsity combos)."""
+        (test-enforced on all partition x sparsity combos).
+
+        `wire` (optional `channel.WireSession`): attach a real two-party
+        transport — every online CommLog event then SHIPS its byte count as
+        sequenced frames to the peer process and pays its round-trips
+        before tallying (core/channel.py). The in-process joint simulation
+        is unchanged, so a wired fit is bit-exact with an unwired one.
+
+        `checkpoint` (optional `checkpoint.fit.FitCheckpointer`): save a
+        resumable `FitState` at the configured iteration/batch cadence.
+        `resume=True` restores the latest checkpoint (fingerprint-checked
+        against this cfg + data shapes) and continues — finishing with
+        shares, dealer counters, and CommLog tallies bit-identical to an
+        uninterrupted run (test-enforced; DESIGN.md §13)."""
         cfg = self.cfg
         rng = np.random.default_rng(cfg.seed)
-        ctx = P.make_ctx(cfg.seed, backend=cfg.backend)
+        ctx = P.make_ctx(cfg.seed, backend=cfg.backend, wire=wire)
         ctx.vectorized = cfg.vectorized
         x_a = np.asarray(x_a, np.float64)
         x_b = np.asarray(x_b, np.float64)
@@ -224,14 +238,42 @@ class SecureKMeans:
         csr_a = CSRMatrix.from_dense(enc_a) if cfg.sparse else None
         csr_b = CSRMatrix.from_dense(enc_b) if cfg.sparse else None
 
-        mu = self._init_centroids(ctx, rng, x_a, x_b)
+        st = None
+        if checkpoint is not None:
+            # bind the store to this (cfg, shapes) run; a foreign
+            # checkpoint then fails the fingerprint check at load
+            fp = self._fit_fingerprint(x_a.shape, x_b.shape)
+            checkpoint.fingerprint = checkpoint.fingerprint or fp
+        if resume:
+            if checkpoint is None:
+                raise ValueError(
+                    "fit(resume=True) needs checkpoint=FitCheckpointer(...)"
+                    " to restore from")
+            st = checkpoint.latest()
+        if st is not None:
+            if st.iteration >= cfg.iters:
+                raise ValueError(
+                    f"checkpoint is at iteration {st.iteration} of a "
+                    f"{cfg.iters}-iteration fit: nothing left to resume")
+            # the checkpointed mu shares + restored tallies REPLACE init:
+            # the init exchange already happened (and was tallied) in the
+            # interrupted run
+            mu = AShare(jnp.asarray(st.mu0), jnp.asarray(st.mu1))
+            ctx.log.restore(st.comm)
+        else:
+            mu = self._init_centroids(ctx, rng, x_a, x_b)
 
         if cfg.batch_size is not None:
             # minibatch Lloyd: batched S1/S3-partial launches with secret-
             # shared running-sum accumulators and (optionally) pipelined
             # host exchanges — its own loop below
             return self._fit_minibatch(ctx, enc_a, enc_b, csr_a, csr_b,
-                                       mu, n, d, ext_dealer=dealer)
+                                       mu, n, d, ext_dealer=dealer,
+                                       checkpoint=checkpoint, st=st)
+        if st is not None and st.batch:
+            raise ValueError(
+                "a mid-iteration (batch > 0) checkpoint can only resume a "
+                "minibatch fit; this config has batch_size=None")
 
         # pooled/streamed offline phase: trace the schedule (cached across
         # same-shape fits), bulk-generate the pools, upload once, and AOT-
@@ -240,6 +282,22 @@ class SecureKMeans:
         # independent work; the loop below then runs dealer-free, with the
         # sparse combos' Protocol-2 exchanges as host callbacks between the
         # two launches.
+        it0 = st.iteration if st is not None else 0
+        ckpt = checkpoint
+        iter_counts = None
+        if ckpt is not None or it0:
+            # the advance map (per-class requests one iteration consumes) is
+            # recomputed from the plan — the checkpoint stores a copy purely
+            # as an integrity cross-check (DESIGN.md §13)
+            iter_counts = self._plan_offline_iter(
+                x_a.shape, x_b.shape)[0].class_counts()
+        if it0:
+            adv = {k: c * it0 for k, c in iter_counts.items()}
+            if st.advance and st.advance != adv:
+                raise ValueError(
+                    "checkpoint dealer-stream positions disagree with the "
+                    "plan-derived positions — the checkpoint belongs to a "
+                    "different offline schedule")
         plan_s = 0.0
         fast = None
         if dealer is not None or cfg.offline in ("pooled", "streamed"):
@@ -265,26 +323,46 @@ class SecureKMeans:
                         jnp.asarray(enc_a), jnp.asarray(enc_b),
                         csr_at, csr_bt)
             plan_s = time.perf_counter() - t0
+            # resume: the restored comm snapshot already carries the FULL
+            # fit's offline tallies (dealers account their whole plan at
+            # construction), so a resumed dealer books offline to a scratch
+            # log; its class streams start advanced past it0 iterations
+            adv = {k: c * it0 for k, c in iter_counts.items()} if it0 else {}
+            dlog = CommLog() if it0 else ctx.log
             if dealer is not None:
                 # external provider (e.g. a provisioned TripleBank view):
                 # its generation cost lives on the bank's offline books —
                 # this fit pays only the (cached) plan + any stock-out stall
+                if it0:
+                    dealer.skip(iter_plan, it0)
                 ctx.dealer = dealer
             elif cfg.offline == "pooled":
-                ctx.dealer = PooledDealer(iter_plan.repeat(cfg.iters),
-                                          seed=cfg.seed, log=ctx.log)
+                ctx.dealer = PooledDealer(
+                    iter_plan.repeat(cfg.iters - it0),
+                    seed=cfg.seed, log=dlog, advance=adv)
             else:
                 # group="auto": tiny k*d tranches share one background-
                 # worker wakeup (bit-exact either way)
-                ctx.dealer = StreamingPooledDealer(iter_plan, cfg.iters,
-                                                   seed=cfg.seed,
-                                                   log=ctx.log, group="auto")
+                ctx.dealer = StreamingPooledDealer(
+                    iter_plan, cfg.iters - it0, seed=cfg.seed,
+                    log=dlog, group="auto", advance=adv)
+        elif it0:
+            # on-demand resume: a fresh TrustedDealer on the live log (its
+            # remaining offline tallies accrue ON TOP of the restored
+            # snapshot, like the original loop's would have), streams
+            # pre-advanced
+            ctx.dealer = TrustedDealer(
+                seed=cfg.seed, log=ctx.log,
+                advance={k: c * it0 for k, c in iter_counts.items()})
+        if st is not None:
+            for attr in ("n_matmul", "n_mul", "n_bin"):
+                setattr(ctx.dealer, attr, st.counters[attr])
 
         t_start = time.perf_counter()
         dealer_s_pre = ctx.dealer.dealer_seconds
-        it = 0
+        it = it0
         try:
-            for it in range(1, cfg.iters + 1):
+            for it in range(it0 + 1, cfg.iters + 1):
                 mu_old = mu
                 if fast is not None:
                     # TWO launches per iteration (S1: distances+argmin, S3:
@@ -339,6 +417,12 @@ class SecureKMeans:
                     ctx.tag = "CSC"
                     if self._converged(ctx, mu_old, mu, cfg.tol):
                         break
+                if ckpt is not None and ckpt.want_iter(it, cfg.iters):
+                    # iteration boundary: the live log is canonical (all of
+                    # iterations 1..it merged, nothing ahead)
+                    self._save_fit_ckpt(
+                        ckpt, ctx, it, 0, mu,
+                        {k: c * it for k, c in iter_counts.items()})
             jnp.asarray(mu.s0).block_until_ready()
             wall = time.perf_counter() - t_start
         finally:
@@ -366,7 +450,8 @@ class SecureKMeans:
     # Minibatch Lloyd — batched S1/S3-partial launches, pipelined exchanges
     # ------------------------------------------------------------------ #
     def _fit_minibatch(self, ctx, enc_a, enc_b, csr_a, csr_b, mu: AShare,
-                       n: int, d: int, ext_dealer=None) -> KMeansResult:
+                       n: int, d: int, ext_dealer=None, checkpoint=None,
+                       st=None) -> KMeansResult:
         """Each iteration is one full pass over the data in
         ceil(n / batch_size)-row batches: per batch an S1 launch (distances
         + argmin on the CURRENT centroids) and an S3-partial launch whose
@@ -424,6 +509,36 @@ class SecureKMeans:
             iter_slots += [b["s1_plan"], b["s3_plan"]]
         iter_slots.append(fin_plan)
         spi = len(iter_slots)                    # slots per iteration
+        ckpt = checkpoint
+        if ckpt is not None and ckpt.batch_every is not None and cfg.pipeline:
+            raise ValueError(
+                "batch-granular checkpoints (batch_every) require "
+                "pipeline=False: the pipelined executor merges batch t+1's "
+                "traffic before batch t accumulates, so mid-iteration the "
+                "live CommLog is not the canonical prefix a resume restores "
+                "(iteration-boundary checkpoints work on both executors)")
+        it0 = st.iteration if st is not None else 0
+        b0 = st.batch if st is not None else 0
+        start_slot = it0 * spi + 2 * b0
+        slot_counts = [p.class_counts() for p in iter_slots]
+
+        def slots_advance(n_slots: int) -> dict:
+            adv: dict = {}
+            for s in range(n_slots):
+                for ck, c in slot_counts[s % spi].items():
+                    adv[ck] = adv.get(ck, 0) + c
+            return adv
+
+        if st is not None and st.advance \
+                and st.advance != slots_advance(start_slot):
+            raise ValueError(
+                "checkpoint dealer-stream positions disagree with the "
+                "plan-derived slot positions — the checkpoint belongs to a "
+                "different offline schedule")
+        # resume: offline tallies for the WHOLE schedule were booked at the
+        # original dealer's construction and live in the restored snapshot —
+        # a resumed dealer books its (remaining-slot) accounting to scratch
+        dlog = CommLog() if start_slot else ctx.log
         if ext_dealer is not None:
             bank = getattr(ext_dealer, "bank", None)
             if bank is None:
@@ -432,28 +547,58 @@ class SecureKMeans:
                     "view (bank.dealer(key) over a plan_fit provisioning); "
                     f"got {type(ext_dealer).__name__}")
             dealer = BankSlotDealer(bank, ext_dealer.key,
-                                    iter_slots * cfg.iters, log=ctx.log)
+                                    iter_slots * cfg.iters, log=dlog,
+                                    start_slot=start_slot)
         else:
             dealer = SlotDealer(iter_slots * cfg.iters, seed=cfg.seed,
-                                log=ctx.log,
-                                stream=(cfg.offline == "streamed"))
+                                log=dlog,
+                                stream=(cfg.offline == "streamed"),
+                                start_slot=start_slot)
         ctx.dealer = dealer
+        if st is not None:
+            for attr in ("n_matmul", "n_mul", "n_bin"):
+                setattr(dealer, attr, st.counters[attr])
         plan_s = time.perf_counter() - t0
 
         t_start = time.perf_counter()
-        it = 0
+        it = it0
         c_parts = [None] * len(batches)
         try:
-            for it in range(1, cfg.iters + 1):
+            for it in range(it0 + 1, cfg.iters + 1):
                 mu_old = mu
                 base = (it - 1) * spi
-                acc = [jnp.zeros((cfg.k, d), ring.DTYPE),
-                       jnp.zeros((cfg.k, d), ring.DTYPE),
-                       jnp.zeros((cfg.k,), ring.DTYPE),
-                       jnp.zeros((cfg.k,), ring.DTYPE)]
+                start_b = b0 if it == it0 + 1 else 0
+                if start_b:
+                    # mid-iteration resume: restored partial accumulators +
+                    # completed batches' assignment shares; remaining
+                    # batches run from the checkpointed cursor
+                    acc = [jnp.asarray(a) for a in st.acc]
+                    for t in range(start_b):
+                        c_parts[t] = AShare(jnp.asarray(st.c0_parts[t]),
+                                            jnp.asarray(st.c1_parts[t]))
+                else:
+                    acc = [jnp.zeros((cfg.k, d), ring.DTYPE),
+                           jnp.zeros((cfg.k, d), ring.DTYPE),
+                           jnp.zeros((cfg.k,), ring.DTYPE),
+                           jnp.zeros((cfg.k,), ring.DTYPE)]
+
+                def on_done(t_done: int, _it=it, _acc=acc, _mu=mu):
+                    b_done = t_done + 1
+                    if ckpt is None \
+                            or not ckpt.want_batch(b_done, len(batches)):
+                        return
+                    # sequential executor only (enforced above): after batch
+                    # t's post, the live log holds exactly batches 0..t —
+                    # the canonical prefix
+                    self._save_fit_ckpt(
+                        ckpt, ctx, _it - 1, b_done, _mu,
+                        slots_advance((_it - 1) * spi + 2 * b_done),
+                        acc=_acc, c_parts=c_parts[:b_done])
+
                 tasks = [self._batch_task(ctx, dealer, b, mu,
-                                          base + 2 * t, acc, c_parts, t)
-                         for t, b in enumerate(batches)]
+                                          base + 2 * t, acc, c_parts, t,
+                                          on_done=on_done)
+                         for t, b in enumerate(batches) if t >= start_b]
                 run_pipeline(tasks, pipeline=cfg.pipeline)
                 fin_view = dealer.acquire(base + 2 * len(batches))
                 flat_f = K.materialize_offline(fin_prog.requests, fin_view)
@@ -467,6 +612,11 @@ class SecureKMeans:
                                  backend=ctx.backend)
                     if self._converged(cctx, mu_old, mu, cfg.tol):
                         break
+                if ckpt is not None and ckpt.want_iter(it, cfg.iters):
+                    # iteration boundary: the pipeline fully drained at
+                    # finalize, so this cut is canonical on BOTH executors
+                    self._save_fit_ckpt(ckpt, ctx, it, 0, mu,
+                                        slots_advance(it * spi))
             jnp.asarray(mu.s0).block_until_ready()
             wall = time.perf_counter() - t_start
         finally:
@@ -492,7 +642,7 @@ class SecureKMeans:
         return self.result_
 
     def _batch_task(self, ctx, dealer, b: dict, mu: AShare, slot0: int,
-                    acc: list, c_parts: list, t: int):
+                    acc: list, c_parts: list, t: int, on_done=None):
         """One minibatch as a 4-phase pipeline step (launch/pipeline.py):
         pre = exchange #1 (centroid shares only) + S1 tranche pin; launch =
         S1 dispatch; mid = exchange #2 on the assignment shares (the S2
@@ -548,6 +698,8 @@ class SecureKMeans:
             acc[2] = acc[2] + d0
             acc[3] = acc[3] + d1
             c_parts[t] = c
+            if on_done is not None:
+                on_done(t)
             return None
 
         return StageTask(pre, launch, mid, post)
@@ -663,7 +815,7 @@ class SecureKMeans:
     # ------------------------------------------------------------------ #
     def predict(self, x_a: np.ndarray, x_b: np.ndarray,
                 result: KMeansResult | None = None, *, dealer=None,
-                compiled: bool | None = None) -> PredictResult:
+                compiled: bool | None = None, wire=None) -> PredictResult:
         """Assign a NEW batch to the fitted clusters without revealing the
         model: batched secure distances + tournament argmin against the
         secret-shared centroids; only the (m, k) assignment shares come
@@ -679,18 +831,18 @@ class SecureKMeans:
         the eager reference otherwise; both paths are bit-exact for any
         same-seeded per-class dealer (tests/test_serve.py)."""
         return self._predict(x_a, x_b, result, dealer=dealer,
-                             compiled=compiled, with_scores=False)
+                             compiled=compiled, with_scores=False, wire=wire)
 
     def score(self, x_a: np.ndarray, x_b: np.ndarray,
               result: KMeansResult | None = None, *, dealer=None,
-              compiled: bool | None = None) -> PredictResult:
+              compiled: bool | None = None, wire=None) -> PredictResult:
         """`predict` + the (m,) squared-distance-to-assigned-centroid
         shares: the tournament's winning D' value (carried for free) plus
         each party's locally-computable ||x||^2 contribution. This is the
         fraud-scoring primitive — outlier flags follow from revealing ONLY
         these scores, never centroids or per-cluster structure."""
         return self._predict(x_a, x_b, result, dealer=dealer,
-                             compiled=compiled, with_scores=True)
+                             compiled=compiled, with_scores=True, wire=wire)
 
     def _check_predict_args(self, x_a, x_b, result):
         cfg = self.cfg
@@ -716,7 +868,7 @@ class SecureKMeans:
         return x_a, x_b, result
 
     def _predict(self, x_a, x_b, result, *, dealer, compiled,
-                 with_scores: bool) -> PredictResult:
+                 with_scores: bool, wire=None) -> PredictResult:
         cfg = self.cfg
         x_a, x_b, result = self._check_predict_args(x_a, x_b, result)
         if compiled:
@@ -735,7 +887,7 @@ class SecureKMeans:
                   and self._traceable_backend())
         if use_fast:
             prep = self.predict_prepare(x_a, x_b, result, dealer=dealer,
-                                        with_scores=with_scores)
+                                        with_scores=with_scores, wire=wire)
             return self.predict_collect(prep, self.predict_launch(prep))
         t0 = time.perf_counter()
         enc_a = _encode_np(x_a, cfg.f)
@@ -743,6 +895,7 @@ class SecureKMeans:
         csr_a = CSRMatrix.from_dense(enc_a) if cfg.sparse else None
         csr_b = CSRMatrix.from_dense(enc_b) if cfg.sparse else None
         log = CommLog()
+        log.wire = wire
         if dealer is None:
             # domain-separated from the fit's streams: reusing cfg.seed
             # verbatim would replay the fit's Beaver masks on overlapping
@@ -771,8 +924,8 @@ class SecureKMeans:
 
     # -- compiled scoring, split into pipelineable phases ---------------- #
     def predict_prepare(self, x_a, x_b, result: KMeansResult | None = None,
-                        *, dealer=None,
-                        with_scores: bool = False) -> "PreparedPredict":
+                        *, dealer=None, with_scores: bool = False,
+                        wire=None) -> "PreparedPredict":
         """Host phase of ONE compiled scoring launch: validate, encode, run
         the Protocol-2 pre-launch exchange (computable from the centroid
         shares alone), draw the offline tranche, stage the program
@@ -797,6 +950,7 @@ class SecureKMeans:
         csr_a = CSRMatrix.from_dense(enc_a) if cfg.sparse else None
         csr_b = CSRMatrix.from_dense(enc_b) if cfg.sparse else None
         log = CommLog()
+        log.wire = wire
         if dealer is None:
             # domain-separated from the fit's streams (see _predict)
             dealer = TrustedDealer(seed=serve_seed(cfg.seed), log=log)
@@ -959,6 +1113,34 @@ class SecureKMeans:
     def _fit_plan_key(self, shape_a, shape_b) -> tuple:
         return ("fit", self.cfg.iters, self.cfg.batch_size) \
             + self._plan_cache_key(shape_a, shape_b)
+
+    def _fit_fingerprint(self, shape_a, shape_b) -> str:
+        """Checkpoint identity: everything that shapes the fit's schedule,
+        streams, and init — a resumed run with ANY of these changed would
+        not be the same fit. `pipeline` is deliberately excluded: the
+        executors are stream-identical at checkpointable cuts."""
+        from repro.checkpoint.store import config_fingerprint
+        cfg = self.cfg
+        key = self._fit_plan_key(shape_a, shape_b) + (
+            "fit-ckpt", cfg.seed, cfg.offline, cfg.init, cfg.tol)
+        return config_fingerprint(key)
+
+    def _save_fit_ckpt(self, ckpt, ctx, it: int, batch: int, mu: AShare,
+                       advance: dict, acc=None, c_parts=None) -> None:
+        from repro.checkpoint.fit import FitState
+        d = ctx.dealer
+        ckpt.save(FitState(
+            iteration=it, batch=batch,
+            mu0=np.asarray(mu.s0, np.uint64),
+            mu1=np.asarray(mu.s1, np.uint64),
+            counters={"n_matmul": int(d.n_matmul), "n_mul": int(d.n_mul),
+                      "n_bin": int(d.n_bin)},
+            comm=ctx.log.state(), advance=advance,
+            fingerprint=ckpt.fingerprint,
+            acc=None if acc is None else [np.asarray(a, np.uint64)
+                                          for a in acc],
+            c0_parts=[np.asarray(p.s0, np.uint64) for p in (c_parts or [])],
+            c1_parts=[np.asarray(p.s1, np.uint64) for p in (c_parts or [])]))
 
     def _plan_cache_key(self, shape_a, shape_b) -> tuple:
         cfg = self.cfg

@@ -62,8 +62,10 @@ class Ctx:
                    backend=self.backend)
 
 
-def make_ctx(seed: int = 0, backend: RingBackend | str | None = None) -> Ctx:
+def make_ctx(seed: int = 0, backend: RingBackend | str | None = None,
+             wire=None) -> Ctx:
     log = CommLog()
+    log.wire = wire  # online sends ship over the attached WireSession
     return Ctx(dealer=TrustedDealer(seed=seed, log=log), log=log,
                backend=backend)
 

@@ -128,6 +128,17 @@ def _class_rng(seed: int, key: tuple) -> np.random.Generator:
     return np.random.default_rng(np.random.SeedSequence(ent))
 
 
+def _advanced_rng(seed: int, key: tuple, skip: int) -> np.random.Generator:
+    """The class stream positioned AFTER `skip` requests — the checkpoint/
+    resume primitive. `ring.rand_np` draws exactly `_class_words(key)` PCG64
+    words per request, so one `bit_generator.advance` jump reconstructs the
+    stream position of any request offset without replaying the draws."""
+    rng = _class_rng(seed, key)
+    if skip:
+        rng.bit_generator.advance(int(skip) * _class_words(key))
+    return rng
+
+
 _SERVE_DOMAIN = 0x53657276  # "Serv"
 
 
@@ -263,7 +274,7 @@ class TrustedDealer:
     moves it into a true offline phase."""
 
     def __init__(self, seed: int = 0, log: CommLog | None = None,
-                 backend=None):
+                 backend=None, advance: dict | None = None):
         # `backend` is accepted for interface compatibility; generation is
         # host-side numpy (bit-exact with every ring backend by the parity
         # guarantee in core/backend.py).
@@ -271,6 +282,11 @@ class TrustedDealer:
         self.seed = seed
         self.log = log if log is not None else CommLog()
         self._rngs: dict[tuple, np.random.Generator] = {}
+        # checkpoint resume: {class_key: requests already consumed} — each
+        # class stream starts pre-advanced past them (applied lazily in
+        # _rng_for, matching the lazy stream creation)
+        self._advance = {tuple(k): int(v)
+                         for k, v in (advance or {}).items()}
         self.dealer_seconds = 0.0
         self.modelled_ot_seconds = 0.0
         self.n_matmul = 0
@@ -281,7 +297,8 @@ class TrustedDealer:
     def _rng_for(self, key: tuple) -> np.random.Generator:
         rng = self._rngs.get(key)
         if rng is None:
-            rng = self._rngs[key] = _class_rng(self.seed, key)
+            rng = self._rngs[key] = _advanced_rng(
+                self.seed, key, self._advance.get(key, 0))
         return rng
 
     def _one(self, kind: str, shape):
@@ -542,7 +559,7 @@ class PooledDealer(_TripleServing):
     """
 
     def __init__(self, plan: TriplePlan, seed: int = 0,
-                 log: CommLog | None = None):
+                 log: CommLog | None = None, advance: dict | None = None):
         t0 = time.perf_counter()
         self.plan = plan
         self.seed = seed
@@ -555,8 +572,13 @@ class PooledDealer(_TripleServing):
         counts = plan.class_counts()
         # one host->device upload per class, then split into per-request
         # views HERE (still offline) so online serving is a plain list
-        # index — no gather launches on the critical path
-        rngs = {key: _class_rng(seed, key) for key in counts}
+        # index — no gather launches on the critical path.
+        # `advance`: checkpoint resume — pass the REMAINING plan and the
+        # per-class request counts the interrupted run already consumed;
+        # each class stream jumps past them before generating.
+        advance = advance or {}
+        rngs = {key: _advanced_rng(seed, key, advance.get(key, 0))
+                for key in counts}
         self._pools, self.pool_bytes = _gen_tranche(rngs, counts)
         self._served = {key: 0 for key in counts}
         self.modelled_ot_seconds = _account_offline_plan(plan, self.log)
@@ -630,7 +652,8 @@ class StreamingPooledDealer(_TripleServing):
 
     def __init__(self, iter_plan: TriplePlan, iters: int, seed: int = 0,
                  log: CommLog | None = None, prefetch: int = 2,
-                 async_gen: bool = True, group: int | str = 1):
+                 async_gen: bool = True, group: int | str = 1,
+                 advance: dict | None = None):
         t0 = time.perf_counter()
         self.iter_plan = TriplePlan(list(iter_plan.requests))
         self.iters = int(iters)
@@ -651,7 +674,11 @@ class StreamingPooledDealer(_TripleServing):
             group = max(1, GROUP_TRANCHE_BYTES // (8 * words))
         self.group = max(1, min(int(group), max(1, self.iters)))
         self._tranche_iters = 1      # iterations covered by _current
-        self._rngs = {key: _class_rng(seed, key) for key in self._iter_counts}
+        # checkpoint resume: `iters` = REMAINING iterations; `advance` =
+        # per-class requests the interrupted run already consumed
+        advance = advance or {}
+        self._rngs = {key: _advanced_rng(seed, key, advance.get(key, 0))
+                      for key in self._iter_counts}
         self.modelled_ot_seconds = _account_offline_plan(
             self.iter_plan.repeat(self.iters), self.log)
         self.gen_seconds = 0.0
@@ -916,13 +943,21 @@ class SlotDealer:
 
     def __init__(self, slot_plans, seed: int = 0, log: CommLog | None = None,
                  stream: bool = True, window: int = 4, async_gen: bool = True,
-                 group_bytes: int | str = "auto"):
+                 group_bytes: int | str = "auto", start_slot: int = 0):
         import threading
         t0 = time.perf_counter()
         self.slot_plans = [TriplePlan(list(p.requests)) for p in slot_plans]
         self.seed = seed
         self.log = log if log is not None else CommLog()
         self.stream = bool(stream)
+        # checkpoint resume: slots < start_slot were consumed by the
+        # interrupted run — never generated here; each class stream starts
+        # advanced past their requests (canonical slot order fixes the
+        # offsets), so slot start_slot serves the EXACT words it would have
+        self.start_slot = int(start_slot)
+        if not 0 <= self.start_slot <= len(self.slot_plans):
+            raise IndexError(f"start_slot {start_slot} out of range "
+                             f"({len(self.slot_plans)} slots planned)")
         self.n_matmul = 0
         self.n_mul = 0
         self.n_bin = 0
@@ -934,15 +969,24 @@ class SlotDealer:
         self._counts = [p.class_counts() for p in self.slot_plans]
         self._totals = [len(p) for p in self.slot_plans]
         keys = sorted({k for c in self._counts for k in c})
-        self._rngs = {key: _class_rng(seed, key) for key in keys}
+        skip: dict[tuple, int] = {}
+        for counts in self._counts[:self.start_slot]:
+            for key, c in counts.items():
+                skip[key] = skip.get(key, 0) + c
+        self._rngs = {key: _advanced_rng(seed, key, skip.get(key, 0))
+                      for key in keys}
+        # only the slots this dealer will actually generate hit its offline
+        # books (a resumed fit's checkpoint already carries the full tallies)
         self.modelled_ot_seconds = _account_offline_plan(
-            TriplePlan([r for p in self.slot_plans for r in p.requests]),
+            TriplePlan([r for p in self.slot_plans[self.start_slot:]
+                        for r in p.requests]),
             self.log)
         if group_bytes == "auto":
             group_bytes = GROUP_TRANCHE_BYTES
-        # partition slots into generation groups of >= group_bytes each
+        # partition the REMAINING slots into generation groups of
+        # >= group_bytes each
         self._groups: list[tuple[int, int]] = []
-        i = 0
+        i = self.start_slot
         while i < len(self.slot_plans):
             j = i + 1
             b = 8 * self.slot_plans[i].pool_words()
@@ -952,8 +996,8 @@ class SlotDealer:
             self._groups.append((i, j))
             i = j
         self._ready: dict[int, tuple] = {}   # slot -> (pools, nbytes)
-        self._acquired: set[int] = set()
-        self._served_class: dict[tuple, int] = {}
+        self._acquired: set[int] = set(range(self.start_slot))
+        self._served_class: dict[tuple, int] = dict(skip)
         self._cond = threading.Condition()
         self._closed = False
         self._error: BaseException | None = None
@@ -961,9 +1005,10 @@ class SlotDealer:
         self._max_requested = -1     # highest slot a caller is waiting on
         self._worker = None
         if not self.stream:
-            # pooled: ONE merged generation pass over the whole schedule
-            for i, tr in enumerate(_gen_tranche_split(self._rngs,
-                                                      self._counts)):
+            # pooled: ONE merged generation pass over the remaining schedule
+            for i, tr in enumerate(_gen_tranche_split(
+                    self._rngs, self._counts[self.start_slot:]),
+                    start=self.start_slot):
                 self._ready[i] = tr
                 self._live_bytes += tr[1]
                 self._live_slots += 1
@@ -1303,13 +1348,20 @@ class TripleBank:
         self.replenish_seconds += time.perf_counter() - t0
 
     # -- persistence -----------------------------------------------------
+    BANK_FORMAT = "repro.triplebank"
+    BANK_VERSION = 2
+
     def save(self, path: str) -> None:
         """One `np.savez` archive: per class, the unserved requests stacked
         per tensor slot, plus a JSON manifest carrying the class keys, RNG
-        states (stream positions), and registered plans. The path is used
-        VERBATIM (np.savez's silent '.npz' suffixing is bypassed by writing
-        through a file handle), so save(p) -> load(p) always pairs up."""
+        states (stream positions), registered plans, a format marker +
+        version, and a CRC32 per array — so `load` can refuse a truncated,
+        bit-flipped, or foreign file instead of serving garbage correlated
+        randomness. The path is used VERBATIM (np.savez's silent '.npz'
+        suffixing is bypassed by writing through a file handle), so
+        save(p) -> load(p) always pairs up."""
         import json
+        import zlib
         classes = []
         arrays = {}
         # every class with an RNG is saved, queued stock or not: stream
@@ -1330,8 +1382,11 @@ class TripleBank:
                               else [list(r.shape[0]), list(r.shape[1])],
                               r.tag] for r in plan.requests]
             for k, plan in self._plans.items()}
-        manifest = {"version": 1, "seed": self.seed, "classes": classes,
-                    "plans": plans}
+        checksums = {name: zlib.crc32(np.ascontiguousarray(a).tobytes())
+                     for name, a in arrays.items()}
+        manifest = {"format": self.BANK_FORMAT, "version": self.BANK_VERSION,
+                    "seed": self.seed, "classes": classes, "plans": plans,
+                    "checksums": checksums}
         with open(path, "wb") as f:
             np.savez(f, manifest=np.frombuffer(
                 json.dumps(manifest).encode(), np.uint8), **arrays)
@@ -1339,24 +1394,82 @@ class TripleBank:
     @classmethod
     def load(cls, path: str, auto_replenish: bool = True,
              log: CommLog | None = None) -> "TripleBank":
+        """Load a `save`d bank, validating format, version, and per-array
+        checksums. Any structural damage — truncation, bit flips, a foreign
+        npz, an unreadable manifest — raises `ValueError` naming the
+        problem; a corrupt bank must never silently serve wrong words."""
         import json
-        with np.load(path) as z:
-            manifest = json.loads(bytes(z["manifest"]).decode())
-            bank = cls(seed=manifest["seed"],
-                       auto_replenish=auto_replenish, log=log)
-            for i, entry in enumerate(manifest["classes"]):
-                key = _key_from_str(entry["key"])
-                rng = np.random.default_rng(0)
-                rng.bit_generator.state = entry["rng_state"]
-                bank._rngs[key] = rng
-                count = int(entry["count"])
-                if count:
-                    slots = [jnp.asarray(z[f"c{i}_s{s}"])
-                             for s in range(_SLOTS[key[0]])]
-                    bank._queues[key] = [tuple(a[j] for a in slots)
-                                         for j in range(count)]
-                    bank.pool_bytes += sum(int(a.size) * 8 for a in slots)
-        for kstr, reqs in manifest["plans"].items():
+        import zipfile
+        import zlib
+
+        def bad(reason: str) -> ValueError:
+            return ValueError(f"not a valid TripleBank file {path!r}: "
+                              f"{reason}")
+        try:
+            z = np.load(path)
+        except (zipfile.BadZipFile, OSError, EOFError, ValueError) as e:
+            raise bad(f"unreadable archive ({e})") from e
+        with z:
+            if "manifest" not in getattr(z, "files", ()):
+                raise bad("no manifest (foreign or pre-format npz)")
+            try:
+                manifest = json.loads(bytes(z["manifest"]).decode())
+            except (zipfile.BadZipFile, OSError, EOFError, KeyError,
+                    UnicodeDecodeError, json.JSONDecodeError,
+                    ValueError) as e:
+                raise bad(f"manifest unreadable ({e})") from e
+            if not isinstance(manifest, dict) \
+                    or manifest.get("format") != cls.BANK_FORMAT:
+                raise bad("manifest format marker missing or foreign")
+            if manifest.get("version") != cls.BANK_VERSION:
+                raise bad(f"format version {manifest.get('version')!r}, "
+                          f"expected {cls.BANK_VERSION}")
+            try:
+                checksums = manifest["checksums"]
+                expected_names = set(checksums)
+                stored = set(z.files) - {"manifest"}
+                if stored != expected_names:
+                    raise bad("archive arrays do not match the manifest "
+                              f"(missing {sorted(expected_names - stored)}, "
+                              f"unexpected {sorted(stored - expected_names)})")
+                loaded = {}
+                for name in sorted(expected_names):
+                    try:
+                        a = z[name]
+                    except (zipfile.BadZipFile, OSError, EOFError,
+                            ValueError) as e:
+                        raise bad(f"array {name!r} unreadable — truncated "
+                                  f"archive? ({e})") from e
+                    crc = zlib.crc32(np.ascontiguousarray(a).tobytes())
+                    if crc != int(checksums[name]):
+                        raise bad(f"checksum mismatch on array {name!r} "
+                                  "(bit rot or tampering)")
+                    loaded[name] = a
+                bank = cls(seed=manifest["seed"],
+                           auto_replenish=auto_replenish, log=log)
+                for i, entry in enumerate(manifest["classes"]):
+                    key = _key_from_str(entry["key"])
+                    rng = np.random.default_rng(0)
+                    rng.bit_generator.state = entry["rng_state"]
+                    bank._rngs[key] = rng
+                    count = int(entry["count"])
+                    if count:
+                        slots = [jnp.asarray(loaded[f"c{i}_s{s}"])
+                                 for s in range(_SLOTS[key[0]])]
+                        if any(a.shape[0] != count for a in slots):
+                            raise bad(f"class {entry['key']} declares "
+                                      f"{count} requests but arrays "
+                                      "disagree")
+                        bank._queues[key] = [tuple(a[j] for a in slots)
+                                             for j in range(count)]
+                        bank.pool_bytes += sum(int(a.size) * 8
+                                               for a in slots)
+                plans_raw = manifest["plans"]
+            except ValueError:
+                raise
+            except (KeyError, IndexError, TypeError, SyntaxError) as e:
+                raise bad(f"malformed manifest structure ({e})") from e
+        for kstr, reqs in plans_raw.items():
             reqs = [PlanRequest(kind,
                                 (tuple(shape[0]), tuple(shape[1]))
                                 if kind == "matmul" else tuple(shape), tag)
@@ -1390,6 +1503,14 @@ class BankDealer(_TripleServing):
         self.dealer_seconds += self.bank.replenish_seconds - r0
         return out
 
+    def skip(self, plan, reps: int = 1) -> None:
+        """Drain `reps` executions of `plan` without serving them — resume
+        support: realigns the bank's FIFO queues past the requests an
+        earlier (checkpointed) run already consumed."""
+        for _ in range(int(reps)):
+            for r in plan.requests:
+                self.bank._pop(_class_key(r.kind, r.shape), self.key)
+
 
 class BankSlotDealer:
     """SlotDealer-compatible view over a provisioned `TripleBank` for the
@@ -1407,12 +1528,16 @@ class BankSlotDealer:
     per-class concatenation (test-enforced)."""
 
     def __init__(self, bank: TripleBank, key: tuple, slot_plans,
-                 log: CommLog | None = None):
+                 log: CommLog | None = None, start_slot: int = 0):
         t0 = time.perf_counter()
         self.bank = bank
         self.key = tuple(key)
         self.slot_plans = [TriplePlan(list(p.requests)) for p in slot_plans]
         self.log = log if log is not None else CommLog()
+        self.start_slot = int(start_slot)
+        if not 0 <= self.start_slot <= len(self.slot_plans):
+            raise IndexError(f"start_slot {start_slot} out of range "
+                             f"({len(self.slot_plans)} slots planned)")
         self.n_matmul = 0
         self.n_mul = 0
         self.n_bin = 0
@@ -1426,7 +1551,19 @@ class BankSlotDealer:
         self._acquired: set[int] = set()
         self._slots: list[tuple] = []
         self.pool_bytes = 0
-        for plan in self.slot_plans:
+        for si, plan in enumerate(self.slot_plans):
+            if si < self.start_slot:
+                # checkpoint resume against a FRESHLY provisioned bank:
+                # the interrupted run consumed these slots' words, so drain
+                # (and discard) them to keep the FIFO positions aligned —
+                # slot start_slot then pops the exact entries it would have
+                for r in plan.requests:
+                    bank._pop(_class_key(r.kind, r.shape), self.key)
+                for ck, c in self._counts[si].items():
+                    self._served_class[ck] = self._served_class.get(ck, 0) + c
+                self._acquired.add(si)
+                self._slots.append((None, 0))
+                continue
             pools: dict[tuple, list] = {}
             nbytes = 0
             for r in plan.requests:

@@ -30,7 +30,19 @@ exchange + bank draw with request t's scoring launch).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, NamedTuple
+
+
+@dataclasses.dataclass
+class PipelineError:
+    """Sentinel slotted into `run_pipeline`'s result list where task
+    `index` raised (capture_errors=True): the failed task's remaining
+    phases are skipped, every other task still runs. Only `Exception`s
+    are captured — KeyboardInterrupt and friends always propagate."""
+
+    index: int
+    exc: Exception
 
 
 class StageTask(NamedTuple):
@@ -48,29 +60,80 @@ class StageTask(NamedTuple):
     post: Callable[[Any, Any, Any], Any] | None = None
 
 
-def run_pipeline(tasks, pipeline: bool = True) -> list:
+def run_pipeline(tasks, pipeline: bool = True,
+                 capture_errors: bool = False) -> list:
     """Execute `tasks` in order, returning one result per task.
 
     pipeline=False: strict sequence pre -> launch -> mid -> post per task.
     pipeline=True: after dispatching task t's launch, task t+1's `pre` runs
     while the device is busy; then t's mid/post complete before t+1's
     launch. Single-threaded on the host — the overlap comes from jax's
-    asynchronous dispatch, not from host threads."""
+    asynchronous dispatch, not from host threads.
+
+    capture_errors=False (default): the first raising phase propagates,
+    aborting the run — right for the fit loop, where batches are causally
+    chained and a half-run iteration is useless. capture_errors=True: a
+    task whose phase raises an `Exception` contributes a `PipelineError`
+    result and its remaining phases are skipped; the other tasks still run
+    — right for serving drains, where requests are independent and one
+    poisoned request must not take down its whole group."""
     tasks = list(tasks)
     results = []
-    if not pipeline:
-        for t in tasks:
+
+    def _phases(t, prep, already_prepped: bool):
+        if not already_prepped:
             prep = t.pre()
-            out = t.launch(prep)
-            m = t.mid(prep, out) if t.mid is not None else None
-            results.append(t.post(prep, out, m) if t.post is not None
-                           else out)
-        return results
-    prep = tasks[0].pre() if tasks else None
-    for i, t in enumerate(tasks):
         out = t.launch(prep)
-        nxt = tasks[i + 1].pre() if i + 1 < len(tasks) else None
         m = t.mid(prep, out) if t.mid is not None else None
-        results.append(t.post(prep, out, m) if t.post is not None else out)
+        return t.post(prep, out, m) if t.post is not None else out
+
+    if not pipeline:
+        for i, t in enumerate(tasks):
+            if capture_errors:
+                try:
+                    results.append(_phases(t, None, False))
+                except Exception as e:
+                    results.append(PipelineError(i, e))
+            else:
+                results.append(_phases(t, None, False))
+        return results
+
+    def _pre(i):
+        if i >= len(tasks):
+            return None
+        if not capture_errors:
+            return tasks[i].pre()
+        try:
+            return tasks[i].pre()
+        except Exception as e:
+            return PipelineError(i, e)
+
+    _unset = object()
+    prep = _pre(0)
+    for i, t in enumerate(tasks):
+        if isinstance(prep, PipelineError):
+            results.append(prep)
+            prep = _pre(i + 1)
+            continue
+        nxt = _unset
+        if capture_errors:
+            try:
+                out = t.launch(prep)
+                nxt = _pre(i + 1)
+                m = t.mid(prep, out) if t.mid is not None else None
+                res = t.post(prep, out, m) if t.post is not None else out
+            except Exception as e:
+                res = PipelineError(i, e)
+                if nxt is _unset:
+                    # launch died before the overlap window opened; t+1's
+                    # pre runs un-overlapped — never twice (pre() draws
+                    # dealer words, so re-running it would corrupt streams)
+                    nxt = _pre(i + 1)
+        else:
+            out = t.launch(prep)
+            nxt = _pre(i + 1)
+            m = t.mid(prep, out) if t.mid is not None else None
+            res = t.post(prep, out, m) if t.post is not None else out
+        results.append(res)
         prep = nxt
     return results

@@ -37,7 +37,9 @@ def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
           provision_copies: int | None = None, bank_path: str | None = None,
           pipeline: bool = True, fit_batch_size: int | None = None,
           fit_from_bank: bool = False, provision_workers: int = 1,
-          seed: int = 0, verbose: bool = True) -> dict:
+          checkpoint_dir: str | None = None, resume: bool = False,
+          checkpoint_every: int = 1, seed: int = 0,
+          verbose: bool = True) -> dict:
     ds = FraudDataset.synthesize(n=n_train, d_a=d_a, d_b=d_b,
                                  n_clusters=k, seed=seed)
     km = SecureKMeans(KMeansConfig(k=k, iters=iters, seed=seed,
@@ -56,8 +58,13 @@ def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
         fit_bank.provision(fkey, fplan, workers=provision_workers)
         t_provision_fit = time.perf_counter() - t0
         fit_dealer = fit_bank.dealer(fkey)
+    ckpt = None
+    if checkpoint_dir:
+        from repro.checkpoint.fit import FitCheckpointer
+        ckpt = FitCheckpointer(checkpoint_dir, every=checkpoint_every)
     t0 = time.perf_counter()
-    res = km.fit(ds.x_a, ds.x_b, dealer=fit_dealer)
+    res = km.fit(ds.x_a, ds.x_b, dealer=fit_dealer, checkpoint=ckpt,
+                 resume=resume)
     t_fit = time.perf_counter() - t0
 
     bank = TripleBank(seed=serve_seed(seed))
@@ -147,6 +154,15 @@ def main() -> None:
     ap.add_argument("--provision-workers", type=int, default=1,
                     help="thread-pool width for bulk provisioning "
                          "(bit-exact with serial)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="save a resumable FitCheckpoint here at iteration "
+                         "boundaries (atomic keep-N store)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the fit from the latest checkpoint in "
+                         "--checkpoint-dir (bit-exact with an "
+                         "uninterrupted run)")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="checkpoint every Nth iteration")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(n_train=args.n_train, d_a=args.d_a, d_b=args.d_b, k=args.k,
@@ -157,7 +173,9 @@ def main() -> None:
           pipeline=not args.no_pipeline,
           fit_batch_size=args.fit_batch_size,
           fit_from_bank=args.fit_from_bank,
-          provision_workers=args.provision_workers, seed=args.seed)
+          provision_workers=args.provision_workers,
+          checkpoint_dir=args.checkpoint_dir, resume=args.resume,
+          checkpoint_every=args.checkpoint_every, seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,202 @@
+"""Two-PROCESS secure k-means: the fit and predict protocols over a real
+TCP socket (DESIGN.md §13).
+
+    # party A (engine) — binds, prints "LISTENING <port>", runs the fit
+    PYTHONPATH=src python -m repro.launch.two_party --role A --port 0 \
+        --out /tmp/a.npz
+    # party B (responder) — dials A and answers the wire until BYE
+    PYTHONPATH=src python -m repro.launch.two_party --role B --port <port>
+
+Deployment shape: the repo's engine simulates BOTH parties' protocol
+state in one process (core/protocol.py), so party A hosts the joint
+simulation while party B is a pure wire peer — it ships its data slice
+on request (a real length-prefixed blob over TCP), then echoes the
+online protocol's exchange frames (core/channel.serve_peer). Every byte
+and round the CommLog tallies is carried by a real frame with sequence
+number and CRC, so a socket fit's shares AND accounting are bit-exact
+against the in-process fit — test-enforced on all partition × sparsity
+combos (tests/test_wire.py).
+
+`--die-at-iter N` kills party A with os._exit right after the iteration-N
+checkpoint publishes (requires --checkpoint-dir) — the crash half of the
+checkpoint/resume acceptance test; rerunning with --resume (fresh B)
+finishes bit-exact against an uninterrupted run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.core.channel import (ReliableChannel, SocketTransport,
+                                WireSession, WireTimeout, serve_peer)
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+
+
+def make_data(n: int, d: int, k: int, seed: int,
+              sparse_frac: float = 0.0) -> np.ndarray:
+    """Deterministic gaussian blobs (optionally sparsified) — the shared
+    generator both parties AND the in-process reference fit use, so the
+    only thing the wire changes is where the bytes travel."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0.0, 4.0, size=(k, d))
+    x = centers[rng.integers(0, k, size=n)] + rng.normal(size=(n, d))
+    if sparse_frac > 0:
+        x = np.where(rng.random(x.shape) < sparse_frac, 0.0, x)
+    return x
+
+
+def split_data(x: np.ndarray, partition: str) -> tuple:
+    n, d = x.shape
+    if partition == "vertical":
+        return x[:, :d // 2], x[:, d // 2:]
+    return x[:n // 2], x[n // 2:]
+
+
+def _party_b(args) -> None:
+    t = SocketTransport("connect", host=args.host, port=args.port,
+                        io_timeout_s=args.io_timeout)
+
+    def on_blob(meta, arrays):
+        if meta.get("op") != "get_slice":
+            raise ValueError(f"unknown blob op {meta!r}")
+        x = make_data(int(meta["n"]), int(meta["d"]), int(meta["k"]),
+                      int(meta["seed"]), float(meta["sparse_frac"]))
+        _, x_b = split_data(x, meta["partition"])
+        return {"op": "slice"}, {"x_b": x_b}
+
+    try:
+        stats = serve_peer(t, on_blob=on_blob,
+                           idle_timeout_s=args.io_timeout)
+    except WireTimeout as e:
+        # engine crashed or unreachable past the idle budget: exit with a
+        # clear diagnostic (its checkpoint-resume relaunches a fresh B)
+        print(f"B: giving up — {e}", flush=True)
+        t.close()
+        raise SystemExit(3)
+    print(f"B: served {stats.served} requests, "
+          f"{stats.dedup_replays} dedup replays", flush=True)
+    t.close()
+
+
+def _party_a(args) -> None:
+    t = SocketTransport("listen", host=args.host, port=args.port,
+                        io_timeout_s=args.io_timeout)
+    print(f"LISTENING {t.port}", flush=True)
+    ws = WireSession(ReliableChannel(t, deadline_s=args.io_timeout))
+
+    x = make_data(args.n, args.d, args.k, args.seed, args.sparse_frac)
+    x_a, x_b_local = split_data(x, args.partition)
+    # B's slice arrives over the wire — the engine never recomputes it
+    meta, arrays = ws.send_arrays(
+        {"op": "get_slice", "n": args.n, "d": args.d, "k": args.k,
+         "seed": args.seed, "sparse_frac": args.sparse_frac,
+         "partition": args.partition}, {})
+    x_b = arrays["x_b"]
+    assert x_b.shape == x_b_local.shape, "peer slice geometry mismatch"
+
+    cfg = KMeansConfig(k=args.k, iters=args.iters, seed=args.seed,
+                       partition=args.partition,
+                       sparse=args.sparse_frac > 0,
+                       batch_size=args.batch_size,
+                       offline=args.offline,
+                       pipeline=not args.no_pipeline, backend="xla")
+    km = SecureKMeans(cfg)
+    ckpt = None
+    if args.checkpoint_dir:
+        from repro.checkpoint.fit import FitCheckpointer
+
+        def after_save(state, _path):
+            if args.die_at_iter is not None \
+                    and state.iteration >= args.die_at_iter \
+                    and state.batch == 0:
+                print(f"DYING at iteration {state.iteration} "
+                      "(post-checkpoint)", flush=True)
+                os._exit(17)    # simulated crash: no cleanup, no BYE
+
+        ckpt = FitCheckpointer(args.checkpoint_dir,
+                               every=args.checkpoint_every,
+                               after_save=after_save)
+    res = km.fit(x_a, x_b, wire=ws, checkpoint=ckpt, resume=args.resume)
+
+    # score a fresh arrival batch over the same session
+    arr = make_data(args.predict_n, args.d, args.k, args.seed + 1,
+                    args.sparse_frac)
+    pa, pb = split_data(arr, args.partition)
+    pred = km.predict(pa, pb, wire=ws)
+
+    d = res.log.by_tag("online")
+    meta = {
+        "counters": {a: int(getattr(res.dealer, a))
+                     for a in ("n_matmul", "n_mul", "n_bin")},
+        "fit_online": {k_: [int(v[0]), int(v[1])] for k_, v in d.items()},
+        "predict_online": {k_: [int(v[0]), int(v[1])]
+                           for k_, v in pred.log.by_tag("online").items()},
+        "wire_payload_bytes": int(ws.payload_bytes),
+        "wire_rounds": int(ws.rounds),
+        "frames_sent": int(t.stats.frames_sent),
+        "wire_bytes_sent": int(t.stats.wire_bytes_sent),
+    }
+    if args.out:
+        np.savez(args.out,
+                 mu0=np.asarray(res.centroids.s0, np.uint64),
+                 mu1=np.asarray(res.centroids.s1, np.uint64),
+                 c0=np.asarray(res.assignment.s0, np.uint64),
+                 c1=np.asarray(res.assignment.s1, np.uint64),
+                 p0=np.asarray(pred.assignment.s0, np.uint64),
+                 p1=np.asarray(pred.assignment.s1, np.uint64),
+                 meta=np.frombuffer(json.dumps(meta).encode(), np.uint8))
+    print(f"A: fit+predict done, wire {ws.payload_bytes} payload bytes / "
+          f"{ws.rounds} rounds over {t.stats.frames_sent} frames",
+          flush=True)
+    ws.bye()
+    t.close()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--role", choices=("A", "B"), required=True)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="A: listen port (0 = ephemeral, printed); "
+                         "B: A's port")
+    ap.add_argument("--n", type=int, default=48)
+    ap.add_argument("--d", type=int, default=4)
+    ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--predict-n", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=5)
+    ap.add_argument("--partition", choices=("vertical", "horizontal"),
+                    default="vertical")
+    ap.add_argument("--sparse-frac", type=float, default=0.0)
+    ap.add_argument("--batch-size", type=int, default=None)
+    ap.add_argument("--offline",
+                    choices=("on_demand", "pooled", "streamed"),
+                    default="on_demand")
+    ap.add_argument("--no-pipeline", action="store_true")
+    ap.add_argument("--io-timeout", type=float, default=60.0)
+    ap.add_argument("--out", default=None,
+                    help="A: write result shares + accounting npz here")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--checkpoint-every", type=int, default=1)
+    ap.add_argument("--die-at-iter", type=int, default=None,
+                    help="A: os._exit right after this iteration's "
+                         "checkpoint publishes (crash simulation)")
+    args = ap.parse_args(argv)
+    if args.role == "B":
+        if args.port == 0:
+            ap.error("role B needs A's --port")
+        _party_b(args)
+    else:
+        _party_a(args)
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except BrokenPipeError:
+        sys.exit(1)

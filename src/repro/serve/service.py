@@ -67,6 +67,8 @@ class ScoringResponse:
     labels: np.ndarray                # horizontal: [A rows; B rows] order
     scores: np.ndarray | None         # squared distance to assigned centroid
     rows: int
+    error: str | None = None          # set iff the request's group kept
+                                      # failing through max_attempts
 
 
 @dataclasses.dataclass
@@ -79,6 +81,8 @@ class ServiceStats:
     online_bytes: int = 0             # per-launch protocol traffic
     triples_served: int = 0           # correlated-randomness requests drawn
     replenish_events: int = 0         # bank stock-outs hit on the hot path
+    failed_requests: int = 0          # resolved with an error response
+    retried_groups: int = 0           # group retry attempts after a failure
 
     def as_dict(self) -> dict:
         s = max(self.online_seconds, 1e-9)
@@ -94,6 +98,8 @@ class ServiceStats:
             "pad_overhead": round(
                 self.padded_rows / max(1, self.rows), 3),
             "replenish_events": self.replenish_events,
+            "failed_requests": self.failed_requests,
+            "retried_groups": self.retried_groups,
         }
 
 
@@ -124,7 +130,7 @@ class ScoringService:
                  with_scores: bool = True, provision_copies: int = 4,
                  provision_workers: int = 1,
                  d_a: int | None = None, d_b: int | None = None,
-                 pipeline: bool = True):
+                 pipeline: bool = True, max_attempts: int = 3):
         self.model = model
         self.result = result if result is not None \
             else getattr(model, "result_", None)
@@ -140,6 +146,7 @@ class ScoringService:
             else BatchLadder(ladder)
         self.with_scores = with_scores
         self.pipeline = bool(pipeline)
+        self.max_attempts = max(1, int(max_attempts))
         self.provision_copies = int(provision_copies)
         self.provision_workers = int(provision_workers)
         d = int(self.result.centroids.shape[1])
@@ -212,10 +219,20 @@ class ScoringService:
         (padding, Protocol-2 exchange, bank draw) runs on the main thread
         (launch/pipeline.run_pipeline). Prepare order is monotonic either
         way, so the bank serves identical words and pipeline=False returns
-        identical responses."""
+        identical responses.
+
+        Failure policy: a group whose launch raises is retried up to
+        `max_attempts` times WITHIN this drain; exhausted, its requests
+        resolve as error `ScoringResponse`s (counted in
+        `stats.failed_requests`) instead of being requeued — a poisoned
+        request can therefore never livelock the drain by riding the queue
+        forever. Non-`Exception` escapes (KeyboardInterrupt and friends)
+        still requeue everything and propagate: nothing was returned, so
+        nothing is lost."""
         if not self._warmed:
             self.warm()
-        from repro.launch.pipeline import StageTask, run_pipeline
+        from repro.launch.pipeline import (PipelineError, StageTask,
+                                           run_pipeline)
         t0 = time.perf_counter()
         served0 = self.bank.served_requests
         repl0 = self.bank.replenish_events
@@ -225,36 +242,74 @@ class ScoringService:
             while self._queue and self._fits(group, self._queue[0]):
                 group.append(self._queue.pop(0))
             groups.append(group)
-        units = []                # one entry per launch: (group idx, chunk)
-        for gi, group in enumerate(groups):
-            xa = np.concatenate([g[1] for g in group], 0)
-            xb = np.concatenate([g[2] for g in group], 0)
-            units.extend((gi, ca, cb) for ca, cb in self._chunks(xa, xb))
-        tasks = [StageTask(
-            pre=lambda ca=ca, cb=cb: self._prepare_one(ca, cb),
-            launch=self._launch_prepared,
-            post=lambda prep, outs, _m, ca=ca, cb=cb:
-                self._collect_one(prep, outs, ca, cb))
-            for _gi, ca, cb in units]
+        results: dict[int, tuple] = {}    # gi -> (labels, scores)
+        errors: dict[int, Exception] = {}  # gi -> last failure
+        todo = list(range(len(groups)))
         try:
-            chunk_outs = run_pipeline(tasks, pipeline=self.pipeline)
-            per_group: dict[int, list] = {}
-            for (gi, _ca, _cb), out in zip(units, chunk_outs):
-                per_group.setdefault(gi, []).append(out)
-            responses = []
-            for gi, group in enumerate(groups):
-                labels, scores = self._stitch(per_group[gi])
-                responses.extend(self._split_group(group, labels, scores))
+            for attempt in range(self.max_attempts):
+                if not todo:
+                    break
+                if attempt:
+                    self.stats.retried_groups += len(todo)
+                units = []        # one entry per launch: (group idx, chunk)
+                failed: set[int] = set()
+                for gi in todo:
+                    group = groups[gi]
+                    try:
+                        xa = np.concatenate([g[1] for g in group], 0)
+                        xb = np.concatenate([g[2] for g in group], 0)
+                        units.extend((gi, ca, cb)
+                                     for ca, cb in self._chunks(xa, xb))
+                    except Exception as e:
+                        # malformed geometry dies before it ever reaches a
+                        # launch — same bounded-retry fate as a launch error
+                        failed.add(gi)
+                        errors[gi] = e
+                tasks = [StageTask(
+                    pre=lambda ca=ca, cb=cb: self._prepare_one(ca, cb),
+                    launch=self._launch_prepared,
+                    post=lambda prep, outs, _m, ca=ca, cb=cb:
+                        self._collect_one(prep, outs, ca, cb))
+                    for _gi, ca, cb in units]
+                chunk_outs = run_pipeline(tasks, pipeline=self.pipeline,
+                                          capture_errors=True)
+                per_group: dict[int, list] = {}
+                for (gi, _ca, _cb), out in zip(units, chunk_outs):
+                    if isinstance(out, PipelineError):
+                        failed.add(gi)
+                        errors[gi] = out.exc
+                    else:
+                        per_group.setdefault(gi, []).append(out)
+                for gi in todo:
+                    if gi not in failed:
+                        results[gi] = self._stitch(per_group[gi])
+                todo = [gi for gi in todo if gi in failed]
         except BaseException:
-            # a failed launch must not swallow the whole drain: requeue
-            # EVERY request no response was produced for (submit order
-            # preserved) so a later drain can retry
+            # an escape the retry loop does not own (KeyboardInterrupt,
+            # SystemExit, a bug in the drain scaffolding itself): no
+            # responses were returned, so requeue EVERY request (submit
+            # order preserved) for a later drain and re-raise
             self._queue[:0] = [g for group in groups for g in group]
             raise
+        responses = []
+        for gi, group in enumerate(groups):
+            if gi in results:
+                responses.extend(self._split_group(group, *results[gi]))
+            else:
+                responses.extend(self._error_responses(group, errors[gi]))
         self.stats.online_seconds += time.perf_counter() - t0
         self.stats.triples_served += self.bank.served_requests - served0
         self.stats.replenish_events += self.bank.replenish_events - repl0
         return responses
+
+    def _error_responses(self, group, exc: Exception) -> list:
+        out = []
+        for rid, _ga, _gb in group:
+            out.append(ScoringResponse(
+                rid, labels=np.zeros(0, np.int64), scores=None, rows=0,
+                error=f"{type(exc).__name__}: {exc}"))
+            self.stats.failed_requests += 1
+        return out
 
     def _fits(self, group, nxt) -> bool:
         top = self.ladder.max_rung

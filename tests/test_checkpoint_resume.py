@@ -1,0 +1,248 @@
+"""Mid-fit checkpoint/resume tests (DESIGN.md §13).
+
+The contract: a fit killed at any checkpointed cut — iteration boundary
+on every path, batch boundary on the sequential minibatch path — resumes
+to a final model BIT-EXACT with the uninterrupted run: same share words,
+same dealer counters, same online AND offline CommLog tallies. That
+holds because the checkpoint pins (a) the secret-shared state, (b) the
+cursor, and (c) the per-class consumed-request counts, from which every
+dealer's PCG64 streams are re-positioned with one jump per class.
+"""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.fit import FitCheckpointer, FitState
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+from repro.core.triples import TripleBank
+
+from test_wire import _assert_same_fit, _blobs, _run_two_party, _split
+
+
+def _resume_from(step: int, src_dir, tmp_path, cfg, a, b, dealer=None):
+    """Copy ONE published step into a fresh dir and resume from it (no
+    further saves — every=huge)."""
+    d2 = tmp_path / f"resume_{step}"
+    d2.mkdir()
+    shutil.copytree(os.path.join(src_dir, f"step_{step:010d}"),
+                    str(d2 / f"step_{step:010d}"))
+    ck = FitCheckpointer(str(d2), every=10**9)
+    return SecureKMeans(cfg).fit(a, b, checkpoint=ck, resume=True,
+                                 dealer=dealer)
+
+
+def _check_all_steps(cfg, a, b, tmp_path, *, batch_every=None,
+                     dealer_factory=None):
+    ref = SecureKMeans(cfg).fit(
+        a, b, dealer=dealer_factory() if dealer_factory else None)
+    d = str(tmp_path / "ck")
+    ck = FitCheckpointer(d, every=1, batch_every=batch_every, keep=0)
+    full = SecureKMeans(cfg).fit(
+        a, b, dealer=dealer_factory() if dealer_factory else None,
+        checkpoint=ck)
+    # checkpointing itself must not perturb the fit
+    _assert_same_fit(ref, full)
+    steps = ck.all_steps()
+    assert steps, "no checkpoints were published"
+    for s in steps:
+        res = _resume_from(s, d, tmp_path, cfg, a, b,
+                           dealer=dealer_factory() if dealer_factory
+                           else None)
+        _assert_same_fit(ref, res)
+        assert res.log.by_tag("offline") == ref.log.by_tag("offline"), s
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# full-batch: every offline mode, both partitions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("offline", ["on_demand", "pooled", "streamed"])
+@pytest.mark.parametrize("partition,sparse",
+                         [("vertical", False), ("horizontal", True)])
+def test_fullbatch_resume_bit_exact(tmp_path, offline, partition, sparse):
+    x = _blobs(48, 4, 2, seed=11, sparse_frac=0.5 if sparse else 0.0)
+    a, b = _split(x, partition)
+    cfg = KMeansConfig(k=2, iters=3, seed=5, partition=partition,
+                       sparse=sparse, offline=offline, backend="xla")
+    steps = _check_all_steps(cfg, a, b, tmp_path)
+    assert steps == [1_000_000, 2_000_000]   # boundaries only, never last
+
+
+# ---------------------------------------------------------------------------
+# minibatch: mid-iteration (sequential) and iteration-boundary (pipelined)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("partition", ["vertical", "horizontal"])
+def test_minibatch_batch_boundary_resume(tmp_path, partition):
+    """Sequential executor, checkpoint after EVERY batch: resume from a cut
+    in the middle of an iteration (partial accumulators + completed
+    batches' assignment shares restored)."""
+    x = _blobs(48, 4, 2, seed=11)
+    a, b = _split(x, partition)
+    cfg = KMeansConfig(k=2, iters=3, seed=5, partition=partition,
+                       offline="streamed", batch_size=16, pipeline=False,
+                       backend="xla")
+    steps = _check_all_steps(cfg, a, b, tmp_path, batch_every=1)
+    assert any(s % 1_000_000 for s in steps), "no mid-iteration cuts"
+
+
+@pytest.mark.parametrize("pipeline", [False, True])
+def test_minibatch_iteration_boundary_resume(tmp_path, pipeline):
+    x = _blobs(48, 4, 2, seed=11)
+    a, b = _split(x, "vertical")
+    cfg = KMeansConfig(k=2, iters=3, seed=5, partition="vertical",
+                       offline="streamed", batch_size=16,
+                       pipeline=pipeline, backend="xla")
+    _check_all_steps(cfg, a, b, tmp_path)
+
+
+def test_batch_checkpoint_on_pipelined_executor_rejected(tmp_path):
+    """Mid-iteration cuts are only canonical on the sequential executor;
+    the pipelined one merges batch t+1's traffic before batch t's post."""
+    x = _blobs(48, 4, 2, seed=11)
+    a, b = _split(x, "vertical")
+    cfg = KMeansConfig(k=2, iters=2, seed=5, partition="vertical",
+                       offline="streamed", batch_size=16, pipeline=True,
+                       backend="xla")
+    ck = FitCheckpointer(str(tmp_path / "ck"), every=1, batch_every=1)
+    with pytest.raises(ValueError, match="pipeline"):
+        SecureKMeans(cfg).fit(a, b, checkpoint=ck)
+
+
+# ---------------------------------------------------------------------------
+# bank-backed dealers: FIFO realignment on resume
+# ---------------------------------------------------------------------------
+
+def test_bank_fullbatch_resume(tmp_path):
+    x = _blobs(48, 4, 2, seed=11)
+    a, b = _split(x, "vertical")
+    cfg = KMeansConfig(k=2, iters=3, seed=5, partition="vertical",
+                       backend="xla")
+    km = SecureKMeans(cfg)
+    key, plan, _ = km.plan_fit(a.shape, b.shape)
+
+    def dealer_factory():
+        bank = TripleBank(seed=cfg.seed)
+        bank.provision(key, plan, copies=1)
+        return bank.dealer(key)
+
+    _check_all_steps(cfg, a, b, tmp_path, dealer_factory=dealer_factory)
+
+
+def test_bank_minibatch_resume(tmp_path):
+    x = _blobs(48, 4, 2, seed=11)
+    a, b = _split(x, "vertical")
+    cfg = KMeansConfig(k=2, iters=3, seed=5, partition="vertical",
+                       offline="streamed", batch_size=16, pipeline=True,
+                       backend="xla")
+    km = SecureKMeans(cfg)
+    key, plan, _ = km.plan_fit(a.shape, b.shape)
+
+    def dealer_factory():
+        bank = TripleBank(seed=cfg.seed)
+        bank.provision(key, plan, copies=1)
+        return bank.dealer(key)
+
+    _check_all_steps(cfg, a, b, tmp_path, dealer_factory=dealer_factory)
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+def test_resume_without_checkpoint_rejected():
+    x = _blobs(48, 4, 2, seed=11)
+    a, b = _split(x, "vertical")
+    cfg = KMeansConfig(k=2, iters=2, seed=5, backend="xla")
+    with pytest.raises(ValueError, match="resume"):
+        SecureKMeans(cfg).fit(a, b, resume=True)
+
+
+def test_fingerprint_mismatch_rejected(tmp_path):
+    x = _blobs(48, 4, 2, seed=11)
+    a, b = _split(x, "vertical")
+    d = str(tmp_path / "ck")
+    cfg1 = KMeansConfig(k=2, iters=3, seed=5, backend="xla")
+    SecureKMeans(cfg1).fit(a, b, checkpoint=FitCheckpointer(d, every=1))
+    cfg2 = KMeansConfig(k=2, iters=3, seed=6, backend="xla")
+    with pytest.raises(ValueError, match="fingerprint"):
+        SecureKMeans(cfg2).fit(a, b, checkpoint=FitCheckpointer(d),
+                               resume=True)
+
+
+def test_tmp_dirs_and_gc(tmp_path):
+    d = str(tmp_path / "ck")
+    ck = FitCheckpointer(d, every=1, keep=2)
+    for it in (1, 2, 3, 4):
+        ck.save(FitState(iteration=it, batch=0,
+                         mu0=np.zeros((2, 4), np.uint64),
+                         mu1=np.zeros((2, 4), np.uint64),
+                         counters={"n_matmul": 0, "n_mul": 0, "n_bin": 0},
+                         comm={"bytes": [], "rounds": []}, advance={}))
+    # a torn writer's tmp dir must be invisible to discovery
+    os.makedirs(os.path.join(d, "step_0000000099.tmp"))
+    assert ck.all_steps() == [3_000_000, 4_000_000]   # keep=2 pruned 1, 2
+    assert ck.latest().iteration == 4
+
+
+# ---------------------------------------------------------------------------
+# killed mid-fit — in-process and as two real processes over TCP
+# ---------------------------------------------------------------------------
+
+class _Die(BaseException):
+    """Out-of-band kill signal the fit loop cannot catch as Exception."""
+
+
+def test_killed_fit_resumes_bit_exact(tmp_path):
+    x = _blobs(48, 4, 2, seed=11)
+    a, b = _split(x, "vertical")
+    cfg = KMeansConfig(k=2, iters=3, seed=5, offline="pooled",
+                       backend="xla")
+    ref = SecureKMeans(cfg).fit(a, b)
+
+    d = str(tmp_path / "ck")
+
+    def kill_at_1(state, _path):
+        if state.iteration == 1:
+            raise _Die
+
+    with pytest.raises(_Die):
+        SecureKMeans(cfg).fit(
+            a, b, checkpoint=FitCheckpointer(d, every=1,
+                                             after_save=kill_at_1))
+    res = SecureKMeans(cfg).fit(a, b, checkpoint=FitCheckpointer(d),
+                                resume=True)
+    _assert_same_fit(ref, res)
+    assert res.log.by_tag("offline") == ref.log.by_tag("offline")
+
+
+def test_two_process_kill_and_resume_bit_exact(tmp_path):
+    """The full acceptance path: party A dies (os._exit) right after the
+    iteration-1 checkpoint publishes, a fresh A+B pair resumes, and the
+    final npz equals a clean two-process run's."""
+    import json
+    ckdir = str(tmp_path / "ck")
+    clean = str(tmp_path / "clean.npz")
+    resumed = str(tmp_path / "resumed.npz")
+    rc, out, _rb, _bo = _run_two_party(
+        ["--iters", "3", "--out", clean])
+    assert rc == 0, out
+    rc, out, _rb, _bo = _run_two_party(
+        ["--iters", "3", "--checkpoint-dir", ckdir, "--die-at-iter", "1"])
+    assert rc == 17, out                 # scripted crash, post-publish
+    assert "DYING" in out
+    rc, out, _rb, _bo = _run_two_party(
+        ["--iters", "3", "--checkpoint-dir", ckdir, "--resume",
+         "--out", resumed])
+    assert rc == 0, out
+    zc, zr = np.load(clean), np.load(resumed)
+    for k in ("mu0", "mu1", "c0", "c1", "p0", "p1"):
+        np.testing.assert_array_equal(zc[k], zr[k])
+    mc = json.loads(bytes(zc["meta"]))
+    mr = json.loads(bytes(zr["meta"]))
+    assert mc["counters"] == mr["counters"]
+    assert mc["fit_online"] == mr["fit_online"]
+    assert mc["predict_online"] == mr["predict_online"]

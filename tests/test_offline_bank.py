@@ -321,3 +321,70 @@ def test_he2ss_layout_slot_capacity():
             assert lay.g * lay.rpc * lay.slot_bits <= SimulatedPHE().plain_bits
             assert lay.g >= 1 and lay.rpc >= 1
             assert lay.ngrp == -(-k // lay.g)
+
+
+# ---------------------------------------------------------------------------
+# bank file integrity: refuse damaged or foreign archives
+# ---------------------------------------------------------------------------
+
+def _tiny_saved_bank(td):
+    km = SecureKMeans(KMeansConfig(k=2, iters=1, seed=3))
+    key, plan, _ = km.plan_fit((12, 2), (12, 2))
+    bank = TripleBank(seed=3)
+    bank.provision(key, plan)
+    path = os.path.join(td, "bank.npz")
+    bank.save(path)
+    return path
+
+
+def test_bank_load_rejects_bit_flip():
+    with tempfile.TemporaryDirectory() as td:
+        path = _tiny_saved_bank(td)
+        raw = bytearray(open(path, "rb").read())
+        # flip one bit inside the zip's data region (past local headers);
+        # either an array CRC32 or the zip's own CRC must catch it
+        raw[len(raw) // 2] ^= 0x10
+        open(path, "wb").write(bytes(raw))
+        with pytest.raises(ValueError, match="TripleBank"):
+            TripleBank.load(path)
+
+
+def test_bank_load_rejects_truncation():
+    with tempfile.TemporaryDirectory() as td:
+        path = _tiny_saved_bank(td)
+        raw = open(path, "rb").read()
+        open(path, "wb").write(raw[:len(raw) // 2])
+        with pytest.raises(ValueError, match="TripleBank"):
+            TripleBank.load(path)
+
+
+def test_bank_load_rejects_foreign_npz():
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "foreign.npz")
+        np.savez(path, x=np.arange(8))
+        with pytest.raises(ValueError, match="manifest"):
+            TripleBank.load(path)
+
+
+def test_bank_load_rejects_wrong_version():
+    import json
+    import zlib as _zlib
+    with tempfile.TemporaryDirectory() as td:
+        path = _tiny_saved_bank(td)
+        with np.load(path) as z:
+            arrays = {k: z[k] for k in z.files}
+        manifest = json.loads(bytes(arrays.pop("manifest")).decode())
+        manifest["version"] = 99
+        with open(path, "wb") as f:
+            np.savez(f, manifest=np.frombuffer(
+                json.dumps(manifest).encode(), np.uint8), **arrays)
+        with pytest.raises(ValueError, match="version"):
+            TripleBank.load(path)
+
+
+def test_bank_load_rejects_garbage_file():
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "junk.npz")
+        open(path, "wb").write(b"this is not an npz archive at all")
+        with pytest.raises(ValueError, match="TripleBank"):
+            TripleBank.load(path)

@@ -388,3 +388,51 @@ def test_fraud_secure_scoring_matches_revealed_model_quality():
     f_rev = detect_outliers(rev, 0.02)
     assert jaccard(f_sec, f_rev) > 0.8
     assert jaccard(f_sec, ds.y_outlier) > 0.4
+
+
+# ---------------------------------------------------------------------------
+# drain failure policy: bounded retries, error responses, no livelock
+# ---------------------------------------------------------------------------
+
+def test_poisoned_request_cannot_livelock_drain():
+    """A request whose geometry breaks its launch resolves as an ERROR
+    response after bounded retries — it must neither spin the drain
+    forever nor ride the queue into every later drain."""
+    km, res = _fitted("vertical", False)
+    svc = ScoringService(km, res, rungs=(8,), with_scores=True,
+                         d_a=2, d_b=2, max_attempts=3)
+    _, qa, qb = _batch("vertical", False, m=4, seed=100)
+    good1 = svc.submit(qa, qb)
+    # poison: wrong feature width (submit only validates row counts);
+    # 5 + 4 rows > the 8-rung, so it cannot coalesce with a good request
+    bad = svc.submit(np.zeros((5, 3)), np.zeros((5, 2)))
+    _, qa2, qb2 = _batch("vertical", False, m=5, seed=101)
+    good2 = svc.submit(qa2, qb2)
+
+    responses = svc.drain()
+    assert [r.request_id for r in responses] == [good1, bad, good2]
+    by_id = {r.request_id: r for r in responses}
+    assert by_id[bad].error is not None and by_id[bad].rows == 0
+    assert by_id[good1].error is None and by_id[good1].labels.shape == (4,)
+    assert by_id[good2].error is None and by_id[good2].labels.shape == (5,)
+    # the poisoned request is DONE: nothing left to livelock on
+    assert svc.pending() == 0
+    assert svc.stats.failed_requests == 1
+    assert svc.stats.retried_groups == 2          # attempts 2 and 3
+    assert svc.drain() == []
+
+
+def test_error_responses_match_direct_scoring_for_survivors():
+    """Requests coalesced AWAY from the poisoned group score normally."""
+    km, res = _fitted("vertical", False)
+    svc = ScoringService(km, res, rungs=(8,), with_scores=True,
+                         d_a=2, d_b=2, max_attempts=2)
+    _, qa, qb = _batch("vertical", False, m=6, seed=200)
+    good = svc.submit(qa, qb)
+    svc.submit(np.zeros((7, 3)), np.zeros((7, 2)))   # own group (8-rung)
+    responses = svc.drain()
+    ok = [r for r in responses if r.error is None]
+    assert [r.request_id for r in ok] == [good]
+    direct = km.score(qa, qb, res)
+    np.testing.assert_array_equal(ok[0].labels, direct.labels_plain())
+    assert svc.stats.failed_requests == 1
