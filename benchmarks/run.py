@@ -22,9 +22,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_online_offline, fig3_vectorization,
-                            fig4_sparse, kernel_bench, offline_bench,
-                            online_offline, pipeline_bench, q5_fraud,
-                            serve_bench, table1_2, wire_bench)
+                            fig4_sparse, kernel_bench, load_bench,
+                            offline_bench, online_offline, pipeline_bench,
+                            q5_fraud, serve_bench, table1_2, wire_bench)
 
     suites = {
         "table1_2_runtime_comm": lambda: table1_2.run(quick=args.quick),
@@ -60,6 +60,12 @@ def main() -> None:
         # (bit-exact asserted), measured wall next to the NetModel
         # prediction, persisted to benchmarks/BENCH_wire.json
         "wire": lambda: wire_bench.run(quick=args.quick),
+        # `--only load --quick` is the serving-plane smoke: open-loop
+        # offered loads at 0.5x/1x/2x the closed-loop base rate (shed
+        # rate, p99, replenish-stall occupancy) plus a two-process
+        # kill/restart chaos leg (exactly-once, bit-exact), persisted to
+        # benchmarks/BENCH_load.json
+        "load": lambda: load_bench.run(quick=args.quick),
     }
     derived_fns = {
         "table1_2_runtime_comm": table1_2.derived,
@@ -73,6 +79,7 @@ def main() -> None:
         "pipeline": pipeline_bench.derived,
         "offline": offline_bench.derived,
         "wire": wire_bench.derived,
+        "load": load_bench.derived,
     }
     if args.only:
         keep = set(args.only.split(","))

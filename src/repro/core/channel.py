@@ -14,7 +14,10 @@ Two layers live here (DESIGN.md §13):
   a deterministic schedule. `ReliableChannel`/`Responder` layer
   request/response reliability on top (retries with exponential backoff +
   jitter, per-op deadlines, idempotent receive via sequence-number
-  dedup, heartbeat liveness), and `WireSession` plugs into `CommLog`:
+  dedup, heartbeat liveness); with a session `auth_key` both replace the
+  CRC with a keyed BLAKE2b MAC (constant-time verified) so tampered or
+  unkeyed frames are rejected like corruption. `WireSession` plugs into
+  `CommLog`:
   when a log has a wire attached, every online `send`/`merge` ships its
   byte count as real frames to the peer process and counts the tally
   from the payload bytes that actually crossed — so a two-process fit
@@ -23,6 +26,8 @@ Two layers live here (DESIGN.md §13):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import hmac
 import io
 import json
 import struct
@@ -189,7 +194,11 @@ T_EXCHANGE = 1     # payload: u32 reply_len + engine's half of the round
 T_BLOB = 2         # payload: u32 json_len + json meta + npz raw
 T_HEARTBEAT = 3    # liveness probe, empty payload both ways
 T_BYE = 4          # orderly shutdown of the responder loop
+T_SCORE = 5        # scoring request: blob of {rid, deadline_s} + x_a/x_b
 RESP_BIT = 0x80
+
+# keyed frames replace the CRC32 with a BLAKE2b MAC appended to the payload
+AUTH_TAG_BYTES = 16
 
 
 class FrameError(ValueError):
@@ -212,13 +221,42 @@ def _crc(ftype: int, seq: int, payload) -> int:
     return zlib.crc32(payload, zlib.crc32(struct.pack(">BQ", ftype, seq)))
 
 
-def encode_frame(ftype: int, seq: int, payload: bytes = b"") -> bytes:
-    return _HEADER.pack(FRAME_MAGIC, ftype, seq, len(payload),
-                        _crc(ftype, seq, payload)) + payload
+def session_key(passphrase: str | bytes) -> bytes:
+    """Derive a 32-byte wire session key from a shared passphrase (what
+    `--auth-key` feeds). Key agreement itself is out of scope — the paper's
+    deployment assumes the two parties share credentials out of band."""
+    raw = passphrase.encode() if isinstance(passphrase, str) else passphrase
+    return hashlib.blake2b(raw, digest_size=32).digest()
 
 
-def decode_frame(buf: bytes) -> tuple[int, int, bytes]:
-    """Decode ONE complete frame; raises `FrameError`/`FrameCorrupt`."""
+def _mac(key: bytes, ftype: int, seq: int, payload: bytes) -> bytes:
+    """Keyed BLAKE2b MAC over (type, seq, payload) — same coverage as the
+    CRC, but unforgeable without the session key. The sequence number is
+    inside the MAC, so a tampered frame can't be replayed under a
+    different seq either."""
+    return hashlib.blake2b(struct.pack(">BQ", ftype, seq) + payload,
+                           key=key, digest_size=AUTH_TAG_BYTES).digest()
+
+
+def encode_frame(ftype: int, seq: int, payload: bytes = b"", *,
+                 key: bytes | None = None) -> bytes:
+    """Encode one frame. With a session `key`, the CRC32 is REPLACED by a
+    keyed MAC: the tag is appended to the payload and the header checksum
+    field is zeroed, so keyed and unkeyed endpoints reject each other's
+    frames the same way they reject corruption."""
+    if key is None:
+        return _HEADER.pack(FRAME_MAGIC, ftype, seq, len(payload),
+                            _crc(ftype, seq, payload)) + payload
+    body = payload + _mac(key, ftype, seq, payload)
+    return _HEADER.pack(FRAME_MAGIC, ftype, seq, len(body), 0) + body
+
+
+def decode_frame(buf: bytes, *,
+                 key: bytes | None = None) -> tuple[int, int, bytes]:
+    """Decode ONE complete frame; raises `FrameError`/`FrameCorrupt`.
+    With a session `key`, the trailing MAC is verified (constant-time)
+    instead of the CRC; unkeyed or tampered frames fail exactly like
+    corrupt ones and are dropped/resent by the reliability layer."""
     if len(buf) < HEADER_BYTES:
         raise FrameError(f"short frame: {len(buf)} < header {HEADER_BYTES}")
     magic, ftype, seq, length, crc = _HEADER.unpack_from(buf)
@@ -227,28 +265,40 @@ def decode_frame(buf: bytes) -> tuple[int, int, bytes]:
     if length > MAX_FRAME_PAYLOAD or len(buf) != HEADER_BYTES + length:
         raise FrameCorrupt(
             f"length field {length} vs actual {len(buf) - HEADER_BYTES}")
-    payload = buf[HEADER_BYTES:]
-    if _crc(ftype, seq, payload) != crc:
+    body = buf[HEADER_BYTES:]
+    if key is not None:
+        if length < AUTH_TAG_BYTES:
+            raise FrameCorrupt(f"unauthenticated frame on seq {seq} "
+                               "(no MAC tag)")
+        payload, tag = body[:-AUTH_TAG_BYTES], body[-AUTH_TAG_BYTES:]
+        if not hmac.compare_digest(tag, _mac(key, ftype, seq, payload)):
+            raise FrameCorrupt(f"MAC mismatch on seq {seq}")
+        return ftype, seq, payload
+    if _crc(ftype, seq, body) != crc:
         raise FrameCorrupt(f"crc mismatch on seq {seq}")
-    return ftype, seq, payload
+    return ftype, seq, body
 
 
 class FrameDecoder:
     """Incremental frame parser over an arbitrary byte stream: `feed`
     chunks of any size (split reads welcome) and collect complete frames.
-    CRC-corrupt frames are dropped and counted (`crc_errors`); a bad magic
-    means the byte stream itself desynced — unrecoverable without a
+    Integrity-failed frames are dropped and counted (`crc_errors`; keyed
+    decoders additionally count MAC failures in `auth_errors`); a bad
+    magic means the byte stream itself desynced — unrecoverable without a
     reconnect — so it raises `FrameError`."""
 
-    def __init__(self) -> None:
+    def __init__(self, key: bytes | None = None) -> None:
         self._buf = bytearray()
+        self.key = key
         self.crc_errors = 0
+        self.auth_errors = 0
 
     def feed(self, data: bytes) -> list[tuple[int, int, bytes]]:
         self._buf += data
         out = []
         while len(self._buf) >= HEADER_BYTES:
-            magic, ftype, seq, length, crc = _HEADER.unpack_from(self._buf)
+            magic, _ftype, _seq, length, _crc_f = _HEADER.unpack_from(
+                self._buf)
             if magic != FRAME_MAGIC:
                 raise FrameError(f"bad magic {magic:#x}: stream desync")
             if length > MAX_FRAME_PAYLOAD:
@@ -256,12 +306,14 @@ class FrameDecoder:
             end = HEADER_BYTES + length
             if len(self._buf) < end:
                 break
-            payload = bytes(self._buf[HEADER_BYTES:end])
+            frame = bytes(self._buf[:end])
             del self._buf[:end]
-            if _crc(ftype, seq, payload) != crc:
+            try:
+                out.append(decode_frame(frame, key=self.key))
+            except FrameCorrupt:
                 self.crc_errors += 1
-                continue
-            out.append((ftype, seq, payload))
+                if self.key is not None:
+                    self.auth_errors += 1
         return out
 
     def pending(self) -> int:
@@ -658,8 +710,9 @@ class ReliableChannel:
     def __init__(self, transport: Transport, *, deadline_s: float = 30.0,
                  try_timeout_s: float = 0.5, max_retries: int = 10,
                  backoff_s: float = 0.02, backoff_max_s: float = 0.5,
-                 jitter_seed: int = 7):
+                 jitter_seed: int = 7, auth_key: bytes | None = None):
         self.t = transport
+        self.auth_key = auth_key
         self.deadline_s = float(deadline_s)
         self.try_timeout_s = float(try_timeout_s)
         self.max_retries = int(max_retries)
@@ -675,7 +728,7 @@ class ReliableChannel:
                 deadline_s: float | None = None) -> bytes:
         seq = self._seq
         self._seq += 1
-        frame = encode_frame(ftype, seq, payload)
+        frame = encode_frame(ftype, seq, payload, key=self.auth_key)
         want = ftype | RESP_BIT
         deadline = time.monotonic() + (self.deadline_s if deadline_s is None
                                        else float(deadline_s))
@@ -698,9 +751,10 @@ class ReliableChannel:
                     except TimeoutError:
                         break
                     try:
-                        ft, rseq, rpayload = decode_frame(raw)
+                        ft, rseq, rpayload = decode_frame(
+                            raw, key=self.auth_key)
                     except FrameError:
-                        self.crc_drops += 1        # corrupt: wait/resend
+                        self.crc_drops += 1   # corrupt/forged: wait/resend
                         continue
                     if ft == want and rseq == seq:
                         return rpayload
@@ -725,14 +779,17 @@ class Responder:
     redelivered request — duplicate frame, or a resend after the response
     was lost — is answered from the cache WITHOUT re-invoking the handler.
     A request older than the cache is a late duplicate and is dropped.
-    CRC-corrupt frames are discarded (the engine resends). Silence beyond
-    `idle_timeout_s` raises `WireTimeout` — the engine's heartbeats are
-    what keep a long offline phase alive."""
+    CRC-corrupt frames are discarded (the engine resends); with an
+    `auth_key`, tampered or unkeyed frames are dropped the same way.
+    Silence beyond `idle_timeout_s` raises `WireTimeout` — the engine's
+    heartbeats are what keep a long offline phase alive."""
 
     def __init__(self, transport: Transport, handler, *,
-                 idle_timeout_s: float = 120.0):
+                 idle_timeout_s: float = 120.0,
+                 auth_key: bytes | None = None):
         self.t = transport
         self.handler = handler
+        self.auth_key = auth_key
         self.idle_timeout_s = float(idle_timeout_s)
         self.crc_drops = 0
         self.stale_drops = 0
@@ -774,7 +831,7 @@ class Responder:
                 continue
             last_frame = time.monotonic()
             try:
-                ftype, seq, payload = decode_frame(raw)
+                ftype, seq, payload = decode_frame(raw, key=self.auth_key)
             except FrameError:
                 self.crc_drops += 1
                 continue
@@ -788,7 +845,8 @@ class Responder:
                 self.stale_drops += 1              # late duplicate
                 continue
             resp_payload = self.handler(ftype, payload)
-            resp = encode_frame(ftype | RESP_BIT, seq, resp_payload)
+            resp = encode_frame(ftype | RESP_BIT, seq, resp_payload,
+                                key=self.auth_key)
             self._last_seq, self._last_resp = seq, resp
             self.served += 1
             self._reply(resp)
@@ -873,7 +931,8 @@ class WireSession:
 
 
 def serve_peer(transport: Transport, *, on_blob=None,
-               idle_timeout_s: float = 120.0) -> Responder:
+               idle_timeout_s: float = 120.0,
+               auth_key: bytes | None = None) -> Responder:
     """Run the data-party (responder) loop until the engine says BYE.
 
     EXCHANGE requests are answered with the requested echo half; BLOB
@@ -892,6 +951,7 @@ def serve_peer(transport: Transport, *, on_blob=None,
             return _pack_blob(out_meta, out_arrays)
         return b""                                 # heartbeat / bye
 
-    r = Responder(transport, handler, idle_timeout_s=idle_timeout_s)
+    r = Responder(transport, handler, idle_timeout_s=idle_timeout_s,
+                  auth_key=auth_key)
     r.serve_forever()
     return r

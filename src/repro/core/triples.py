@@ -43,6 +43,7 @@ Every request is tagged so the offline cost decomposes per Lloyd step.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import NamedTuple
 
@@ -1237,6 +1238,16 @@ class TripleBank:
     per-class RNG states via one `np.savez` archive, so a reloaded bank
     serves the exact words the original would have — and replenishes from
     the same stream positions.
+
+    Thread safety: a standing `BankReplenisher` daemon may top the bank up
+    while serving threads draw from it. Two locks split the contention:
+    `_gen_lock` serializes every per-class STREAM advance (two concurrent
+    generations from the same snapshot would fork a class stream and serve
+    the same mask words twice — a correctness *and* privacy bug), while
+    the short-critical-section `_lock` guards the queues and counters so
+    the hot-path pop never waits behind a long generation unless the shelf
+    is actually empty. Lock order is `_gen_lock` → `_lock`; nothing
+    acquires `_gen_lock` while holding `_lock`.
     """
 
     def __init__(self, seed: int = 0, auto_replenish: bool = True,
@@ -1247,38 +1258,45 @@ class TripleBank:
         self._rngs: dict[tuple, np.random.Generator] = {}
         self._queues: dict[tuple, list] = {}
         self._plans: dict[tuple, TriplePlan] = {}
+        self._lock = threading.RLock()       # queues + counters
+        self._gen_lock = threading.RLock()   # per-class stream advance
         self.modelled_ot_seconds = 0.0
         self.gen_seconds = 0.0
         self.replenish_seconds = 0.0
         self.replenish_events = 0
         self.pool_bytes = 0              # live (unserved) device bytes
         self.served_requests = 0
+        self.consumed_class: dict[tuple, int] = {}   # lifetime pops per class
 
     # -- provisioning ----------------------------------------------------
     def _gen(self, counts: dict, workers: int = 1) -> None:
         t0 = time.perf_counter()
-        for key in counts:
-            self._rngs.setdefault(key, _class_rng(self.seed, key))
-        if workers <= 1 or len(counts) == 0:
-            pools, nbytes = _gen_tranche(self._rngs, counts)
-            for key, entries in pools.items():
-                self._queues.setdefault(key, []).extend(entries)
-            self.pool_bytes += nbytes
-        else:
-            items = _provision_items(counts, workers)
-            # snapshot the CURRENT stream positions: chunks are offsets
-            # relative to where the serial draw would start
-            states = {key: self._rngs[key].bit_generator.state
-                      for key in counts}
-            for (key, _start, _cnt), (entries, nbytes) in zip(
-                    items, _run_provision_items(items, states, workers)):
-                self._queues.setdefault(key, []).extend(entries)
-                self.pool_bytes += nbytes
-            # master streams end exactly where one stacked draw would
-            for key, count in counts.items():
-                self._rngs[key].bit_generator.advance(
-                    int(count) * _class_words(key))
-        self.gen_seconds += time.perf_counter() - t0
+        with self._gen_lock:
+            for key in counts:
+                self._rngs.setdefault(key, _class_rng(self.seed, key))
+            if workers <= 1 or len(counts) == 0:
+                pools, nbytes = _gen_tranche(self._rngs, counts)
+                with self._lock:
+                    for key, entries in pools.items():
+                        self._queues.setdefault(key, []).extend(entries)
+                    self.pool_bytes += nbytes
+            else:
+                items = _provision_items(counts, workers)
+                # snapshot the CURRENT stream positions: chunks are offsets
+                # relative to where the serial draw would start
+                states = {key: self._rngs[key].bit_generator.state
+                          for key in counts}
+                results = _run_provision_items(items, states, workers)
+                with self._lock:
+                    for (key, _start, _cnt), (entries, nbytes) in zip(
+                            items, results):
+                        self._queues.setdefault(key, []).extend(entries)
+                        self.pool_bytes += nbytes
+                # master streams end exactly where one stacked draw would
+                for key, count in counts.items():
+                    self._rngs[key].bit_generator.advance(
+                        int(count) * _class_words(key))
+            self.gen_seconds += time.perf_counter() - t0
 
     def provision(self, key, plan: TriplePlan, copies: int = 1,
                   workers: int = 1) -> None:
@@ -1295,7 +1313,8 @@ class TripleBank:
         The produced words are bit-identical to the serial draw for ANY
         worker count and completion order (property-tested)."""
         key = tuple(key)
-        self._plans[key] = TriplePlan(list(plan.requests))
+        with self._lock:
+            self._plans[key] = TriplePlan(list(plan.requests))
         if copies > 0:
             counts = {ck: c * int(copies)
                       for ck, c in plan.class_counts().items()}
@@ -1304,11 +1323,25 @@ class TripleBank:
                 plan.repeat(copies), self.log)
 
     def keys(self) -> list:
-        return list(self._plans)
+        with self._lock:
+            return list(self._plans)
 
     def stock(self) -> dict:
         """{class_key: unserved request count} across the whole bank."""
-        return {k: len(q) for k, q in self._queues.items()}
+        with self._lock:
+            return {k: len(q) for k, q in self._queues.items()}
+
+    def stock_copies(self, key) -> int:
+        """Complete executions of `key`'s registered plan in stock: the
+        min over its classes of shelf depth // per-execution count."""
+        key = tuple(key)
+        with self._lock:
+            plan = self._plans[key]
+            counts = plan.class_counts()
+            if not counts:
+                return 0
+            return min(len(self._queues.get(ck, ())) // c
+                       for ck, c in counts.items())
 
     def dealer(self, key, log: CommLog | None = None) -> "BankDealer":
         key = tuple(key)
@@ -1319,33 +1352,79 @@ class TripleBank:
 
     # -- serving ---------------------------------------------------------
     def _pop(self, class_key: tuple, plan_key: tuple) -> tuple:
-        q = self._queues.get(class_key)
-        if not q:
+        while True:
+            with self._lock:
+                q = self._queues.get(class_key)
+                if q:
+                    out = q.pop(0)
+                    self.pool_bytes -= sum(int(np.asarray(a).size) * 8
+                                           for a in out)
+                    self.served_requests += 1
+                    self.consumed_class[class_key] = \
+                        self.consumed_class.get(class_key, 0) + 1
+                    return out
+            # shelf empty: regenerate OUTSIDE the queue lock (generation is
+            # long), then retry — a racing daemon top-up may beat us to it
             self._replenish(class_key, plan_key)
-            q = self._queues[class_key]
-        out = q.pop(0)
-        self.pool_bytes -= sum(int(np.asarray(a).size) * 8 for a in out)
-        self.served_requests += 1
-        return out
 
     def _replenish(self, class_key: tuple, plan_key: tuple) -> None:
         """Stock-out handling: regenerate the requesting key's whole plan
         (keeping its classes aligned for the next request) — or, for a
         class the plan never mentions, a single emergency request. Raises
-        `PoolExhaustedError` only when replenishment is disabled."""
+        `PoolExhaustedError` only when replenishment is disabled.
+
+        Serialized on `_gen_lock` against daemon top-ups: by the time the
+        lock is held, a concurrent generation may already have restocked
+        the shelf — then the wait was the whole stall (counted, no event)
+        and no words are drawn."""
         if not self.auto_replenish:
             raise PoolExhaustedError(
                 f"TripleBank stock-out for {class_key}: provisioned pool "
                 "consumed and auto_replenish=False")
         t0 = time.perf_counter()
-        plan = self._plans.get(tuple(plan_key))
-        if plan is not None and class_key in plan.class_counts():
-            self._gen(plan.class_counts())
-            self.modelled_ot_seconds += _account_offline_plan(plan, self.log)
-        else:
-            self._gen({class_key: 1})
-        self.replenish_events += 1
-        self.replenish_seconds += time.perf_counter() - t0
+        with self._gen_lock:
+            with self._lock:
+                restocked = bool(self._queues.get(class_key))
+                plan = self._plans.get(tuple(plan_key))
+            if restocked:
+                self.replenish_seconds += time.perf_counter() - t0
+                return
+            if plan is not None and class_key in plan.class_counts():
+                self._gen(plan.class_counts())
+                self.modelled_ot_seconds += _account_offline_plan(
+                    plan, self.log)
+            else:
+                self._gen({class_key: 1})
+            self.replenish_events += 1
+            self.replenish_seconds += time.perf_counter() - t0
+
+    def consumed_counts(self) -> dict:
+        """Cumulative per-class consumed-request counts (a copy) — what a
+        `ServeCheckpointer` journals so a restart can `discard` its way
+        back to the exact stream positions."""
+        with self._lock:
+            return dict(self.consumed_class)
+
+    def discard(self, counts: dict) -> None:
+        """Pop and DROP `counts[class_key]` requests per class — restart
+        realignment. A reloaded bank's FIFOs sit at the provision-time
+        snapshot; the requests a previous incarnation already consumed
+        (journaled as cumulative per-class counts) are drained here before
+        serving resumes, so no word is ever served twice across a crash.
+        Exact because a class's served words are always the same stream
+        prefix regardless of when (or under which plan) generation ran —
+        popping past the journaled counts lands every stream exactly where
+        the dead process left it."""
+        for class_key in sorted(counts):
+            n = int(counts[class_key])
+            if n <= 0:
+                continue
+            with self._lock:
+                plan_key = next(
+                    (pk for pk, plan in self._plans.items()
+                     if class_key in plan.class_counts()), class_key)
+            for _ in range(n):
+                self._pop(class_key, plan_key)
 
     # -- persistence -----------------------------------------------------
     BANK_FORMAT = "repro.triplebank"
@@ -1364,24 +1443,27 @@ class TripleBank:
         import zlib
         classes = []
         arrays = {}
-        # every class with an RNG is saved, queued stock or not: stream
-        # position is state even when the shelf is empty
-        all_keys = set(self._rngs) | set(self._queues)
-        for i, key in enumerate(sorted(all_keys)):
-            q = self._queues.get(key, [])
-            rng = self._rngs.get(key) or _class_rng(self.seed, key)
-            n_slots = _SLOTS[key[0]]
-            for s in range(n_slots):
-                if q:
-                    arrays[f"c{i}_s{s}"] = np.stack(
-                        [np.asarray(t[s], np.uint64) for t in q])
-            classes.append({"key": _key_to_str(key), "count": len(q),
-                            "rng_state": rng.bit_generator.state})
-        plans = {
-            _key_to_str(k): [[r.kind, list(r.shape) if r.kind != "matmul"
-                              else [list(r.shape[0]), list(r.shape[1])],
-                              r.tag] for r in plan.requests]
-            for k, plan in self._plans.items()}
+        with self._gen_lock, self._lock:
+            # every class with an RNG is saved, queued stock or not: stream
+            # position is state even when the shelf is empty; both locks
+            # make the (queues, stream positions) snapshot consistent
+            # against a concurrent daemon top-up
+            all_keys = set(self._rngs) | set(self._queues)
+            for i, key in enumerate(sorted(all_keys)):
+                q = self._queues.get(key, [])
+                rng = self._rngs.get(key) or _class_rng(self.seed, key)
+                n_slots = _SLOTS[key[0]]
+                for s in range(n_slots):
+                    if q:
+                        arrays[f"c{i}_s{s}"] = np.stack(
+                            [np.asarray(t[s], np.uint64) for t in q])
+                classes.append({"key": _key_to_str(key), "count": len(q),
+                                "rng_state": rng.bit_generator.state})
+            plans = {
+                _key_to_str(k): [[r.kind, list(r.shape) if r.kind != "matmul"
+                                  else [list(r.shape[0]), list(r.shape[1])],
+                                  r.tag] for r in plan.requests]
+                for k, plan in self._plans.items()}
         checksums = {name: zlib.crc32(np.ascontiguousarray(a).tobytes())
                      for name, a in arrays.items()}
         manifest = {"format": self.BANK_FORMAT, "version": self.BANK_VERSION,
@@ -1476,6 +1558,109 @@ class TripleBank:
                     for kind, shape, tag in reqs]
             bank._plans[_key_from_str(kstr)] = TriplePlan(reqs)
         return bank
+
+
+class BankReplenisher:
+    """Standing top-up daemon for a `TripleBank`: a background thread that
+    watches per-plan stock and regenerates BEFORE the hot path runs dry,
+    so steady-state replenishment leaves the online path entirely.
+
+    Policy: whenever a registered plan key's complete-execution stock
+    (`bank.stock_copies`) falls to `low_water` or below, provision enough
+    copies to restore `high_water`. Generation happens on this thread
+    under the bank's `_gen_lock`, so a top-up can never fork a class
+    stream against a hot-path synchronous replenish — and because every
+    class FIFO is only ever extended with its own stream's next words,
+    the words SERVED are bit-exact with a purely synchronous bank no
+    matter how daemon and hot-path generation interleave (property-
+    tested). If the daemon falls behind, `TripleBank._pop` still degrades
+    gracefully to the PR-4 synchronous replenish with its stall
+    accounting intact.
+
+    A generation failure is recorded (`errors`, `last_error`) and the
+    daemon keeps polling — the service must keep serving off the
+    synchronous path rather than die with its supervisor."""
+
+    def __init__(self, bank: TripleBank, *, low_water: int = 1,
+                 high_water: int | None = None, poll_s: float = 0.002,
+                 workers: int = 1, keys=None):
+        self.bank = bank
+        self.low_water = max(0, int(low_water))
+        self.high_water = int(high_water) if high_water is not None \
+            else max(self.low_water + 1, 2 * self.low_water)
+        if self.high_water <= self.low_water:
+            raise ValueError(
+                f"high_water ({self.high_water}) must exceed low_water "
+                f"({self.low_water}) or the daemon top-up never gains stock")
+        self.poll_s = float(poll_s)
+        self.workers = int(workers)
+        self._keys = None if keys is None else [tuple(k) for k in keys]
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.topups = 0                 # top-up passes that generated
+        self.topup_copies = 0           # plan executions generated
+        self.topup_seconds = 0.0        # daemon-side generation wall
+        self.errors = 0
+        self.last_error: BaseException | None = None
+
+    # -- one scan over the registered plans ------------------------------
+    def poll_once(self) -> int:
+        """Scan every watched key; top up those at/below the low-water
+        mark. Returns the number of plan copies generated."""
+        made = 0
+        keys = self._keys if self._keys is not None else self.bank.keys()
+        for key in keys:
+            if self._stop.is_set():
+                break
+            with self.bank._lock:
+                plan = self.bank._plans.get(tuple(key))
+            if plan is None:
+                continue
+            have = self.bank.stock_copies(key)
+            if have > self.low_water:
+                continue
+            need = self.high_water - have
+            t0 = time.perf_counter()
+            self.bank.provision(key, plan, copies=need, workers=self.workers)
+            self.topup_seconds += time.perf_counter() - t0
+            self.topups += 1
+            self.topup_copies += need
+            made += need
+        return made
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.poll_once()
+            except Exception as e:        # noqa: BLE001 — daemon must live
+                self.errors += 1
+                self.last_error = e
+            self._stop.wait(self.poll_s)
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> "BankReplenisher":
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._loop, name="bank-replenisher", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def __enter__(self) -> "BankReplenisher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
 
 
 class BankDealer(_TripleServing):

@@ -17,10 +17,21 @@ provisions the FIT plan into the bank too (plan_fit) and fits from the
 provisioned tranches, so the online fit does zero generation work;
 `--provision-workers N` splits all provisioning across N threads
 (bit-exact with serial — per-class streams).
+
+`--serve-port` switches to WIRE-SERVER mode (DESIGN.md §14): fit
+deterministically, warm, then listen for `ScoringClient` requests —
+printing "SERVING <port>" once ready. With `--serve-checkpoint-dir` the
+service journals every response (exactly-once across a kill/restart:
+rerun the same command and it resumes from the journal);
+`--die-after-responses N` crashes with os._exit right after the Nth
+response journals (the chaos harness' kill switch). `--max-queue`,
+`--deadline-s` and `--low-water`/`--high-water` configure admission,
+deadlines and the background `BankReplenisher`.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -124,6 +135,70 @@ def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
     return out
 
 
+def serve_wire(*, port: int = 0, auth_key: str | None = None,
+               checkpoint_dir: str | None = None,
+               die_after_responses: int | None = None,
+               max_queue: int | None = None,
+               deadline_s: float | None = None,
+               low_water: int | None = None, high_water: int | None = None,
+               idle_timeout_s: float = 120.0,
+               n_train: int = 400, d_a: int = 6, d_b: int = 6, k: int = 3,
+               iters: int = 2, rungs=(16, 64), provision_copies: int = 8,
+               provision_workers: int = 1, seed: int = 0) -> None:
+    """Wire-server mode: fit (deterministic — a restart refits the same
+    model from the same seed), warm, listen, serve until BYE. The serving
+    randomness is NOT refit-dependent: with a checkpoint dir the bank is
+    snapshotted at first warm and every restart reloads + realigns it, so
+    responses are bit-exact across kills."""
+    from repro.core.channel import SocketTransport, WireTimeout, session_key
+    from repro.serve import ScoringServer
+
+    ds = FraudDataset.synthesize(n=n_train, d_a=d_a, d_b=d_b,
+                                 n_clusters=k, seed=seed)
+    km = SecureKMeans(KMeansConfig(k=k, iters=iters, seed=seed,
+                                   offline="pooled"))
+    res = km.fit(ds.x_a, ds.x_b)
+
+    ckpt = None
+    if checkpoint_dir:
+        from repro.checkpoint.serve import ServeCheckpointer
+        after = None
+        if die_after_responses is not None:
+
+            def after(total, _path):
+                if total >= die_after_responses:
+                    print(f"DYING after {total} journaled responses",
+                          flush=True)
+                    os._exit(17)   # simulated crash: no cleanup, no BYE
+        ckpt = ServeCheckpointer(checkpoint_dir, after_record=after)
+    repl = None
+    if low_water is not None:
+        repl = {"low_water": low_water, "workers": provision_workers}
+        if high_water is not None:
+            repl["high_water"] = high_water
+    svc = ScoringService(km, res, rungs=rungs, with_scores=True,
+                         d_a=d_a, d_b=d_b,
+                         provision_copies=provision_copies,
+                         provision_workers=provision_workers,
+                         max_queue=max_queue, default_deadline_s=deadline_s,
+                         checkpointer=ckpt, replenisher=repl)
+    svc.warm()
+    t = SocketTransport("listen", port=port, io_timeout_s=idle_timeout_s)
+    print(f"SERVING {t.port}", flush=True)
+    server = ScoringServer(
+        svc, t, idle_timeout_s=idle_timeout_s,
+        auth_key=session_key(auth_key) if auth_key else None)
+    try:
+        responder = server.serve_forever()
+        print(f"served {responder.served} wire requests "
+              f"({responder.dedup_replays} dedup replays); "
+              f"stats: {svc.stats.as_dict()}", flush=True)
+    except WireTimeout as e:
+        print(f"server idle timeout: {e}", flush=True)
+    finally:
+        t.close()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-train", type=int, default=2000)
@@ -138,6 +213,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--mean-batch", type=int, default=32)
     ap.add_argument("--frac", type=float, default=0.02)
+    ap.add_argument("--provision-copies", type=int, default=None,
+                    help="launches of correlated randomness provisioned "
+                         "per rung (default: --requests; wire mode: 8)")
     ap.add_argument("--bank-path", default=None,
                     help="save + reload the provisioned TripleBank here")
     ap.add_argument("--no-pipeline", action="store_true",
@@ -164,12 +242,52 @@ def main() -> None:
     ap.add_argument("--checkpoint-every", type=int, default=1,
                     help="checkpoint every Nth iteration")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--serve-port", type=int, default=None,
+                    help="wire-server mode: listen here (0 = ephemeral, "
+                         "printed as 'SERVING <port>') and answer "
+                         "ScoringClient requests until BYE")
+    ap.add_argument("--auth-key", default=None,
+                    help="wire mode: shared session passphrase — frames "
+                         "carry a keyed BLAKE2b MAC instead of a CRC")
+    ap.add_argument("--serve-checkpoint-dir", default=None,
+                    help="wire mode: journal responses + bank consumed "
+                         "counts here (exactly-once restart)")
+    ap.add_argument("--die-after-responses", type=int, default=None,
+                    help="wire mode: os._exit right after this many "
+                         "responses journal (crash simulation)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission high-water mark: shed past this depth")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="default per-request deadline")
+    ap.add_argument("--low-water", type=int, default=None,
+                    help="start a BankReplenisher daemon topping up rungs "
+                         "at this stock level")
+    ap.add_argument("--high-water", type=int, default=None,
+                    help="replenisher top-up target (default 2x low)")
+    ap.add_argument("--idle-timeout", type=float, default=120.0,
+                    help="wire mode: give up after this much client "
+                         "silence")
     args = ap.parse_args()
+    if args.serve_port is not None:
+        serve_wire(port=args.serve_port, auth_key=args.auth_key,
+                   checkpoint_dir=args.serve_checkpoint_dir,
+                   die_after_responses=args.die_after_responses,
+                   max_queue=args.max_queue, deadline_s=args.deadline_s,
+                   low_water=args.low_water, high_water=args.high_water,
+                   idle_timeout_s=args.idle_timeout,
+                   n_train=args.n_train, d_a=args.d_a, d_b=args.d_b,
+                   k=args.k, iters=args.iters,
+                   rungs=tuple(int(r) for r in args.rungs.split(",")),
+                   provision_copies=args.provision_copies or 8,
+                   provision_workers=args.provision_workers,
+                   seed=args.seed)
+        return
     serve(n_train=args.n_train, d_a=args.d_a, d_b=args.d_b, k=args.k,
           iters=args.iters, sparse=args.sparse,
           rungs=tuple(int(r) for r in args.rungs.split(",")),
           requests=args.requests, mean_batch=args.mean_batch,
-          frac=args.frac, bank_path=args.bank_path,
+          frac=args.frac, provision_copies=args.provision_copies,
+          bank_path=args.bank_path,
           pipeline=not args.no_pipeline,
           fit_batch_size=args.fit_batch_size,
           fit_from_bank=args.fit_from_bank,

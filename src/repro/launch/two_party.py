@@ -32,7 +32,8 @@ import sys
 import numpy as np
 
 from repro.core.channel import (ReliableChannel, SocketTransport,
-                                WireSession, WireTimeout, serve_peer)
+                                WireSession, WireTimeout, serve_peer,
+                                session_key)
 from repro.core.kmeans import KMeansConfig, SecureKMeans
 
 
@@ -56,6 +57,10 @@ def split_data(x: np.ndarray, partition: str) -> tuple:
     return x[:n // 2], x[n // 2:]
 
 
+def _auth(args) -> bytes | None:
+    return session_key(args.auth_key) if args.auth_key else None
+
+
 def _party_b(args) -> None:
     t = SocketTransport("connect", host=args.host, port=args.port,
                         io_timeout_s=args.io_timeout)
@@ -70,7 +75,8 @@ def _party_b(args) -> None:
 
     try:
         stats = serve_peer(t, on_blob=on_blob,
-                           idle_timeout_s=args.io_timeout)
+                           idle_timeout_s=args.io_timeout,
+                           auth_key=_auth(args))
     except WireTimeout as e:
         # engine crashed or unreachable past the idle budget: exit with a
         # clear diagnostic (its checkpoint-resume relaunches a fresh B)
@@ -86,7 +92,8 @@ def _party_a(args) -> None:
     t = SocketTransport("listen", host=args.host, port=args.port,
                         io_timeout_s=args.io_timeout)
     print(f"LISTENING {t.port}", flush=True)
-    ws = WireSession(ReliableChannel(t, deadline_s=args.io_timeout))
+    ws = WireSession(ReliableChannel(t, deadline_s=args.io_timeout,
+                                     auth_key=_auth(args)))
 
     x = make_data(args.n, args.d, args.k, args.seed, args.sparse_frac)
     x_a, x_b_local = split_data(x, args.partition)
@@ -178,6 +185,10 @@ def main(argv=None) -> None:
                     default="on_demand")
     ap.add_argument("--no-pipeline", action="store_true")
     ap.add_argument("--io-timeout", type=float, default=60.0)
+    ap.add_argument("--auth-key", default=None,
+                    help="shared session passphrase: frames carry a keyed "
+                         "BLAKE2b MAC instead of a CRC (both roles must "
+                         "agree; tampered/unkeyed frames are dropped)")
     ap.add_argument("--out", default=None,
                     help="A: write result shares + accounting npz here")
     ap.add_argument("--checkpoint-dir", default=None)

@@ -5,9 +5,17 @@ transactions are padded onto a small ladder of compiled `predict_program`
 geometries, scored against the secret-shared centroids (assignments and/or
 outlier scores are the ONLY reveals), and fed correlated randomness from a
 persistent `TripleBank` provisioned offline.
+
+The serving plane (DESIGN.md §14) is crash-safe and wire-facing: bounded
+admission with load shedding, per-request deadlines, a background
+`BankReplenisher` daemon, exactly-once restart via `ServeCheckpointer`,
+and a `ScoringServer`/`ScoringClient` pair over the reliable wire.
 """
-from repro.serve.service import (BatchLadder, ScoringResponse,
-                                 ScoringService, ServiceStats)
+from repro.serve.service import (ERR_DEADLINE, ERR_QUEUE_FULL, BatchLadder,
+                                 ScoringResponse, ScoringService,
+                                 ServiceStats)
+from repro.serve.wire import ScoringClient, ScoringServer
 
 __all__ = ["BatchLadder", "ScoringResponse", "ScoringService",
-           "ServiceStats"]
+           "ServiceStats", "ScoringClient", "ScoringServer",
+           "ERR_DEADLINE", "ERR_QUEUE_FULL"]

@@ -16,21 +16,49 @@ pieces make that a service rather than a per-request protocol run:
 * **TripleBank** — the correlated randomness for every ladder geometry is
   provisioned ONCE (offline) under the predict-plan key and drained across
   requests and fits; a stock-out auto-replenishes (counted — size
-  `provision_copies` so replenishment stays off the online path).
+  `provision_copies` so replenishment stays off the online path, and a
+  `BankReplenisher` daemon can top shelves up before the stock-out ever
+  happens).
+
+Long-lived serving (DESIGN.md §14) adds the control plane:
+
+* **Admission control** — `submit` against a bounded queue
+  (`max_queue`): past the high-water mark the request is SHED with a
+  typed `QueueFull` response instead of growing the queue without bound.
+* **Deadlines** — per-request (or service-default) deadlines are checked
+  at dequeue AND after collect; an expired request answers
+  `DeadlineExceeded` instead of occupying a rung.
+* **Exactly-once restart** — with a `ServeCheckpointer`, every drain
+  journals its responses plus the bank's consumed counts BEFORE exposing
+  them; a restarted service replays journaled responses verbatim and
+  realigns the bank so no triple is ever double-drawn
+  (checkpoint/serve.py has the full argument).
+* **Background loop** — `start()` runs drains on a supervised daemon
+  thread; `result(rid)` blocks until a response is published.
 
 The service reveals ONLY the per-transaction outputs (cluster label and/or
 outlier score) — centroids and per-cluster structure stay secret-shared.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
 
 import numpy as np
 
 from repro.core import ring
 from repro.core.kmeans import KMeansResult, SecureKMeans
-from repro.core.triples import TripleBank, serve_seed
+from repro.core.triples import BankReplenisher, TripleBank, serve_seed
+
+# Stable error-string prefixes (the `ScoringResponse.error` type tags —
+# wire clients and tests dispatch on `error.startswith(...)`).
+ERR_QUEUE_FULL = "QueueFull"
+ERR_DEADLINE = "DeadlineExceeded"
+
+# Latency samples kept for the p50/p99 window (drop-oldest beyond this).
+LATENCY_WINDOW = 10_000
 
 
 class BatchLadder:
@@ -67,8 +95,11 @@ class ScoringResponse:
     labels: np.ndarray                # horizontal: [A rows; B rows] order
     scores: np.ndarray | None         # squared distance to assigned centroid
     rows: int
-    error: str | None = None          # set iff the request's group kept
-                                      # failing through max_attempts
+    error: str | None = None          # None iff scored; else a typed tag:
+                                      # "QueueFull: ..." (shed at admission),
+                                      # "DeadlineExceeded: ..." (expired),
+                                      # "<ExcType>: ..." (group kept failing
+                                      # through max_attempts)
 
 
 @dataclasses.dataclass
@@ -83,6 +114,23 @@ class ServiceStats:
     replenish_events: int = 0         # bank stock-outs hit on the hot path
     failed_requests: int = 0          # resolved with an error response
     retried_groups: int = 0           # group retry attempts after a failure
+    shed_requests: int = 0            # rejected at admission (queue full)
+    expired_requests: int = 0         # answered DeadlineExceeded
+    queue_depth: int = 0              # gauge: pending right now
+    max_queue_depth: int = 0          # high-water mark ever observed
+    latencies: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW),
+        repr=False)                   # submit->publish seconds, per request
+
+    def record_latency(self, seconds: float) -> None:
+        self.latencies.append(float(seconds))
+
+    def latency_quantile(self, q: float) -> float:
+        """Submit-to-publish latency quantile (seconds) over the sample
+        window; 0.0 before any response has been published."""
+        if not self.latencies:
+            return 0.0
+        return float(np.quantile(np.asarray(self.latencies, np.float64), q))
 
     def as_dict(self) -> dict:
         s = max(self.online_seconds, 1e-9)
@@ -100,7 +148,23 @@ class ServiceStats:
             "replenish_events": self.replenish_events,
             "failed_requests": self.failed_requests,
             "retried_groups": self.retried_groups,
+            "shed_requests": self.shed_requests,
+            "expired_requests": self.expired_requests,
+            "queue_depth": self.queue_depth,
+            "max_queue_depth": self.max_queue_depth,
+            "p50_ms": round(self.latency_quantile(0.50) * 1e3, 3),
+            "p99_ms": round(self.latency_quantile(0.99) * 1e3, 3),
         }
+
+
+@dataclasses.dataclass(eq=False)     # identity equality: ndarray payloads
+class _Pending:
+    """One queued request: payload plus its admission bookkeeping."""
+    rid: int
+    x_a: np.ndarray
+    x_b: np.ndarray
+    deadline: float | None            # time.monotonic() cutoff, or None
+    t_submit: float                   # time.monotonic() at admission
 
 
 class ScoringService:
@@ -122,7 +186,23 @@ class ScoringService:
     ints. `pipeline=True` overlaps request t+1's pre-launch host work (the
     Protocol-2 exchange and the bank draw) with request t's in-flight
     compiled launch — stream-identical to `pipeline=False` because the
-    per-request prepare order is the same either way."""
+    per-request prepare order is the same either way.
+
+    Serving-plane knobs (all optional — defaults preserve the drain-a-list
+    behaviour):
+
+    * `max_queue` — admission high-water mark; `submit` past it returns a
+      shed `ScoringResponse` (error prefix `QueueFull`) instead of an id.
+    * `default_deadline_s` — deadline applied to requests that don't carry
+      their own; expired requests answer `DeadlineExceeded`.
+    * `checkpointer` — a `ServeCheckpointer`; a fresh service snapshots
+      its bank after `warm()`, every drain journals responses + consumed
+      counts before exposing them, and a restart replays the journal and
+      realigns the bank (exactly-once responses across a crash).
+    * `replenisher` — a `BankReplenisher` bound to this service's bank,
+      or a kwargs dict to build one (e.g. `{"low_water": 1}`); started by
+      `warm()`, stopped by `close()`.
+    """
 
     def __init__(self, model: SecureKMeans,
                  result: KMeansResult | None = None, *,
@@ -130,7 +210,10 @@ class ScoringService:
                  with_scores: bool = True, provision_copies: int = 4,
                  provision_workers: int = 1,
                  d_a: int | None = None, d_b: int | None = None,
-                 pipeline: bool = True, max_attempts: int = 3):
+                 pipeline: bool = True, max_attempts: int = 3,
+                 max_queue: int | None = None,
+                 default_deadline_s: float | None = None,
+                 checkpointer=None, replenisher=None):
         self.model = model
         self.result = result if result is not None \
             else getattr(model, "result_", None)
@@ -159,11 +242,46 @@ class ScoringService:
             self.d_a, self.d_b = int(d_a), int(d_b)
         else:
             self.d_a = self.d_b = d
-        self._queue: list = []
+        self.max_queue = None if max_queue is None else int(max_queue)
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None)")
+        self.default_deadline_s = default_deadline_s
+        self._queue: list[_Pending] = []
         self._next_id = 0
         self._warmed = False
         self.offline_seconds = 0.0    # warm(): compiles + provisioning
         self.stats = ServiceStats()
+        self._cond = threading.Condition()
+        self._done: dict[int, ScoringResponse] = {}
+        self._thread: threading.Thread | None = None
+        self._running = False
+        self.loop_errors = 0
+        self.last_loop_error: BaseException | None = None
+        self.checkpointer = checkpointer
+        if checkpointer is not None and checkpointer.has_bank():
+            # Restart: reload the provision-time bank snapshot, replay the
+            # response journal, and discard exactly the requests the dead
+            # incarnation consumed so every stream resumes at the right
+            # word (exactly-once argument in checkpoint/serve.py).
+            self.bank = checkpointer.load_bank()
+            journal, consumed = checkpointer.load_journal()
+            if consumed:
+                self.bank.discard(consumed)
+            self._done.update(journal)
+            if journal:
+                self._next_id = max(journal) + 1
+        if replenisher is None:
+            self.replenisher = None
+        elif isinstance(replenisher, BankReplenisher):
+            if replenisher.bank is not self.bank:
+                raise ValueError("replenisher must be bound to this "
+                                 "service's bank (after a checkpoint "
+                                 "restart the bank is the reloaded one — "
+                                 "pass a kwargs dict instead)")
+            self.replenisher = replenisher
+        else:
+            self.replenisher = BankReplenisher(self.bank,
+                                               **dict(replenisher))
 
     # -- geometry helpers -------------------------------------------------
     def _rung_shapes(self, r: int) -> tuple:
@@ -173,7 +291,11 @@ class ScoringService:
 
     def warm(self) -> None:
         """Offline: compile every rung's program and provision its triples
-        (idempotent; re-warming only tops up unprovisioned rungs)."""
+        (idempotent; re-warming only tops up unprovisioned rungs). With a
+        checkpointer, the FIRST warm also snapshots the provisioned bank —
+        the restart baseline; a restarted service loads that snapshot
+        instead of re-provisioning, so the snapshot is never rewritten.
+        Starts the replenisher daemon if one is configured."""
         from repro.launch import kmeans_step as K
         t0 = time.perf_counter()
         cfg = self.model.cfg
@@ -188,26 +310,70 @@ class ScoringService:
                 K.predict_program(cfg.partition, cfg.sparse, sa, sb, cfg.k,
                                   with_scores=self.with_scores,
                                   backend=cfg.backend)
+        if self.checkpointer is not None and not self.checkpointer.has_bank():
+            self.checkpointer.save_bank(self.bank)
+        if self.replenisher is not None and not self.replenisher.running:
+            self.replenisher.start()
         self._warmed = True
         self.offline_seconds += time.perf_counter() - t0
 
     # -- request queue ----------------------------------------------------
-    def submit(self, x_a: np.ndarray, x_b: np.ndarray) -> int:
+    def submit(self, x_a: np.ndarray, x_b: np.ndarray, *,
+               deadline_s: float | None = None, rid: int | None = None):
         """Enqueue one arrival batch; returns its request id. Vertical:
         equal row counts (the parties' column slices of the same
-        transactions); horizontal: each party's own arrival rows."""
+        transactions); horizontal: each party's own arrival rows.
+
+        `deadline_s` (else `default_deadline_s`) bounds how long the
+        request may wait + run before answering `DeadlineExceeded`.
+        `rid` lets a wire frontend pin the request id for retry dedup: a
+        rid already answered or already queued is NOT re-enqueued — the
+        same id comes back and `result(rid)` returns the original
+        response (at-least-once delivery, exactly-once effect).
+
+        If admission would push the queue past `max_queue`, the request
+        is SHED: a `ScoringResponse` with error prefix `QueueFull` is
+        returned instead of an id. Shed responses are transient — not
+        journaled, not cached — so a later retry of the same rid can be
+        admitted normally."""
         x_a = np.asarray(x_a, np.float64)
         x_b = np.asarray(x_b, np.float64)
         if self.model.cfg.partition == "vertical" \
                 and x_a.shape[0] != x_b.shape[0]:
             raise ValueError("vertical request needs equal batch rows")
-        rid = self._next_id
-        self._next_id += 1
-        self._queue.append((rid, x_a, x_b))
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        now = time.monotonic()
+        with self._cond:
+            if rid is not None:
+                rid = int(rid)
+                if rid in self._done \
+                        or any(p.rid == rid for p in self._queue):
+                    return rid            # duplicate delivery: dedup
+                self._next_id = max(self._next_id, rid + 1)
+            if self.max_queue is not None \
+                    and len(self._queue) >= self.max_queue:
+                self.stats.shed_requests += 1
+                shed_rid = rid if rid is not None else -1
+                return ScoringResponse(
+                    shed_rid, labels=np.zeros(0, np.int64), scores=None,
+                    rows=0, error=f"{ERR_QUEUE_FULL}: queue depth "
+                    f"{len(self._queue)} at high-water mark "
+                    f"{self.max_queue}")
+            if rid is None:
+                rid = self._next_id
+                self._next_id += 1
+            deadline = None if deadline_s is None else now + float(deadline_s)
+            self._queue.append(_Pending(rid, x_a, x_b, deadline, now))
+            self.stats.queue_depth = len(self._queue)
+            self.stats.max_queue_depth = max(self.stats.max_queue_depth,
+                                             len(self._queue))
+            self._cond.notify_all()
         return rid
 
     def pending(self) -> int:
-        return len(self._queue)
+        with self._cond:
+            return len(self._queue)
 
     # -- the serving loop -------------------------------------------------
     def drain(self) -> list[ScoringResponse]:
@@ -221,14 +387,25 @@ class ScoringService:
         way, so the bank serves identical words and pipeline=False returns
         identical responses.
 
+        Deadline policy: a request already expired at dequeue answers
+        `DeadlineExceeded` WITHOUT drawing triples or occupying a rung; a
+        request that expires while its group is in flight answers
+        `DeadlineExceeded` after collect (the work is sunk, the caller
+        still gets a prompt typed answer).
+
         Failure policy: a group whose launch raises is retried up to
         `max_attempts` times WITHIN this drain; exhausted, its requests
         resolve as error `ScoringResponse`s (counted in
         `stats.failed_requests`) instead of being requeued — a poisoned
         request can therefore never livelock the drain by riding the queue
         forever. Non-`Exception` escapes (KeyboardInterrupt and friends)
-        still requeue everything and propagate: nothing was returned, so
-        nothing is lost."""
+        still requeue everything and propagate: nothing was returned and
+        nothing was journaled, so nothing is lost.
+
+        With a checkpointer, the full response batch (including expired
+        and error responses — they are final answers) is journaled BEFORE
+        being exposed; see checkpoint/serve.py for why that ordering gives
+        exactly-once responses across a crash."""
         if not self._warmed:
             self.warm()
         from repro.launch.pipeline import (PipelineError, StageTask,
@@ -236,11 +413,24 @@ class ScoringService:
         t0 = time.perf_counter()
         served0 = self.bank.served_requests
         repl0 = self.bank.replenish_events
+        with self._cond:
+            pending = list(self._queue)
+            self._queue.clear()
+            self.stats.queue_depth = 0
+        if not pending:
+            self.stats.online_seconds += time.perf_counter() - t0
+            return []
+        order = {p.rid: i for i, p in enumerate(pending)}
+        now = time.monotonic()
+        expired = [p for p in pending
+                   if p.deadline is not None and now >= p.deadline]
+        live = [p for p in pending if p not in expired]
         groups = []
-        while self._queue:
-            group = [self._queue.pop(0)]
-            while self._queue and self._fits(group, self._queue[0]):
-                group.append(self._queue.pop(0))
+        queue = list(live)
+        while queue:
+            group = [queue.pop(0)]
+            while queue and self._fits(group, queue[0]):
+                group.append(queue.pop(0))
             groups.append(group)
         results: dict[int, tuple] = {}    # gi -> (labels, scores)
         errors: dict[int, Exception] = {}  # gi -> last failure
@@ -256,8 +446,8 @@ class ScoringService:
                 for gi in todo:
                     group = groups[gi]
                     try:
-                        xa = np.concatenate([g[1] for g in group], 0)
-                        xb = np.concatenate([g[2] for g in group], 0)
+                        xa = np.concatenate([p.x_a for p in group], 0)
+                        xb = np.concatenate([p.x_b for p in group], 0)
                         units.extend((gi, ca, cb)
                                      for ca, cb in self._chunks(xa, xb))
                     except Exception as e:
@@ -289,36 +479,136 @@ class ScoringService:
             # SystemExit, a bug in the drain scaffolding itself): no
             # responses were returned, so requeue EVERY request (submit
             # order preserved) for a later drain and re-raise
-            self._queue[:0] = [g for group in groups for g in group]
+            with self._cond:
+                self._queue[:0] = pending
+                self.stats.queue_depth = len(self._queue)
             raise
-        responses = []
+        responses = [self._deadline_response(p, "at dequeue")
+                     for p in expired]
         for gi, group in enumerate(groups):
             if gi in results:
                 responses.extend(self._split_group(group, *results[gi]))
             else:
                 responses.extend(self._error_responses(group, errors[gi]))
+        responses.sort(key=lambda r: order[r.request_id])
         self.stats.online_seconds += time.perf_counter() - t0
         self.stats.triples_served += self.bank.served_requests - served0
         self.stats.replenish_events += self.bank.replenish_events - repl0
+        self._publish(responses, pending)
         return responses
+
+    def _publish(self, responses: list[ScoringResponse],
+                 pending: list[_Pending]) -> None:
+        """Journal (if checkpointing) then expose one drain's responses —
+        in that order, so a crash between the two replays rather than
+        re-scores (checkpoint/serve.py)."""
+        if not responses:
+            return
+        if self.checkpointer is not None:
+            self.checkpointer.record(responses, self.bank.consumed_counts())
+        now = time.monotonic()
+        by_rid = {p.rid: p for p in pending}
+        with self._cond:
+            for r in responses:
+                self._done[r.request_id] = r
+                p = by_rid.get(r.request_id)
+                if p is not None:
+                    self.stats.record_latency(now - p.t_submit)
+            self._cond.notify_all()
+
+    # -- background serving loop ------------------------------------------
+    def start(self) -> None:
+        """Warm (provision + compile + snapshot) then serve drains on a
+        daemon thread until `stop()`. Exceptions escaping a drain are
+        counted (`loop_errors`, `last_loop_error`) and the loop keeps
+        serving — a poisoned batch must not kill the service."""
+        if self._thread is not None and self._thread.is_alive():
+            return
+        if not self._warmed:
+            self.warm()
+        self._running = True
+        self._thread = threading.Thread(target=self._serve_loop,
+                                        name="scoring-service", daemon=True)
+        self._thread.start()
+
+    def _serve_loop(self) -> None:
+        while True:
+            with self._cond:
+                while self._running and not self._queue:
+                    self._cond.wait(0.05)
+                if not self._running and not self._queue:
+                    return
+            try:
+                self.drain()
+            except Exception as e:             # noqa: BLE001 — supervised
+                self.loop_errors += 1
+                self.last_loop_error = e
+                time.sleep(0.01)               # don't spin on a hot failure
+
+    def stop(self) -> None:
+        """Graceful: the loop finishes draining whatever is queued, then
+        exits. No-op if the loop isn't running."""
+        if self._thread is None:
+            return
+        with self._cond:
+            self._running = False
+            self._cond.notify_all()
+        self._thread.join(timeout=60.0)
+        self._thread = None
+
+    def close(self) -> None:
+        """Stop the serving loop and the replenisher daemon."""
+        self.stop()
+        if self.replenisher is not None:
+            self.replenisher.stop()
+
+    def response(self, rid: int,
+                 timeout: float | None = None) -> ScoringResponse | None:
+        """Block until `rid`'s response is published (drain / background
+        loop / journal replay); None on timeout. (`self.result` is the
+        fitted model — hence not `result()`.)"""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while rid not in self._done:
+                if deadline is None:
+                    self._cond.wait(0.5)
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                    self._cond.wait(remaining)
+            return self._done[rid]
+
+    def lookup(self, rid: int) -> ScoringResponse | None:
+        """Non-blocking: the published response for `rid`, else None."""
+        with self._cond:
+            return self._done.get(rid)
+
+    # -- response assembly ------------------------------------------------
+    def _deadline_response(self, p: _Pending, phase: str) -> ScoringResponse:
+        self.stats.expired_requests += 1
+        return ScoringResponse(
+            p.rid, labels=np.zeros(0, np.int64), scores=None, rows=0,
+            error=f"{ERR_DEADLINE}: request expired {phase}")
 
     def _error_responses(self, group, exc: Exception) -> list:
         out = []
-        for rid, _ga, _gb in group:
+        for p in group:
             out.append(ScoringResponse(
-                rid, labels=np.zeros(0, np.int64), scores=None, rows=0,
+                p.rid, labels=np.zeros(0, np.int64), scores=None, rows=0,
                 error=f"{type(exc).__name__}: {exc}"))
             self.stats.failed_requests += 1
         return out
 
-    def _fits(self, group, nxt) -> bool:
+    def _fits(self, group, nxt: _Pending) -> bool:
         top = self.ladder.max_rung
         if self.model.cfg.partition == "vertical":
-            return sum(g[1].shape[0] for g in group) \
-                + nxt[1].shape[0] <= top
-        return (sum(g[1].shape[0] for g in group) + nxt[1].shape[0] <= top
-                and sum(g[2].shape[0] for g in group)
-                + nxt[2].shape[0] <= top)
+            return sum(p.x_a.shape[0] for p in group) \
+                + nxt.x_a.shape[0] <= top
+        return (sum(p.x_a.shape[0] for p in group)
+                + nxt.x_a.shape[0] <= top
+                and sum(p.x_b.shape[0] for p in group)
+                + nxt.x_b.shape[0] <= top)
 
     def _chunks(self, xa, xb) -> list:
         """Top-rung row windows of one coalesced group (an oversized group
@@ -410,13 +700,17 @@ class ScoringService:
         return labels, scores
 
     def _split_group(self, group, labels, scores) -> list[ScoringResponse]:
-        """Split one coalesced group's stacked outputs back per request."""
+        """Split one coalesced group's stacked outputs back per request.
+        A request whose deadline lapsed while the group was in flight
+        answers `DeadlineExceeded` — its rows were scored (the work is
+        sunk) but the caller asked not to wait this long."""
         cfg = self.model.cfg
+        now = time.monotonic()
         out = []
         a_off = b_off = 0
-        na_tot = sum(g[1].shape[0] for g in group)
-        for rid, ga, gb in group:
-            na, nb = ga.shape[0], gb.shape[0]
+        na_tot = sum(p.x_a.shape[0] for p in group)
+        for p in group:
+            na, nb = p.x_a.shape[0], p.x_b.shape[0]
             if cfg.partition == "vertical":
                 sel = slice(a_off, a_off + na)
                 lab = labels[sel]
@@ -428,7 +722,10 @@ class ScoringService:
                 sc = scores[idx] if scores is not None else None
                 b_off += nb
             a_off += na
-            out.append(ScoringResponse(rid, lab, sc,
+            if p.deadline is not None and now >= p.deadline:
+                out.append(self._deadline_response(p, "in flight"))
+                continue
+            out.append(ScoringResponse(p.rid, lab, sc,
                                        rows=na + (0 if cfg.partition ==
                                                   "vertical" else nb)))
             self.stats.requests += 1

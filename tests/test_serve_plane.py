@@ -1,0 +1,442 @@
+"""Serving-plane robustness tests (DESIGN.md §14).
+
+Load-bearing properties: (1) admission control sheds past the high-water
+mark with a typed `QueueFull` response and deadlines answer
+`DeadlineExceeded` at dequeue instead of occupying a rung; (2) the
+`BankReplenisher` daemon keeps responses bit-exact with the synchronous
+replenish path (per-class stream-prefix invariance) while actually
+topping shelves up off the hot path; (3) a daemon top-up racing a
+stock-out draw can never fork a per-class stream (the PR-8 lock bugfix);
+(4) a killed-and-restarted service answers every request exactly once,
+bit-exact — journaled responses replay verbatim, in-flight requests
+re-draw the SAME bank words after consumed-count realignment; (5) the
+wire frontend survives drop/dup/corrupt/kill with authenticated frames,
+rid-pinned retries riding the journal dedup."""
+import os
+import re
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.serve import ServeCheckpointer
+from repro.core.channel import (FaultyTransport, FrameDecoder,
+                                LoopbackTransport, SocketTransport, T_SCORE,
+                                encode_frame, session_key)
+from repro.core.fraud import FraudDataset
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+from repro.core.triples import TripleBank
+from repro.serve import (ERR_DEADLINE, ERR_QUEUE_FULL, BatchLadder,
+                         ScoringClient, ScoringResponse, ScoringServer,
+                         ScoringService, ServiceStats)
+
+D_A = D_B = 4
+K = 3
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    ds = FraudDataset.synthesize(n=200, d_a=D_A, d_b=D_B, n_clusters=K,
+                                 seed=0)
+    km = SecureKMeans(KMeansConfig(k=K, iters=2, seed=0, offline="pooled"))
+    res = km.fit(ds.x_a, ds.x_b)
+    return km, res
+
+
+def _batches(n, rows=8, seed=3):
+    arr = FraudDataset.synthesize(n=rows * n, d_a=D_A, d_b=D_B,
+                                  n_clusters=K, seed=seed)
+    return [(arr.x_a[i * rows:(i + 1) * rows],
+             arr.x_b[i * rows:(i + 1) * rows]) for i in range(n)]
+
+
+def _service(km, res, **kw):
+    kw.setdefault("rungs", (16,))
+    kw.setdefault("provision_copies", 4)
+    return ScoringService(km, res, d_a=D_A, d_b=D_B, with_scores=True, **kw)
+
+
+def _one_at_a_time(svc, batches):
+    """Submit/drain each batch alone — the wire server's effective
+    schedule (one outstanding request per sequential channel)."""
+    out = {}
+    for xa, xb in batches:
+        svc.submit(xa, xb)
+        out.update({r.request_id: r for r in svc.drain()})
+    return out
+
+
+def _assert_same_responses(got: dict, ref: dict):
+    assert set(got) == set(ref)
+    for rid in ref:
+        assert got[rid].error is None and ref[rid].error is None
+        np.testing.assert_array_equal(got[rid].labels, ref[rid].labels)
+        np.testing.assert_array_equal(got[rid].scores, ref[rid].scores)
+
+
+# ---------------------------------------------------------------------------
+# stats schema + latency percentiles + ladder boundaries
+# ---------------------------------------------------------------------------
+
+def test_stats_as_dict_schema_pin():
+    """The stats dict is a wire/bench artifact — its key set is pinned."""
+    assert set(ServiceStats().as_dict()) == {
+        "requests", "rows", "padded_rows", "launches", "online_seconds",
+        "rows_per_s", "triples_per_request", "bytes_per_request",
+        "pad_overhead", "replenish_events", "failed_requests",
+        "retried_groups", "shed_requests", "expired_requests",
+        "queue_depth", "max_queue_depth", "p50_ms", "p99_ms"}
+
+
+def test_latency_percentiles_match_numpy():
+    st = ServiceStats()
+    assert st.latency_quantile(0.5) == 0.0          # empty window
+    rng = np.random.default_rng(7)
+    trace = rng.gamma(2.0, 0.01, size=501)
+    for s in trace:
+        st.record_latency(s)
+    for q in (0.5, 0.9, 0.99):
+        assert st.latency_quantile(q) == pytest.approx(
+            float(np.quantile(trace, q)))
+    d = st.as_dict()
+    assert d["p50_ms"] == pytest.approx(
+        float(np.quantile(trace, 0.5)) * 1e3, abs=1e-3)
+    assert d["p99_ms"] >= d["p50_ms"]
+
+
+def test_rung_for_boundaries():
+    lad = BatchLadder((32, 128, 512))
+    assert lad.rung_for(1) == 32
+    assert lad.rung_for(32) == 32       # exact rung: no promotion
+    assert lad.rung_for(33) == 128
+    assert lad.rung_for(128) == 128
+    assert lad.rung_for(512) == 512
+    assert lad.rung_for(513) == 512     # oversize: top rung (chunked)
+
+
+def test_chunks_exact_multiple_no_empty_chunk(fitted):
+    km, res = fitted
+    svc = _service(km, res)             # top rung 16
+    xa = np.zeros((32, D_A))
+    xb = np.zeros((32, D_B))
+    chunks = svc._chunks(xa, xb)
+    assert len(chunks) == 2             # remainder 0: exactly 2, none empty
+    assert all(c[0].shape[0] == 16 for c in chunks)
+    assert len(svc._chunks(np.zeros((33, D_A)), np.zeros((33, D_B)))) == 3
+
+
+# ---------------------------------------------------------------------------
+# admission control + deadlines
+# ---------------------------------------------------------------------------
+
+def test_admission_sheds_past_high_water(fitted):
+    km, res = fitted
+    svc = _service(km, res, max_queue=2)
+    b = _batches(3)
+    r0 = svc.submit(*b[0])
+    r1 = svc.submit(*b[1])
+    shed = svc.submit(*b[2])
+    assert isinstance(shed, ScoringResponse)
+    assert shed.error.startswith(ERR_QUEUE_FULL)
+    assert svc.stats.shed_requests == 1
+    resp = svc.drain()
+    assert [r.request_id for r in resp] == [r0, r1]
+    assert all(r.error is None for r in resp)
+    # shed is transient: the queue drained, the same submit is admitted now
+    assert isinstance(svc.submit(*b[2]), int)
+
+
+def test_submit_rid_dedup(fitted):
+    km, res = fitted
+    svc = _service(km, res)
+    b = _batches(1)[0]
+    assert svc.submit(*b, rid=5) == 5
+    assert svc.submit(*b, rid=5) == 5   # duplicate delivery: not re-queued
+    assert svc.pending() == 1
+    resp = svc.drain()
+    assert len(resp) == 1 and resp[0].request_id == 5
+    assert svc.submit(*b, rid=5) == 5   # answered: dedup against the cache
+    assert svc.pending() == 0
+    assert svc.submit(*b) == 6          # auto ids continue past pinned ones
+
+
+def test_deadline_expired_at_dequeue(fitted):
+    km, res = fitted
+    svc = _service(km, res)
+    b = _batches(2)
+    dead = svc.submit(*b[0], deadline_s=-1.0)   # already expired
+    live = svc.submit(*b[1])
+    served0 = svc.bank.served_requests
+    svc.warm()
+    served_warm = svc.bank.served_requests
+    resp = {r.request_id: r for r in svc.drain()}
+    assert resp[dead].error.startswith(ERR_DEADLINE)
+    assert resp[dead].rows == 0
+    assert resp[live].error is None
+    assert svc.stats.expired_requests == 1
+    # the expired request drew no correlated randomness: exactly one
+    # launch worth of draws happened
+    one = _service(km, res)
+    one.submit(*b[1])
+    one.warm()
+    base = one.bank.served_requests
+    one.drain()
+    assert svc.bank.served_requests - served_warm \
+        == one.bank.served_requests - base
+    assert served0 == 0
+
+
+# ---------------------------------------------------------------------------
+# replenisher daemon: off-hot-path top-ups, bit-exact streams
+# ---------------------------------------------------------------------------
+
+def test_replenisher_stream_continuity(fitted):
+    km, res = fitted
+    b = _batches(10)
+    ref = _one_at_a_time(_service(km, res, provision_copies=2), b)
+    svc = _service(km, res, provision_copies=2,
+                   replenisher={"low_water": 1, "high_water": 3,
+                                "poll_s": 0.001})
+    try:
+        got = {}
+        for xa, xb in b:
+            svc.submit(xa, xb)
+            got.update({r.request_id: r for r in svc.drain()})
+            time.sleep(0.005)           # let the daemon race the drains
+    finally:
+        svc.close()
+    _assert_same_responses(got, ref)
+    assert svc.replenisher.topups > 0
+    assert svc.replenisher.errors == 0, svc.replenisher.last_error
+    # daemon kept the hot path from ever hitting a synchronous stock-out
+    assert svc.stats.replenish_events < svc.bank.replenish_events \
+        + len(b)
+
+
+def test_concurrent_draws_never_fork_a_stream(fitted):
+    """Regression (PR-8 bugfix): two threads hammering one class on an
+    auto-replenish bank must serve the serial stream prefix — every word
+    exactly once, no duplicates, no forks."""
+    km, res = fitted
+    key, plan, _ = km.plan_predict((16, D_A), (16, D_B), True)
+    n_each = 12
+
+    def words(e):
+        return tuple(np.asarray(a).tobytes() for a in e)
+
+    bank = TripleBank(seed=9)
+    bank.provision(key, plan, copies=1)
+    class_key = sorted(bank._queues)[0]
+    popped, errs = [], []
+
+    def hammer():
+        try:
+            for _ in range(n_each):
+                popped.append(words(bank._pop(class_key, key)))
+        except Exception as e:          # pragma: no cover - failure path
+            errs.append(e)
+
+    ts = [threading.Thread(target=hammer) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=120)
+    assert not errs
+    assert len(popped) == 2 * n_each
+    assert len(set(popped)) == 2 * n_each     # a fork would duplicate
+
+    serial = TripleBank(seed=9)
+    serial.provision(key, plan, copies=1)
+    expect = [words(serial._pop(class_key, key)) for _ in range(2 * n_each)]
+    assert sorted(popped) == sorted(expect)   # exactly the serial prefix
+
+
+# ---------------------------------------------------------------------------
+# exactly-once restart (in-process)
+# ---------------------------------------------------------------------------
+
+def test_restart_replays_and_realigns_bit_exact(fitted, tmp_path):
+    km, res = fitted
+    b = _batches(6)
+    ref = _one_at_a_time(_service(km, res), b)
+
+    ck = ServeCheckpointer(str(tmp_path / "ck"))
+    svc = _service(km, res, checkpointer=ck)
+    got = _one_at_a_time(svc, b[:3])
+    del svc                                   # "crash" after 3 journals
+
+    ck2 = ServeCheckpointer(str(tmp_path / "ck"))
+    svc2 = _service(km, res, checkpointer=ck2)
+    # journaled rids replay verbatim without re-scoring
+    for rid in got:
+        r = svc2.lookup(rid)
+        np.testing.assert_array_equal(r.labels, got[rid].labels)
+        np.testing.assert_array_equal(r.scores, got[rid].scores)
+    # the realigned bank re-draws the NEXT words: remaining requests are
+    # bit-exact with the uninterrupted reference
+    got.update(_one_at_a_time(svc2, b[3:]))
+    _assert_same_responses(got, ref)
+
+
+def test_restart_never_double_draws(fitted, tmp_path):
+    km, res = fitted
+    b = _batches(2)
+    ck = ServeCheckpointer(str(tmp_path / "ck"))
+    svc = _service(km, res, checkpointer=ck)
+    _one_at_a_time(svc, b[:1])
+    consumed_before = svc.bank.consumed_counts()
+    svc2 = _service(km, res,
+                    checkpointer=ServeCheckpointer(str(tmp_path / "ck")))
+    # the reloaded bank starts exactly where the dead one stopped
+    assert svc2.bank.consumed_counts() == consumed_before
+    _one_at_a_time(svc2, b[1:])
+    after = svc2.bank.consumed_counts()
+    assert all(after[k] >= v for k, v in consumed_before.items())
+
+
+# ---------------------------------------------------------------------------
+# background loop + wire frontend under faults
+# ---------------------------------------------------------------------------
+
+def test_background_loop_serves_and_records_latency(fitted):
+    km, res = fitted
+    b = _batches(4)
+    ref = _one_at_a_time(_service(km, res), b)
+    svc = _service(km, res, provision_copies=8)
+    svc.start()
+    try:
+        rids = []
+        for xa, xb in b:                # one at a time: match the ref's
+            rid = svc.submit(xa, xb)    # grouping
+            assert svc.response(rid, timeout=60) is not None
+            rids.append(rid)
+        for i, rid in enumerate(rids):
+            r = svc.lookup(rid)
+            np.testing.assert_array_equal(r.labels, ref[i].labels)
+            np.testing.assert_array_equal(r.scores, ref[i].scores)
+    finally:
+        svc.close()
+    assert svc.loop_errors == 0
+    assert len(svc.stats.latencies) == len(b)
+    assert svc.stats.latency_quantile(0.5) > 0.0
+
+
+def test_wire_chaos_authenticated_bit_exact(fitted):
+    """Drop/dup/corrupt on the client's send side with keyed frames: the
+    MAC rejects tampered frames like corruption, retries ride the rid
+    dedup, and every response is bit-exact with the direct run."""
+    km, res = fitted
+    b = _batches(4)
+    ref = _one_at_a_time(_service(km, res), b)
+    key = session_key("serving-plane-test")
+    ta, tb = LoopbackTransport.pair()
+    ft = FaultyTransport(ta, seed=9, drop=0.15, dup=0.15, corrupt=0.2)
+    svc = _service(km, res, provision_copies=8)
+    server = ScoringServer(svc, tb, idle_timeout_s=30.0, auth_key=key)
+    th = threading.Thread(target=server.serve_forever, daemon=True)
+    th.start()
+    client = ScoringClient(ft, auth_key=key, deadline_s=20.0)
+    got = {}
+    for xa, xb in b:
+        r = client.score(xa, xb)
+        got[r.request_id] = r
+    client.bye()
+    th.join(timeout=30)
+    _assert_same_responses(got, ref)
+    f = ft.faults
+    assert f.dropped + f.duplicated + f.corrupted > 0
+    assert server.responder.crc_drops > 0 or f.corrupted == 0
+
+
+def test_unkeyed_frames_rejected_by_keyed_decoder():
+    key = session_key("k1")
+    dec = FrameDecoder(key=key)
+    assert dec.feed(encode_frame(T_SCORE, 0, b"payload")) == []  # unkeyed
+    assert dec.auth_errors == 1
+    keyed = encode_frame(T_SCORE, 1, b"payload", key=key)
+    tampered = bytearray(keyed)
+    tampered[-1] ^= 1
+    assert dec.feed(bytes(tampered)) == []                       # forged
+    assert dec.auth_errors == 2
+    frames = dec.feed(keyed)                                     # genuine
+    assert frames == [(T_SCORE, 1, b"payload")]
+
+
+# ---------------------------------------------------------------------------
+# two-process chaos: kill the server mid-run, restart, exactly once
+# ---------------------------------------------------------------------------
+
+def _spawn_server(args, env):
+    p = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve_kmeans"] + args,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env)
+    for line in p.stdout:
+        m = re.match(r"SERVING (\d+)", line)
+        if m:
+            return p, int(m.group(1))
+    raise RuntimeError(f"server died before SERVING: rc={p.wait()}")
+
+
+def test_wire_server_kill_restart_exactly_once(tmp_path):
+    """The acceptance chaos run: seeded drop/dup/delay on the wire, the
+    server os._exits right after its 3rd journaled response, a fresh
+    server on the SAME port resumes from the checkpoint, and the client's
+    rid-pinned retries get every one of 6 requests answered exactly once
+    — bit-exact vs a fault-free in-process run."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    ck = str(tmp_path / "ck")
+    base = ["--n-train", "200", "--d-a", str(D_A), "--d-b", str(D_B),
+            "--k", str(K), "--iters", "2", "--rungs", "16",
+            "--serve-checkpoint-dir", ck, "--auth-key", "hunter2",
+            "--provision-copies", "16", "--idle-timeout", "120",
+            "--seed", "0"]
+    p, port = _spawn_server(base + ["--serve-port", "0",
+                                    "--die-after-responses", "3"], env)
+    b = _batches(6)
+    t = SocketTransport("connect", port=port, io_timeout_s=5.0)
+    ft = FaultyTransport(t, seed=11, drop=0.05, dup=0.05, delay_s=0.002)
+    client = ScoringClient(ft, auth_key=session_key("hunter2"),
+                           deadline_s=10.0, waves=2, retry_wait_s=0.2)
+    got = {}
+    restarted = False
+    try:
+        for i, (xa, xb) in enumerate(b):
+            while True:
+                try:
+                    got[i] = client.score(xa, xb, rid=i)
+                    break
+                except Exception:
+                    # server died mid-request: restart it on the SAME
+                    # port with the SAME checkpoint dir (no die flag)
+                    assert not restarted, "server unreachable after restart"
+                    assert p.wait(timeout=60) == 17
+                    p.stdout.read()
+                    p, port2 = _spawn_server(
+                        base + ["--serve-port", str(port)], env)
+                    assert port2 == port
+                    restarted = True
+        client.bye()
+    finally:
+        t.close()
+        try:
+            p.stdout.read()
+            p.wait(timeout=60)
+        except Exception:
+            p.kill()
+    assert restarted, "die-after-responses never fired"
+    assert sorted(got) == list(range(6))
+
+    # fault-free direct reference (same deterministic fit as the server)
+    ds = FraudDataset.synthesize(n=200, d_a=D_A, d_b=D_B, n_clusters=K,
+                                 seed=0)
+    km = SecureKMeans(KMeansConfig(k=K, iters=2, seed=0, offline="pooled"))
+    res = km.fit(ds.x_a, ds.x_b)
+    ref = _one_at_a_time(_service(km, res, provision_copies=16), b)
+    _assert_same_responses(got, ref)
