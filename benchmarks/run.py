@@ -23,8 +23,9 @@ def main() -> None:
 
     from benchmarks import (fig2_online_offline, fig3_vectorization,
                             fig4_sparse, kernel_bench, load_bench,
-                            offline_bench, online_offline, pipeline_bench,
-                            q5_fraud, serve_bench, table1_2, wire_bench)
+                            obs_bench, offline_bench, online_offline,
+                            pipeline_bench, q5_fraud, serve_bench,
+                            table1_2, wire_bench)
 
     suites = {
         "table1_2_runtime_comm": lambda: table1_2.run(quick=args.quick),
@@ -66,6 +67,12 @@ def main() -> None:
         # kill/restart chaos leg (exactly-once, bit-exact), persisted to
         # benchmarks/BENCH_load.json
         "load": lambda: load_bench.run(quick=args.quick),
+        # `--only obs --quick` is the observability smoke: tracing-on vs
+        # tracing-off online-fit and serve-drain walls (<=1.05x asserted,
+        # outputs bit-identical), the disabled-path ns/call, and span
+        # coverage; persists benchmarks/BENCH_obs.json + the sample
+        # Perfetto trace benchmarks/trace_sample.json
+        "obs": lambda: obs_bench.run(quick=args.quick),
     }
     derived_fns = {
         "table1_2_runtime_comm": table1_2.derived,
@@ -80,6 +87,7 @@ def main() -> None:
         "offline": offline_bench.derived,
         "wire": wire_bench.derived,
         "load": load_bench.derived,
+        "obs": obs_bench.derived,
     }
     if args.only:
         keep = set(args.only.split(","))

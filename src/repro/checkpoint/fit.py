@@ -31,6 +31,7 @@ import shutil
 import numpy as np
 
 from repro.core.triples import _key_from_str, _key_to_str
+from repro.obs import trace as _trace
 
 
 @dataclasses.dataclass
@@ -97,6 +98,12 @@ class FitCheckpointer:
         return os.path.join(self.dir, f"step_{step:010d}")
 
     def save(self, state: FitState) -> str:
+        with _trace.span("checkpoint.fit_save", step=int(state.step),
+                         iteration=int(state.iteration),
+                         batch=int(state.batch)):
+            return self._save(state)
+
+    def _save(self, state: FitState) -> str:
         arrays = {"mu0": np.asarray(state.mu0, np.uint64),
                   "mu1": np.asarray(state.mu1, np.uint64)}
         if state.acc is not None:

@@ -41,6 +41,7 @@ import os
 import numpy as np
 
 from repro.core.triples import TripleBank, _key_from_str, _key_to_str
+from repro.obs import trace as _trace
 
 JOURNAL_FORMAT = "repro.servejournal"
 JOURNAL_VERSION = 1
@@ -86,6 +87,11 @@ class ServeCheckpointer:
         the bank's CUMULATIVE per-class consumed counts at publish time.
         Later batches carry larger counts, so the newest file alone
         realigns a reloaded bank."""
+        with _trace.span("checkpoint.journal", batch=int(self._batch),
+                         responses=len(responses)):
+            return self._record(responses, consumed)
+
+    def _record(self, responses, consumed: dict) -> str:
         arrays = {}
         metas = []
         for j, r in enumerate(responses):

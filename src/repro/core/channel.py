@@ -30,6 +30,7 @@ import hashlib
 import hmac
 import io
 import json
+import logging
 import struct
 import threading
 import time
@@ -37,6 +38,11 @@ import zlib
 from collections import defaultdict
 
 import numpy as np
+
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+_WIRE_LOG = logging.getLogger("repro.wire")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +203,18 @@ T_BYE = 4          # orderly shutdown of the responder loop
 T_SCORE = 5        # scoring request: blob of {rid, deadline_s} + x_a/x_b
 RESP_BIT = 0x80
 
+# optional trace-id header extension: a frame whose ftype carries
+# TRACE_BIT prefixes its payload with an 8-byte request trace id, INSIDE
+# the CRC/MAC coverage (the id rides the existing checksum; a flipped
+# trace byte is corruption like any other). Frames without the bit are
+# byte-identical to the PR-8 format — old and new endpoints interoperate
+# on traceless traffic, and an old endpoint treats an unexpected
+# TRACE_BIT ftype like any unknown type (responder answers empty) rather
+# than mis-parsing, since the bit never collides with RESP_BIT (0x80) or
+# the type space (1..5).
+TRACE_BIT = 0x40
+TRACE_ID_BYTES = 8
+
 # keyed frames replace the CRC32 with a BLAKE2b MAC appended to the payload
 AUTH_TAG_BYTES = 16
 
@@ -239,11 +257,21 @@ def _mac(key: bytes, ftype: int, seq: int, payload: bytes) -> bytes:
 
 
 def encode_frame(ftype: int, seq: int, payload: bytes = b"", *,
-                 key: bytes | None = None) -> bytes:
+                 key: bytes | None = None,
+                 trace_id: bytes | None = None) -> bytes:
     """Encode one frame. With a session `key`, the CRC32 is REPLACED by a
     keyed MAC: the tag is appended to the payload and the header checksum
     field is zeroed, so keyed and unkeyed endpoints reject each other's
-    frames the same way they reject corruption."""
+    frames the same way they reject corruption. With a `trace_id`
+    (exactly `TRACE_ID_BYTES`), the ftype carries `TRACE_BIT` and the id
+    is prepended to the payload under the same CRC/MAC coverage; without
+    one the emitted bytes are identical to the pre-trace format."""
+    if trace_id is not None:
+        if len(trace_id) != TRACE_ID_BYTES:
+            raise ValueError(f"trace_id must be {TRACE_ID_BYTES} bytes, "
+                             f"got {len(trace_id)}")
+        ftype |= TRACE_BIT
+        payload = trace_id + payload
     if key is None:
         return _HEADER.pack(FRAME_MAGIC, ftype, seq, len(payload),
                             _crc(ftype, seq, payload)) + payload
@@ -251,12 +279,29 @@ def encode_frame(ftype: int, seq: int, payload: bytes = b"", *,
     return _HEADER.pack(FRAME_MAGIC, ftype, seq, len(body), 0) + body
 
 
-def decode_frame(buf: bytes, *,
-                 key: bytes | None = None) -> tuple[int, int, bytes]:
+def _split_trace(ftype: int, payload: bytes, seq: int):
+    """Strip the TRACE_BIT extension: (base ftype, payload, trace_id)."""
+    if not ftype & TRACE_BIT:
+        return ftype, payload, None
+    if len(payload) < TRACE_ID_BYTES:
+        raise FrameCorrupt(f"TRACE_BIT frame on seq {seq} shorter than "
+                           "its trace id")
+    return (ftype & ~TRACE_BIT, payload[TRACE_ID_BYTES:],
+            payload[:TRACE_ID_BYTES])
+
+
+def decode_frame(buf: bytes, *, key: bytes | None = None,
+                 with_trace: bool = False):
     """Decode ONE complete frame; raises `FrameError`/`FrameCorrupt`.
     With a session `key`, the trailing MAC is verified (constant-time)
     instead of the CRC; unkeyed or tampered frames fail exactly like
-    corrupt ones and are dropped/resent by the reliability layer."""
+    corrupt ones and are dropped/resent by the reliability layer.
+
+    Returns `(ftype, seq, payload)`; with `with_trace=True` returns
+    `(ftype, seq, payload, trace_id | None)` — TRACE_BIT stripped from
+    the ftype and the 8-byte id split off the payload. The default
+    3-tuple keeps every pre-trace call site working; a traced frame
+    decoded without `with_trace` surfaces its raw extended form."""
     if len(buf) < HEADER_BYTES:
         raise FrameError(f"short frame: {len(buf)} < header {HEADER_BYTES}")
     magic, ftype, seq, length, crc = _HEADER.unpack_from(buf)
@@ -273,10 +318,41 @@ def decode_frame(buf: bytes, *,
         payload, tag = body[:-AUTH_TAG_BYTES], body[-AUTH_TAG_BYTES:]
         if not hmac.compare_digest(tag, _mac(key, ftype, seq, payload)):
             raise FrameCorrupt(f"MAC mismatch on seq {seq}")
+    else:
+        if _crc(ftype, seq, body) != crc:
+            raise FrameCorrupt(f"crc mismatch on seq {seq}")
+        payload = body
+    if not with_trace:
         return ftype, seq, payload
-    if _crc(ftype, seq, body) != crc:
-        raise FrameCorrupt(f"crc mismatch on seq {seq}")
-    return ftype, seq, body
+    ftype, payload, trace_id = _split_trace(ftype, payload, seq)
+    return ftype, seq, payload, trace_id
+
+
+class _RateLimitedWarn:
+    """At most one warning line per `interval_s` per event kind — chaos
+    schedules inject hundreds of corrupt frames and the point is a
+    diagnosable log, not a flooded one. Suppressed occurrences are
+    summarized in the next emitted line."""
+
+    def __init__(self, interval_s: float = 5.0):
+        self.interval_s = float(interval_s)
+        self._lock = threading.Lock()
+        self._state: dict[str, list] = {}   # kind -> [last_emit, muted]
+
+    def warn(self, kind: str, msg: str) -> None:
+        now = time.monotonic()
+        with self._lock:
+            last, muted = self._state.get(kind, (None, 0))
+            if last is not None and now - last < self.interval_s:
+                self._state[kind] = [last, muted + 1]
+                return
+            self._state[kind] = [now, 0]
+        if muted:
+            msg += f" (+{muted} similar suppressed)"
+        _WIRE_LOG.warning(msg)
+
+
+_rate_warn = _RateLimitedWarn()
 
 
 class FrameDecoder:
@@ -285,13 +361,20 @@ class FrameDecoder:
     Integrity-failed frames are dropped and counted (`crc_errors`; keyed
     decoders additionally count MAC failures in `auth_errors`); a bad
     magic means the byte stream itself desynced — unrecoverable without a
-    reconnect — so it raises `FrameError`."""
+    reconnect — so it raises `FrameError`. Every drop/desync is also
+    routed to the metrics registry (`repro_frame_*_total`) and surfaces
+    as a rate-limited `repro.wire` warning, so chaos-test noise is
+    diagnosable from logs alone instead of sitting in a bare counter."""
 
     def __init__(self, key: bytes | None = None) -> None:
         self._buf = bytearray()
         self.key = key
         self.crc_errors = 0
         self.auth_errors = 0
+        reg = _metrics.get_registry()
+        self._m_crc = reg.counter("repro_frame_crc_errors_total")
+        self._m_auth = reg.counter("repro_frame_auth_errors_total")
+        self._m_desync = reg.counter("repro_frame_resync_events_total")
 
     def feed(self, data: bytes) -> list[tuple[int, int, bytes]]:
         self._buf += data
@@ -300,8 +383,17 @@ class FrameDecoder:
             magic, _ftype, _seq, length, _crc_f = _HEADER.unpack_from(
                 self._buf)
             if magic != FRAME_MAGIC:
+                self._m_desync.inc()
+                _rate_warn.warn("desync",
+                                f"frame stream desync: bad magic "
+                                f"{magic:#x} with {len(self._buf)} B "
+                                "buffered; connection must reconnect")
                 raise FrameError(f"bad magic {magic:#x}: stream desync")
             if length > MAX_FRAME_PAYLOAD:
+                self._m_desync.inc()
+                _rate_warn.warn("desync",
+                                f"frame stream desync: oversized frame "
+                                f"({length} B)")
                 raise FrameError(f"oversized frame ({length} B)")
             end = HEADER_BYTES + length
             if len(self._buf) < end:
@@ -310,10 +402,17 @@ class FrameDecoder:
             del self._buf[:end]
             try:
                 out.append(decode_frame(frame, key=self.key))
-            except FrameCorrupt:
+            except FrameCorrupt as e:
                 self.crc_errors += 1
                 if self.key is not None:
                     self.auth_errors += 1
+                    self._m_auth.inc()
+                    _rate_warn.warn("auth",
+                                    f"dropped unauthenticated frame: {e}")
+                else:
+                    self._m_crc.inc()
+                    _rate_warn.warn("crc",
+                                    f"dropped corrupt frame: {e}")
         return out
 
     def pending(self) -> int:
@@ -723,12 +822,25 @@ class ReliableChannel:
         self.retries = 0
         self.crc_drops = 0
         self.reconnects = 0
+        reg = _metrics.get_registry()
+        self._m_retries = reg.counter("repro_wire_retries_total")
+        self._m_crc_drops = reg.counter("repro_wire_resp_drops_total")
+        self._m_reconnects = reg.counter("repro_wire_reconnects_total")
 
     def request(self, ftype: int, payload: bytes = b"", *,
-                deadline_s: float | None = None) -> bytes:
+                deadline_s: float | None = None,
+                trace_id: bytes | None = None) -> bytes:
+        with _trace.span("wire.request", ftype=ftype, seq=self._seq):
+            return self._request(ftype, payload, deadline_s=deadline_s,
+                                 trace_id=trace_id)
+
+    def _request(self, ftype: int, payload: bytes, *,
+                 deadline_s: float | None,
+                 trace_id: bytes | None) -> bytes:
         seq = self._seq
         self._seq += 1
-        frame = encode_frame(ftype, seq, payload, key=self.auth_key)
+        frame = encode_frame(ftype, seq, payload, key=self.auth_key,
+                             trace_id=trace_id)
         want = ftype | RESP_BIT
         deadline = time.monotonic() + (self.deadline_s if deadline_s is None
                                        else float(deadline_s))
@@ -751,19 +863,23 @@ class ReliableChannel:
                     except TimeoutError:
                         break
                     try:
-                        ft, rseq, rpayload = decode_frame(
-                            raw, key=self.auth_key)
+                        ft, rseq, rpayload, _rtid = decode_frame(
+                            raw, key=self.auth_key, with_trace=True)
                     except FrameError:
                         self.crc_drops += 1   # corrupt/forged: wait/resend
+                        self._m_crc_drops.inc()
                         continue
                     if ft == want and rseq == seq:
                         return rpayload
                     # stale duplicate response of an earlier seq: ignore
             except ConnectionError:
                 self.reconnects += 1
+                self._m_reconnects.inc()
                 self.t.reconnect()
             attempt += 1
             self.retries += 1
+            self._m_retries.inc()
+            _trace.instant("wire.retry", seq=seq, attempt=attempt)
             if attempt > self.max_retries:
                 raise WireError(
                     f"request seq={seq} ftype={ftype} failed after "
@@ -798,6 +914,10 @@ class Responder:
         self.served = 0
         self._last_seq = -1
         self._last_resp: bytes | None = None
+        reg = _metrics.get_registry()
+        self._m_crc_drops = reg.counter("repro_responder_crc_drops_total")
+        self._m_dedup = reg.counter("repro_responder_dedup_replays_total")
+        self._m_stale = reg.counter("repro_responder_stale_drops_total")
 
     def _reply(self, resp: bytes) -> None:
         try:
@@ -831,22 +951,37 @@ class Responder:
                 continue
             last_frame = time.monotonic()
             try:
-                ftype, seq, payload = decode_frame(raw, key=self.auth_key)
+                ftype, seq, payload, trace_id = decode_frame(
+                    raw, key=self.auth_key, with_trace=True)
             except FrameError:
                 self.crc_drops += 1
+                self._m_crc_drops.inc()
                 continue
             if ftype & RESP_BIT:
                 continue                           # echo of our own class
             if seq == self._last_seq:
                 self.dedup_replays += 1
+                self._m_dedup.inc()
                 self._reply(self._last_resp)
                 continue
             if seq < self._last_seq:
                 self.stale_drops += 1              # late duplicate
+                self._m_stale.inc()
                 continue
-            resp_payload = self.handler(ftype, payload)
+            # the frame's trace id becomes this thread's ambient trace for
+            # the handler's whole downstream (spans tag themselves with it)
+            # and is echoed on the response so the requester can match
+            if trace_id is not None:
+                _trace.set_current_trace(_trace.trace_id_from_bytes(
+                    trace_id))
+            try:
+                with _trace.span("wire.handle", ftype=ftype, seq=seq):
+                    resp_payload = self.handler(ftype, payload)
+            finally:
+                if trace_id is not None:
+                    _trace.set_current_trace(None)
             resp = encode_frame(ftype | RESP_BIT, seq, resp_payload,
-                                key=self.auth_key)
+                                key=self.auth_key, trace_id=trace_id)
             self._last_seq, self._last_resp = seq, resp
             self.served += 1
             self._reply(resp)
@@ -895,7 +1030,11 @@ class WireSession:
         self.blobs = 0
 
     def exchange(self, nbytes: int, rounds: int = 1) -> int:
-        nbytes = int(nbytes)
+        with _trace.span("wire.exchange", nbytes=int(nbytes),
+                         rounds=int(rounds)):
+            return self._exchange(int(nbytes), int(rounds))
+
+    def _exchange(self, nbytes: int, rounds: int) -> int:
         rounds = max(1, int(rounds)) if nbytes else int(rounds)
         total = 0
         for r in range(rounds):

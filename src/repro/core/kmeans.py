@@ -41,6 +41,7 @@ from repro.core.sparse import CSRMatrix, secure_sparse_matmul
 from repro.core.triples import (BankSlotDealer, PlanningDealer, PooledDealer,
                                 SlotDealer, StreamingPooledDealer, TriplePlan,
                                 TrustedDealer, serve_seed)
+from repro.obs import trace as _trace
 
 
 @dataclasses.dataclass
@@ -200,6 +201,16 @@ class SecureKMeans:
     def fit(self, x_a: np.ndarray, x_b: np.ndarray, *,
             dealer=None, wire=None, checkpoint=None,
             resume: bool = False) -> KMeansResult:
+        with _trace.span("fit", rows=int(np.asarray(x_a).shape[0]),
+                         k=self.cfg.k, iters=self.cfg.iters,
+                         sparse=self.cfg.sparse,
+                         wired=wire is not None):
+            return self._fit(x_a, x_b, dealer=dealer, wire=wire,
+                             checkpoint=checkpoint, resume=resume)
+
+    def _fit(self, x_a: np.ndarray, x_b: np.ndarray, *,
+             dealer=None, wire=None, checkpoint=None,
+             resume: bool = False) -> KMeansResult:
         """Jointly cluster the two parties' data. `dealer` (optional)
         supplies the fit's correlated randomness from an EXTERNAL provider —
         pass a `TripleBank.dealer(key)` view over a bank provisioned with
@@ -381,17 +392,22 @@ class SecureKMeans:
                         # determined traffic (incl. Protocol 2's) is replayed
                         # from iter_comm below; only he_seconds must flow back
                         hx = ctx.fork(tag="S1")
-                        he1 = self._s1_he_inputs(hx, enc_a, enc_b, csr_a, csr_b,
-                                                 mu)
-                    flat1 = materialize(progs.s1_requests, ctx.dealer)
-                    c0, c1 = progs.s1(dev_a, dev_b, mu.s0, mu.s1, *he1, *flat1)
+                        with _trace.span("fit.s1_exchange", iter=it):
+                            he1 = self._s1_he_inputs(hx, enc_a, enc_b,
+                                                     csr_a, csr_b, mu)
+                    with _trace.span("fit.s1_launch", iter=it):
+                        flat1 = materialize(progs.s1_requests, ctx.dealer)
+                        c0, c1 = progs.s1(dev_a, dev_b, mu.s0, mu.s1,
+                                          *he1, *flat1)
                     c = AShare(c0, c1)
                     if cfg.sparse:
                         hx.tag = "S3"
-                        he3 = self._s3_he_inputs(hx, csr_at, csr_bt, c)
-                    flat3 = materialize(progs.s3_requests, ctx.dealer)
-                    mu0, mu1 = progs.s3(dev_a, dev_b, mu.s0, mu.s1, c0, c1,
-                                        *he3, *flat3)
+                        with _trace.span("fit.s2_callback", iter=it):
+                            he3 = self._s3_he_inputs(hx, csr_at, csr_bt, c)
+                    with _trace.span("fit.s3_launch", iter=it):
+                        flat3 = materialize(progs.s3_requests, ctx.dealer)
+                        mu0, mu1 = progs.s3(dev_a, dev_b, mu.s0, mu.s1,
+                                            c0, c1, *he3, *flat3)
                     mu = AShare(mu0, mu1)
                     if hx is not None:
                         ctx.add_he_seconds(hx.he_seconds)
@@ -401,18 +417,22 @@ class SecureKMeans:
                     ctx.log.merge(iter_comm, phase="online")
                 else:
                     ctx.tag = "S1"
-                    dist = self._distances(ctx, enc_a, enc_b, csr_a, csr_b, mu)
+                    with _trace.span("fit.s1_distances", iter=it):
+                        dist = self._distances(ctx, enc_a, enc_b, csr_a,
+                                               csr_b, mu)
                     ctx.tag = "S2"
                     r_before = ctx.log.total_rounds("online")
-                    c = P.argmin_onehot(ctx, dist)            # (n, k) scale 1
+                    with _trace.span("fit.s2_argmin", iter=it):
+                        c = P.argmin_onehot(ctx, dist)        # (n, k) scale 1
                     if not cfg.vectorized:
                         # pre-vectorization: each of the n samples runs its own
                         # tournament (n separate interaction chains per round)
                         dr = ctx.log.total_rounds("online") - r_before
                         _naive_extra_rounds(ctx, (n - 1) * dr + 1)
                     ctx.tag = "S3"
-                    mu = self._update(ctx, enc_a, enc_b, csr_a, csr_b, c, mu_old,
-                                      n)
+                    with _trace.span("fit.s3_update", iter=it):
+                        mu = self._update(ctx, enc_a, enc_b, csr_a, csr_b,
+                                          c, mu_old, n)
                 if cfg.tol is not None:
                     ctx.tag = "CSC"
                     if self._converged(ctx, mu_old, mu, cfg.tol):
@@ -889,6 +909,14 @@ class SecureKMeans:
             prep = self.predict_prepare(x_a, x_b, result, dealer=dealer,
                                         with_scores=with_scores, wire=wire)
             return self.predict_collect(prep, self.predict_launch(prep))
+        with _trace.span("predict.eager", rows=int(x_a.shape[0]),
+                         scores=with_scores):
+            return self._predict_eager(x_a, x_b, result, dealer=dealer,
+                                       with_scores=with_scores, wire=wire)
+
+    def _predict_eager(self, x_a, x_b, result, *, dealer,
+                       with_scores: bool, wire=None) -> PredictResult:
+        cfg = self.cfg
         t0 = time.perf_counter()
         enc_a = _encode_np(x_a, cfg.f)
         enc_b = _encode_np(x_b, cfg.f)
@@ -944,61 +972,65 @@ class SecureKMeans:
                 "non-default f / unvectorized / numpy-backend configs must "
                 "score through predict/score (eager path)")
         from repro.launch import kmeans_step as K
-        t0 = time.perf_counter()
-        enc_a = _encode_np(x_a, cfg.f)
-        enc_b = _encode_np(x_b, cfg.f)
-        csr_a = CSRMatrix.from_dense(enc_a) if cfg.sparse else None
-        csr_b = CSRMatrix.from_dense(enc_b) if cfg.sparse else None
-        log = CommLog()
-        log.wire = wire
-        if dealer is None:
-            # domain-separated from the fit's streams (see _predict)
-            dealer = TrustedDealer(seed=serve_seed(cfg.seed), log=log)
-        ctx = P.Ctx(dealer=dealer, log=log, backend=cfg.backend)
-        ctx.vectorized = cfg.vectorized
-        ctx.tag = "predict"
-        mu = result.centroids
-        prog = K.predict_program(cfg.partition, cfg.sparse,
-                                 enc_a.shape, enc_b.shape, cfg.k,
-                                 with_scores=with_scores,
-                                 backend=cfg.backend)
-        _, comm = self._plan_predict_cached(x_a.shape, x_b.shape,
-                                            with_scores)
-        he1 = []
-        if cfg.sparse:
-            # scratch log (Ctx.fork): the launch's shape-determined traffic
-            # — the exchange's included — replays from the traced plan's
-            # CommLog at collect time
-            hx = ctx.fork(tag="predict")
-            he1 = self._s1_he_inputs(hx, enc_a, enc_b, csr_a, csr_b, mu)
-        flat = K.materialize_offline(prog.requests, ctx.dealer)
-        args = (jnp.asarray(enc_a), jnp.asarray(enc_b), mu.s0, mu.s1,
-                *he1, *flat)
-        return PreparedPredict(prog=prog, args=args, log=log, comm=comm,
-                               with_scores=with_scores, x_a=x_a, x_b=x_b,
-                               t0=t0)
+        with _trace.span("predict.prepare", rows=int(x_a.shape[0]),
+                         scores=with_scores):
+            t0 = time.perf_counter()
+            enc_a = _encode_np(x_a, cfg.f)
+            enc_b = _encode_np(x_b, cfg.f)
+            csr_a = CSRMatrix.from_dense(enc_a) if cfg.sparse else None
+            csr_b = CSRMatrix.from_dense(enc_b) if cfg.sparse else None
+            log = CommLog()
+            log.wire = wire
+            if dealer is None:
+                # domain-separated from the fit's streams (see _predict)
+                dealer = TrustedDealer(seed=serve_seed(cfg.seed), log=log)
+            ctx = P.Ctx(dealer=dealer, log=log, backend=cfg.backend)
+            ctx.vectorized = cfg.vectorized
+            ctx.tag = "predict"
+            mu = result.centroids
+            prog = K.predict_program(cfg.partition, cfg.sparse,
+                                     enc_a.shape, enc_b.shape, cfg.k,
+                                     with_scores=with_scores,
+                                     backend=cfg.backend)
+            _, comm = self._plan_predict_cached(x_a.shape, x_b.shape,
+                                                with_scores)
+            he1 = []
+            if cfg.sparse:
+                # scratch log (Ctx.fork): the launch's shape-determined
+                # traffic — the exchange's included — replays from the
+                # traced plan's CommLog at collect time
+                hx = ctx.fork(tag="predict")
+                he1 = self._s1_he_inputs(hx, enc_a, enc_b, csr_a, csr_b, mu)
+            flat = K.materialize_offline(prog.requests, ctx.dealer)
+            args = (jnp.asarray(enc_a), jnp.asarray(enc_b), mu.s0, mu.s1,
+                    *he1, *flat)
+            return PreparedPredict(prog=prog, args=args, log=log, comm=comm,
+                                   with_scores=with_scores, x_a=x_a,
+                                   x_b=x_b, t0=t0)
 
     def predict_launch(self, prep: "PreparedPredict"):
         """Dispatch the staged scoring program — asynchronous under jax:
         the raw output buffers come back immediately while the device
         computes."""
-        return prep.prog.fn(*prep.args)
+        with _trace.span("predict.launch"):
+            return prep.prog.fn(*prep.args)
 
     def predict_collect(self, prep: "PreparedPredict",
                         outs) -> PredictResult:
         """Reveal-side assembly of one launch's outputs (blocks on the
         device): assignment shares, optional score shares (winning D' +
         locally-encoded ||x||^2), replayed traffic tallies."""
-        c = AShare(outs[0], outs[1])
-        scores = None
-        if prep.with_scores:
-            vmin = AShare(outs[2], outs[3])
-            scores = P.add(vmin, self._norm_shares(prep.x_a, prep.x_b))
-        prep.log.merge(prep.comm, phase="online")
-        jnp.asarray(c.s0).block_until_ready()
-        return PredictResult(assignment=c, scores=scores, log=prep.log,
-                             seconds=time.perf_counter() - prep.t0,
-                             f=self.cfg.f)
+        with _trace.span("predict.collect"):
+            c = AShare(outs[0], outs[1])
+            scores = None
+            if prep.with_scores:
+                vmin = AShare(outs[2], outs[3])
+                scores = P.add(vmin, self._norm_shares(prep.x_a, prep.x_b))
+            prep.log.merge(prep.comm, phase="online")
+            jnp.asarray(c.s0).block_until_ready()
+            return PredictResult(assignment=c, scores=scores, log=prep.log,
+                                 seconds=time.perf_counter() - prep.t0,
+                                 f=self.cfg.f)
 
     def _traceable_backend(self) -> bool:
         """The numpy ring backend runs host-side and cannot lower into the

@@ -47,6 +47,7 @@ from repro.core import ring
 from repro.core.he import KAPPA_STAT, OU_COST_S
 from repro.core.protocol import Ctx
 from repro.core.sharing import AShare
+from repro.obs import trace as _trace
 
 
 class CSRMatrix:
@@ -173,6 +174,21 @@ def secure_sparse_matmul(ctx: Ctx, x: CSRMatrix, y_share_b: np.ndarray, he,
                          trunc_f: int | None = None,
                          time_model: dict | None = None,
                          batched: bool = True) -> AShare:
+    """Traced entry point for Protocol 2: the HE joint-product exchange is
+    the dominant host-side hot seam of a sparse fit, so it gets its own
+    span (`he.exchange`, tagged with the problem shape)."""
+    with _trace.span("he.exchange", n=x.shape[0], d=x.shape[1],
+                     k=int(y_share_b.shape[1]), nnz=int(x.nnz)):
+        return _secure_sparse_matmul(ctx, x, y_share_b, he,
+                                     value_bits=value_bits, trunc_f=trunc_f,
+                                     time_model=time_model, batched=batched)
+
+
+def _secure_sparse_matmul(ctx: Ctx, x: CSRMatrix, y_share_b: np.ndarray, he,
+                          *, value_bits: int | None = None,
+                          trunc_f: int | None = None,
+                          time_model: dict | None = None,
+                          batched: bool = True) -> AShare:
     """Protocol 2. `y_share_b` is party B's plaintext-held (d, k) ring matrix
     (e.g. its additive share of the centroids); A's share of Y is handled by
     the caller with a plain local sparse matmul (X is public to A).

@@ -33,6 +33,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, NamedTuple
 
+from repro.obs import trace as _trace
+
 
 @dataclasses.dataclass
 class PipelineError:
@@ -79,32 +81,49 @@ def run_pipeline(tasks, pipeline: bool = True,
     poisoned request must not take down its whole group."""
     tasks = list(tasks)
     results = []
+    span = _trace.span   # per-phase spans: one branch each when disabled
 
-    def _phases(t, prep, already_prepped: bool):
-        if not already_prepped:
+    def _launch(t, i, prep):
+        with span("pipeline.launch", task=i):
+            return t.launch(prep)
+
+    def _mid_post(t, i, prep, out):
+        if t.mid is not None:
+            with span("pipeline.mid", task=i):
+                m = t.mid(prep, out)
+        else:
+            m = None
+        if t.post is None:
+            return out
+        with span("pipeline.post", task=i):
+            return t.post(prep, out, m)
+
+    def _phases(t, i):
+        with span("pipeline.pre", task=i):
             prep = t.pre()
-        out = t.launch(prep)
-        m = t.mid(prep, out) if t.mid is not None else None
-        return t.post(prep, out, m) if t.post is not None else out
+        out = _launch(t, i, prep)
+        return _mid_post(t, i, prep, out)
 
     if not pipeline:
         for i, t in enumerate(tasks):
             if capture_errors:
                 try:
-                    results.append(_phases(t, None, False))
+                    results.append(_phases(t, i))
                 except Exception as e:
                     results.append(PipelineError(i, e))
             else:
-                results.append(_phases(t, None, False))
+                results.append(_phases(t, i))
         return results
 
     def _pre(i):
         if i >= len(tasks):
             return None
         if not capture_errors:
-            return tasks[i].pre()
+            with span("pipeline.pre", task=i):
+                return tasks[i].pre()
         try:
-            return tasks[i].pre()
+            with span("pipeline.pre", task=i):
+                return tasks[i].pre()
         except Exception as e:
             return PipelineError(i, e)
 
@@ -118,10 +137,9 @@ def run_pipeline(tasks, pipeline: bool = True,
         nxt = _unset
         if capture_errors:
             try:
-                out = t.launch(prep)
+                out = _launch(t, i, prep)
                 nxt = _pre(i + 1)
-                m = t.mid(prep, out) if t.mid is not None else None
-                res = t.post(prep, out, m) if t.post is not None else out
+                res = _mid_post(t, i, prep, out)
             except Exception as e:
                 res = PipelineError(i, e)
                 if nxt is _unset:
@@ -130,10 +148,9 @@ def run_pipeline(tasks, pipeline: bool = True,
                     # dealer words, so re-running it would corrupt streams)
                     nxt = _pre(i + 1)
         else:
-            out = t.launch(prep)
+            out = _launch(t, i, prep)
             nxt = _pre(i + 1)
-            m = t.mid(prep, out) if t.mid is not None else None
-            res = t.post(prep, out, m) if t.post is not None else out
+            res = _mid_post(t, i, prep, out)
         results.append(res)
         prep = nxt
     return results

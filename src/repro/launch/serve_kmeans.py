@@ -39,7 +39,21 @@ import numpy as np
 from repro.core.fraud import FraudDataset, detect_outliers, jaccard
 from repro.core.kmeans import KMeansConfig, SecureKMeans
 from repro.core.triples import TripleBank, serve_seed
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.serve import ScoringService
+
+
+def _finish_trace(trace_out: str | None, verbose: bool = True) -> None:
+    """Export the global tracer's Chrome trace + text flame summary."""
+    if not trace_out:
+        return
+    t = _trace.get_tracer()
+    t.export_chrome(trace_out)
+    if verbose:
+        print(f"trace: {len(t.events())} spans -> {trace_out} "
+              "(load in chrome://tracing or ui.perfetto.dev)")
+        print(t.flame_summary())
 
 
 def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
@@ -50,7 +64,10 @@ def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
           fit_from_bank: bool = False, provision_workers: int = 1,
           checkpoint_dir: str | None = None, resume: bool = False,
           checkpoint_every: int = 1, seed: int = 0,
-          verbose: bool = True) -> dict:
+          trace_out: str | None = None, metrics_port: int | None = None,
+          stats_interval: float = 0.0, verbose: bool = True) -> dict:
+    if trace_out:
+        _trace.configure(enabled=True, process="serve_kmeans")
     ds = FraudDataset.synthesize(n=n_train, d_a=d_a, d_b=d_b,
                                  n_clusters=k, seed=seed)
     km = SecureKMeans(KMeansConfig(k=k, iters=iters, seed=seed,
@@ -77,6 +94,15 @@ def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
     res = km.fit(ds.x_a, ds.x_b, dealer=fit_dealer, checkpoint=ckpt,
                  resume=resume)
     t_fit = time.perf_counter() - t0
+    # callback gauges READ the live CommLog: the registry's answer for
+    # online bytes is total_bytes("online") itself, not a second tally
+    _metrics.register_commlog(res.log)
+    mserver = None
+    if metrics_port is not None:
+        mserver = _metrics.MetricsServer(port=metrics_port)
+        mserver.start()
+        if verbose:
+            print(f"METRICS {mserver.port}", flush=True)
 
     bank = TripleBank(seed=serve_seed(seed))
     svc = ScoringService(km, res, bank=bank, rungs=rungs,
@@ -97,6 +123,11 @@ def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
     sizes = np.maximum(1, rng.poisson(mean_batch, requests))
     arrivals = FraudDataset.synthesize(n=int(sizes.sum()), d_a=d_a, d_b=d_b,
                                        n_clusters=k, seed=seed + 2)
+    slog = None
+    if stats_interval > 0:
+        slog = _metrics.StatsLineLogger(svc, bank=svc.bank,
+                                        interval_s=stats_interval)
+        slog.start()
     off = 0
     for m in sizes:
         svc.submit(arrivals.x_a[off:off + m], arrivals.x_b[off:off + m])
@@ -104,6 +135,12 @@ def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
     t0 = time.perf_counter()
     responses = svc.drain()
     t_drain = time.perf_counter() - t0
+    if slog is not None:
+        slog.stop()
+        if verbose:
+            print(slog.render())
+    if mserver is not None:
+        mserver.stop()
 
     scores = np.concatenate([r.scores for r in responses])
     flags = detect_outliers(scores, frac)
@@ -132,6 +169,7 @@ def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
               f"{out['replenish_events']} replenish events")
         print(f"stream outlier Jaccard vs planted fraud: {j:.3f} "
               "(only scores/flags revealed — the model stays shared)")
+    _finish_trace(trace_out, verbose)
     return out
 
 
@@ -144,7 +182,9 @@ def serve_wire(*, port: int = 0, auth_key: str | None = None,
                idle_timeout_s: float = 120.0,
                n_train: int = 400, d_a: int = 6, d_b: int = 6, k: int = 3,
                iters: int = 2, rungs=(16, 64), provision_copies: int = 8,
-               provision_workers: int = 1, seed: int = 0) -> None:
+               provision_workers: int = 1, seed: int = 0,
+               trace_out: str | None = None, metrics_port: int | None = None,
+               stats_interval: float = 0.0) -> None:
     """Wire-server mode: fit (deterministic — a restart refits the same
     model from the same seed), warm, listen, serve until BYE. The serving
     randomness is NOT refit-dependent: with a checkpoint dir the bank is
@@ -153,11 +193,14 @@ def serve_wire(*, port: int = 0, auth_key: str | None = None,
     from repro.core.channel import SocketTransport, WireTimeout, session_key
     from repro.serve import ScoringServer
 
+    if trace_out:
+        _trace.configure(enabled=True, process="server")
     ds = FraudDataset.synthesize(n=n_train, d_a=d_a, d_b=d_b,
                                  n_clusters=k, seed=seed)
     km = SecureKMeans(KMeansConfig(k=k, iters=iters, seed=seed,
                                    offline="pooled"))
     res = km.fit(ds.x_a, ds.x_b)
+    _metrics.register_commlog(res.log)
 
     ckpt = None
     if checkpoint_dir:
@@ -183,6 +226,16 @@ def serve_wire(*, port: int = 0, auth_key: str | None = None,
                          max_queue=max_queue, default_deadline_s=deadline_s,
                          checkpointer=ckpt, replenisher=repl)
     svc.warm()
+    mserver = None
+    if metrics_port is not None:
+        mserver = _metrics.MetricsServer(port=metrics_port)
+        mserver.start()
+        print(f"METRICS {mserver.port}", flush=True)
+    slog = None
+    if stats_interval > 0:
+        slog = _metrics.StatsLineLogger(svc, bank=svc.bank,
+                                        interval_s=stats_interval)
+        slog.start()
     t = SocketTransport("listen", port=port, io_timeout_s=idle_timeout_s)
     print(f"SERVING {t.port}", flush=True)
     server = ScoringServer(
@@ -196,7 +249,13 @@ def serve_wire(*, port: int = 0, auth_key: str | None = None,
     except WireTimeout as e:
         print(f"server idle timeout: {e}", flush=True)
     finally:
+        if slog is not None:
+            slog.stop()
+            print(slog.render(), flush=True)
+        if mserver is not None:
+            mserver.stop()
         t.close()
+        _finish_trace(trace_out)
 
 
 def main() -> None:
@@ -267,6 +326,16 @@ def main() -> None:
     ap.add_argument("--idle-timeout", type=float, default=120.0,
                     help="wire mode: give up after this much client "
                          "silence")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable span tracing and export a Chrome-trace / "
+                         "Perfetto JSON timeline here on exit")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the Prometheus text exposition on this "
+                         "port (0 = ephemeral, printed as "
+                         "'METRICS <port>')")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    help="log a one-line stats summary (latency quantiles "
+                         "+ bank_stock) every this many seconds")
     args = ap.parse_args()
     if args.serve_port is not None:
         serve_wire(port=args.serve_port, auth_key=args.auth_key,
@@ -280,7 +349,9 @@ def main() -> None:
                    rungs=tuple(int(r) for r in args.rungs.split(",")),
                    provision_copies=args.provision_copies or 8,
                    provision_workers=args.provision_workers,
-                   seed=args.seed)
+                   seed=args.seed, trace_out=args.trace_out,
+                   metrics_port=args.metrics_port,
+                   stats_interval=args.stats_interval)
         return
     serve(n_train=args.n_train, d_a=args.d_a, d_b=args.d_b, k=args.k,
           iters=args.iters, sparse=args.sparse,
@@ -293,7 +364,9 @@ def main() -> None:
           fit_from_bank=args.fit_from_bank,
           provision_workers=args.provision_workers,
           checkpoint_dir=args.checkpoint_dir, resume=args.resume,
-          checkpoint_every=args.checkpoint_every, seed=args.seed)
+          checkpoint_every=args.checkpoint_every, seed=args.seed,
+          trace_out=args.trace_out, metrics_port=args.metrics_port,
+          stats_interval=args.stats_interval)
 
 
 if __name__ == "__main__":

@@ -35,6 +35,21 @@ from repro.core.channel import (ReliableChannel, SocketTransport,
                                 WireSession, WireTimeout, serve_peer,
                                 session_key)
 from repro.core.kmeans import KMeansConfig, SecureKMeans
+from repro.obs import trace as _trace
+
+
+def _trace_setup(args) -> None:
+    if args.trace_out:
+        _trace.configure(enabled=True,
+                         process=f"party_{args.role.lower()}")
+
+
+def _trace_finish(args) -> None:
+    if args.trace_out:
+        t = _trace.get_tracer()
+        t.export_chrome(args.trace_out)
+        print(f"{args.role}: trace {len(t.events())} spans -> "
+              f"{args.trace_out}", flush=True)
 
 
 def make_data(n: int, d: int, k: int, seed: int,
@@ -62,6 +77,7 @@ def _auth(args) -> bytes | None:
 
 
 def _party_b(args) -> None:
+    _trace_setup(args)
     t = SocketTransport("connect", host=args.host, port=args.port,
                         io_timeout_s=args.io_timeout)
 
@@ -86,9 +102,11 @@ def _party_b(args) -> None:
     print(f"B: served {stats.served} requests, "
           f"{stats.dedup_replays} dedup replays", flush=True)
     t.close()
+    _trace_finish(args)
 
 
 def _party_a(args) -> None:
+    _trace_setup(args)
     t = SocketTransport("listen", host=args.host, port=args.port,
                         io_timeout_s=args.io_timeout)
     print(f"LISTENING {t.port}", flush=True)
@@ -161,6 +179,7 @@ def _party_a(args) -> None:
           flush=True)
     ws.bye()
     t.close()
+    _trace_finish(args)
 
 
 def main(argv=None) -> None:
@@ -197,6 +216,10 @@ def main(argv=None) -> None:
     ap.add_argument("--die-at-iter", type=int, default=None,
                     help="A: os._exit right after this iteration's "
                          "checkpoint publishes (crash simulation)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable span tracing; export this role's "
+                         "Chrome-trace JSON here on exit (merge A+B "
+                         "files with repro.obs.merge_traces)")
     args = ap.parse_args(argv)
     if args.role == "B":
         if args.port == 0:

@@ -51,6 +51,8 @@ import numpy as np
 from repro.core import ring
 from repro.core.kmeans import KMeansResult, SecureKMeans
 from repro.core.triples import BankReplenisher, TripleBank, serve_seed
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 # Stable error-string prefixes (the `ScoringResponse.error` type tags —
 # wire clients and tests dispatch on `error.startswith(...)`).
@@ -121,16 +123,48 @@ class ServiceStats:
     latencies: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW),
         repr=False)                   # submit->publish seconds, per request
+    queue_waits: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW),
+        repr=False)                   # submit->dequeue seconds, per request
+    inflights: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW),
+        repr=False)                   # dequeue->publish seconds, per request
+    lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
+    # the lock guards the sample windows: records land from whatever
+    # thread publishes (drain thread, wire responder), quantile reads come
+    # from stats scrapes — an unlocked deque + numpy read can see a
+    # half-rotated window
 
-    def record_latency(self, seconds: float) -> None:
-        self.latencies.append(float(seconds))
+    def record_latency(self, seconds: float, *,
+                       queue_wait: float | None = None,
+                       inflight: float | None = None) -> None:
+        with self.lock:
+            self.latencies.append(float(seconds))
+            if queue_wait is not None:
+                self.queue_waits.append(float(queue_wait))
+            if inflight is not None:
+                self.inflights.append(float(inflight))
+
+    def _quantile(self, window, q: float) -> float:
+        with self.lock:
+            if not window:
+                return 0.0
+            arr = np.asarray(window, np.float64)
+        return float(np.quantile(arr, q))
 
     def latency_quantile(self, q: float) -> float:
         """Submit-to-publish latency quantile (seconds) over the sample
         window; 0.0 before any response has been published."""
-        if not self.latencies:
-            return 0.0
-        return float(np.quantile(np.asarray(self.latencies, np.float64), q))
+        return self._quantile(self.latencies, q)
+
+    def queue_wait_quantile(self, q: float) -> float:
+        """Submit-to-dequeue (admission queue wait) quantile, seconds."""
+        return self._quantile(self.queue_waits, q)
+
+    def inflight_quantile(self, q: float) -> float:
+        """Dequeue-to-publish (launch + collect) quantile, seconds."""
+        return self._quantile(self.inflights, q)
 
     def as_dict(self) -> dict:
         s = max(self.online_seconds, 1e-9)
@@ -154,6 +188,16 @@ class ServiceStats:
             "max_queue_depth": self.max_queue_depth,
             "p50_ms": round(self.latency_quantile(0.50) * 1e3, 3),
             "p99_ms": round(self.latency_quantile(0.99) * 1e3, 3),
+            # telemetry split of the end-to-end latency: time spent waiting
+            # for a drain vs. time inside one (launch + collect)
+            "queue_wait_p50_ms": round(
+                self.queue_wait_quantile(0.50) * 1e3, 3),
+            "queue_wait_p99_ms": round(
+                self.queue_wait_quantile(0.99) * 1e3, 3),
+            "inflight_p50_ms": round(
+                self.inflight_quantile(0.50) * 1e3, 3),
+            "inflight_p99_ms": round(
+                self.inflight_quantile(0.99) * 1e3, 3),
         }
 
 
@@ -165,6 +209,9 @@ class _Pending:
     x_b: np.ndarray
     deadline: float | None            # time.monotonic() cutoff, or None
     t_submit: float                   # time.monotonic() at admission
+    t_submit_us: int = 0              # epoch µs at admission (span clock)
+    t_dequeue: float | None = None    # time.monotonic() when a drain took it
+    trace: str | None = None          # ambient trace id at admission
 
 
 class ScoringService:
@@ -314,6 +361,12 @@ class ScoringService:
             self.checkpointer.save_bank(self.bank)
         if self.replenisher is not None and not self.replenisher.running:
             self.replenisher.start()
+        # expose this service's live stats/bank through the process-wide
+        # registry (callback gauges — no second tally to drift)
+        _metrics.register_service(self)
+        _metrics.register_bank(self.bank)
+        if self.replenisher is not None:
+            _metrics.register_replenisher(self.replenisher)
         self._warmed = True
         self.offline_seconds += time.perf_counter() - t0
 
@@ -354,6 +407,7 @@ class ScoringService:
             if self.max_queue is not None \
                     and len(self._queue) >= self.max_queue:
                 self.stats.shed_requests += 1
+                _trace.instant("serve.shed", rid=-1 if rid is None else rid)
                 shed_rid = rid if rid is not None else -1
                 return ScoringResponse(
                     shed_rid, labels=np.zeros(0, np.int64), scores=None,
@@ -364,11 +418,15 @@ class ScoringService:
                 rid = self._next_id
                 self._next_id += 1
             deadline = None if deadline_s is None else now + float(deadline_s)
-            self._queue.append(_Pending(rid, x_a, x_b, deadline, now))
+            self._queue.append(_Pending(
+                rid, x_a, x_b, deadline, now,
+                t_submit_us=time.time_ns() // 1_000,
+                trace=_trace.current_trace()))
             self.stats.queue_depth = len(self._queue)
             self.stats.max_queue_depth = max(self.stats.max_queue_depth,
                                              len(self._queue))
             self._cond.notify_all()
+        _trace.instant("serve.admit", rid=rid)
         return rid
 
     def pending(self) -> int:
@@ -408,6 +466,10 @@ class ScoringService:
         exactly-once responses across a crash."""
         if not self._warmed:
             self.warm()
+        with _trace.span("serve.drain"):
+            return self._drain_batch()
+
+    def _drain_batch(self) -> list[ScoringResponse]:
         from repro.launch.pipeline import (PipelineError, StageTask,
                                            run_pipeline)
         t0 = time.perf_counter()
@@ -420,6 +482,9 @@ class ScoringService:
         if not pending:
             self.stats.online_seconds += time.perf_counter() - t0
             return []
+        now_deq = time.monotonic()
+        for p in pending:
+            p.t_dequeue = now_deq
         order = {p.rid: i for i, p in enumerate(pending)}
         now = time.monotonic()
         expired = [p for p in pending
@@ -513,8 +578,33 @@ class ScoringService:
                 self._done[r.request_id] = r
                 p = by_rid.get(r.request_id)
                 if p is not None:
-                    self.stats.record_latency(now - p.t_submit)
+                    wait = None if p.t_dequeue is None \
+                        else p.t_dequeue - p.t_submit
+                    fly = None if p.t_dequeue is None \
+                        else now - p.t_dequeue
+                    self.stats.record_latency(now - p.t_submit,
+                                              queue_wait=wait, inflight=fly)
             self._cond.notify_all()
+        tracer = _trace.get_tracer()
+        if tracer.enabled:
+            # exactly ONE request span per rid: submit-level dedup means a
+            # rid is queued (and published) once; retry waves replay the
+            # cached response without re-entering a drain
+            for r in responses:
+                p = by_rid.get(r.request_id)
+                if p is None:
+                    continue
+                args = {"rid": p.rid,
+                        "rows": r.rows,
+                        "queue_wait_ms": round(
+                            (p.t_dequeue - p.t_submit) * 1e3, 3)
+                        if p.t_dequeue is not None else None,
+                        "error": r.error}
+                if p.trace is not None:
+                    args["trace"] = p.trace
+                tracer.complete_span(
+                    "serve.request", p.t_submit_us,
+                    round((now - p.t_submit) * 1e6), **args)
 
     # -- background serving loop ------------------------------------------
     def start(self) -> None:

@@ -1,0 +1,396 @@
+"""Observability tests (DESIGN.md §15).
+
+Load-bearing properties: (1) a disabled tracer's span() is the shared
+no-op object — nothing recorded, nothing allocated per call; (2) enabled
+spans carry epoch timestamps, durations, thread lanes, and the ambient
+trace id, and export as loadable Chrome-trace JSON; (3) the wire frame
+trace-id extension is backward compatible — traceless frames are
+byte-identical to the pre-trace format and keyed/unkeyed rejection is
+unchanged; (4) the metrics registry's CommLog gauges ARE the CommLog —
+snapshot equality is exact, not approximate; (5) a rid-pinned retry wave
+across a seeded faulty wire yields EXACTLY ONE server-side request span,
+and the client + server span files merge into one consistent timeline
+joined by the trace id; (6) FrameDecoder error paths tally into the
+registry.
+"""
+import json
+import threading
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.channel import (CommLog, FaultyTransport, FrameCorrupt,
+                                FrameDecoder, LoopbackTransport, T_SCORE,
+                                decode_frame, encode_frame, session_key)
+from repro.core.fraud import FraudDataset
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+from repro.serve import ScoringClient, ScoringServer, ScoringService
+
+D_A = D_B = 4
+K = 3
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    ds = FraudDataset.synthesize(n=200, d_a=D_A, d_b=D_B, n_clusters=K,
+                                 seed=0)
+    km = SecureKMeans(KMeansConfig(k=K, iters=2, seed=0, offline="pooled"))
+    res = km.fit(ds.x_a, ds.x_b)
+    return km, res
+
+
+@pytest.fixture()
+def global_tracer():
+    """The process-global tracer, returned enabled and restored after."""
+    t = _trace.get_tracer()
+    was = (t.enabled, t.process)
+    t.reset()
+    _trace.configure(enabled=True, process="server")
+    yield t
+    _trace.configure(enabled=was[0], process=was[1])
+    t.reset()
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+def test_disabled_span_is_shared_noop():
+    t = _trace.Tracer(enabled=False)
+    s1 = t.span("a", iter=1)
+    s2 = t.span("b")
+    assert s1 is s2                      # one module-level no-op object
+    with s1:
+        pass
+    t.instant("c")
+    t.complete_span("d", 0, 10)
+    assert t.events() == []
+
+
+def test_enabled_span_records_ts_dur_thread_args():
+    t = _trace.Tracer(enabled=True)
+    before = time.time_ns() // 1_000
+    with t.span("fit.s1_launch", iter=3):
+        time.sleep(0.002)
+    (e,) = t.events()
+    assert e["name"] == "fit.s1_launch" and e["ph"] == "X"
+    assert e["args"]["iter"] == 3
+    assert e["ts"] >= before
+    assert e["dur"] >= 1_000             # slept 2ms, recorded in us
+    assert e["tid"] == threading.get_ident()
+    assert t.span_counts() == {"fit.s1_launch": 1}
+
+
+def test_ambient_trace_id_tags_spans():
+    t = _trace.Tracer(enabled=True)
+    tid = _trace.new_trace_id()
+    assert _trace.trace_id_from_bytes(_trace.trace_id_to_bytes(tid)) == tid
+    _trace.set_current_trace(tid)
+    try:
+        with t.span("serve.resolve", rid=1):
+            pass
+        t.instant("serve.admit", rid=1)
+    finally:
+        _trace.set_current_trace(None)
+    with t.span("untraced"):
+        pass
+    tagged = t.spans_for_trace(tid)
+    assert {e["name"] for e in tagged} == {"serve.resolve", "serve.admit"}
+
+
+def test_max_events_drops_newest_and_counts():
+    t = _trace.Tracer(enabled=True, max_events=2)
+    for i in range(5):
+        with t.span(f"s{i}"):
+            pass
+    assert len(t.events()) == 2 and t.dropped == 3
+    assert "dropped" in t.flame_summary()
+
+
+def test_export_chrome_loadable_with_lanes(tmp_path):
+    t = _trace.Tracer(enabled=True, process="party_a")
+    with t.span("pipeline.launch", iter=0):
+        pass
+
+    def other():
+        with t.span("pipeline.pre", iter=1):
+            pass
+
+    th = threading.Thread(target=other, name="pipeline-worker")
+    th.start()
+    th.join()
+    path = tmp_path / "trace.json"
+    t.export_chrome(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    names = {e["name"] for e in evs if e["ph"] == "M"}
+    assert "process_name" in names and "thread_name" in names
+    pmeta = [e for e in evs if e["ph"] == "M"
+             and e["name"] == "process_name"]
+    assert pmeta[0]["args"]["name"] == "party_a"
+    lanes = {e["tid"] for e in evs if e["ph"] == "X"}
+    assert len(lanes) == 2               # two thread lanes visible
+    cats = {e.get("cat") for e in evs if e["ph"] == "X"}
+    assert cats == {"pipeline"}
+
+
+def test_merge_traces_two_files_distinct_pids(tmp_path):
+    ta = _trace.Tracer(enabled=True, process="client")
+    tb = _trace.Tracer(enabled=True, process="server")
+    with ta.span("client.score", rid=0):
+        with tb.span("serve.resolve", rid=0):
+            pass
+    fa, fb = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    ta.export_chrome(fa)
+    tb.export_chrome(fb)
+    doc = _trace.merge_traces([fa, fb], str(tmp_path / "m.json"))
+    evs = doc["traceEvents"]
+    assert {e["pid"] for e in evs} == {1, 2}
+    pnames = {e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "process_name"}
+    assert pnames == {"client", "server"}
+    reread = json.loads((tmp_path / "m.json").read_text())
+    assert len(reread["traceEvents"]) == len(evs)
+
+
+# ---------------------------------------------------------------------------
+# wire frame trace-id extension
+# ---------------------------------------------------------------------------
+
+def test_traceless_frames_byte_identical_to_pre_trace_format():
+    # no trace id -> emitted bytes must be EXACTLY the PR-8 format, keyed
+    # and unkeyed alike: old and new endpoints interoperate frame-for-frame
+    key = session_key("compat")
+    for k in (None, key):
+        f = encode_frame(T_SCORE, 7, b"hello", key=k)
+        assert decode_frame(f, key=k) == (T_SCORE, 7, b"hello")
+        ft, seq, payload, tid = decode_frame(f, key=k, with_trace=True)
+        assert (ft, seq, payload, tid) == (T_SCORE, 7, b"hello", None)
+
+
+def test_traced_frame_roundtrip_and_mac_coverage():
+    key = session_key("traced")
+    raw = _trace.trace_id_to_bytes(_trace.new_trace_id())
+    f = encode_frame(T_SCORE, 3, b"pay", key=key, trace_id=raw)
+    ft, seq, payload, tid = decode_frame(f, key=key, with_trace=True)
+    assert (ft, seq, payload, tid) == (T_SCORE, 3, b"pay", raw)
+    # the id sits under the MAC: flipping one of its bits is tampering
+    bad = bytearray(f)
+    bad[21] ^= 1                          # first trace-id byte
+    with pytest.raises(FrameCorrupt):
+        decode_frame(bytes(bad), key=key, with_trace=True)
+    with pytest.raises(ValueError):
+        encode_frame(T_SCORE, 0, b"", trace_id=b"short")
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_counter_gauge_histogram_snapshot():
+    reg = _metrics.MetricsRegistry()
+    c = reg.counter("repro_frame_crc_errors_total")
+    assert c is reg.counter("repro_frame_crc_errors_total")  # get-or-create
+    c.inc()
+    c.inc(2)
+    reg.gauge("repro_bank_stock_copies", labels={"key": "r16"}).set(4)
+    h = reg.histogram("repro_latency_ms", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 5.0, 50.0, 500.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["repro_frame_crc_errors_total"] == 3
+    assert snap['repro_bank_stock_copies{key="r16"}'] == 4
+    hist = snap["repro_latency_ms"]
+    assert hist["count"] == 4 and hist["sum"] == pytest.approx(555.5)
+    text = reg.render_prometheus()
+    assert "# TYPE repro_frame_crc_errors_total counter" in text
+    assert 'repro_bank_stock_copies{key="r16"} 4' in text
+    assert 'repro_latency_ms_bucket{le="10.0"} 2' in text
+    assert "repro_latency_ms_count 4" in text
+
+
+def test_callback_gauge_reads_live_and_survives_errors():
+    reg = _metrics.MetricsRegistry()
+    box = {"v": 1}
+    reg.gauge("g", fn=lambda: box["v"])
+    assert reg.snapshot()["g"] == 1
+    box["v"] = 7
+    assert reg.snapshot()["g"] == 7       # read at query time, no cache
+
+    def boom():
+        raise RuntimeError("down")
+
+    reg.gauge("bad", fn=boom)
+    assert np.isnan(reg.snapshot()["bad"])
+
+
+def test_registry_commlog_equality_is_exact(fitted):
+    """Acceptance pin: the registry's online-bytes answer EQUALS
+    CommLog.total_bytes('online') — same object, zero drift."""
+    _, res = fitted
+    reg = _metrics.MetricsRegistry()
+    _metrics.register_commlog(res.log, registry=reg)
+    snap = reg.snapshot()
+    assert snap['repro_comm_bytes_total{phase="online"}'] == \
+        res.log.total_bytes("online")
+    assert snap['repro_comm_rounds_total{phase="online"}'] == \
+        res.log.total_rounds("online")
+    assert res.log.total_bytes("online") > 0
+
+
+def test_metrics_http_endpoint_serves_prometheus_text():
+    reg = _metrics.MetricsRegistry()
+    reg.counter("repro_requests_total").inc(5)
+    srv = _metrics.MetricsServer(port=0, registry=reg)
+    srv.start()
+    try:
+        body = urllib.request.urlopen(
+            f"http://127.0.0.1:{srv.port}/metrics", timeout=5).read()
+    finally:
+        srv.stop()
+    assert b"repro_requests_total 5" in body
+
+
+def test_frame_decoder_errors_route_to_registry():
+    reg = _metrics.get_registry()
+
+    def val(name):
+        return reg.snapshot().get(name, 0)
+
+    crc0 = val("repro_frame_crc_errors_total")
+    auth0 = val("repro_frame_auth_errors_total")
+    rs0 = val("repro_frame_resync_events_total")
+    dec = FrameDecoder()
+    good = encode_frame(T_SCORE, 0, b"x")
+    bad = bytearray(good)
+    bad[-1] ^= 1
+    assert dec.feed(bytes(bad)) == []
+    assert val("repro_frame_crc_errors_total") == crc0 + 1
+    kdec = FrameDecoder(key=session_key("k"))
+    assert kdec.feed(encode_frame(T_SCORE, 1, b"y")) == []    # unkeyed
+    assert val("repro_frame_auth_errors_total") == auth0 + 1
+    assert val("repro_frame_resync_events_total") == rs0
+
+
+# ---------------------------------------------------------------------------
+# distributed request trace across a faulty wire (satellite 3)
+# ---------------------------------------------------------------------------
+
+def test_retry_wave_single_server_span_and_merged_timeline(
+        fitted, global_tracer, tmp_path):
+    """Drop/dup chaos on the client's send side: the rid-pinned request
+    crosses the wire several times, yet the server records EXACTLY ONE
+    serve.request span for the trace id, and the client + server span
+    files merge into one timeline where the server work nests inside the
+    client span."""
+    km, res = fitted
+    arr = FraudDataset.synthesize(n=8, d_a=D_A, d_b=D_B, n_clusters=K,
+                                  seed=3)
+    key = session_key("obs-trace")
+    ta, tb = LoopbackTransport.pair()
+    ft = FaultyTransport(ta, seed=9, drop=0.25, dup=0.25)
+    svc = ScoringService(km, res, d_a=D_A, d_b=D_B, with_scores=True,
+                         rungs=(16,), provision_copies=4)
+    server = ScoringServer(svc, tb, idle_timeout_s=30.0, auth_key=key)
+    th = threading.Thread(target=server.serve_forever, daemon=True)
+    th.start()
+    client_tracer = _trace.Tracer(enabled=True, process="client")
+    client = ScoringClient(ft, auth_key=key, deadline_s=20.0,
+                           tracer=client_tracer)
+    r = client.score(arr.x_a, arr.x_b)
+    client.bye()
+    th.join(timeout=30)
+    assert r.error is None
+    assert ft.faults.dropped + ft.faults.duplicated > 0   # chaos happened
+
+    cl = [e for e in client_tracer.events()
+          if e["name"] == "client.score"]
+    assert len(cl) == 1
+    tid = cl[0]["args"]["trace"]
+    sv = global_tracer.spans_for_trace(tid)
+    reqs = [e for e in sv if e["name"] == "serve.request"]
+    assert len(reqs) == 1                 # exactly once, chaos or not
+    assert reqs[0]["args"]["rid"] == r.request_id
+    # admission + resolve happened under the SAME propagated id
+    assert {"serve.resolve", "serve.admit"} <= {e["name"] for e in sv}
+    # server-side work nests inside the client span on the shared clock
+    c0 = cl[0]["ts"]
+    c1 = c0 + cl[0]["dur"]
+    assert c0 <= reqs[0]["ts"] <= c1
+    assert reqs[0]["ts"] + reqs[0]["dur"] <= c1 + 1_000   # 1ms slack
+
+    fa, fb = str(tmp_path / "client.json"), str(tmp_path / "server.json")
+    client_tracer.export_chrome(fa)
+    global_tracer.export_chrome(fb)
+    doc = _trace.merge_traces([fa, fb], str(tmp_path / "merged.json"))
+    evs = doc["traceEvents"]
+    joined = [e for e in evs if e.get("args", {}).get("trace") == tid]
+    assert {e["pid"] for e in joined} == {1, 2}  # both endpoints, one id
+    pnames = {e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"client", "server"} <= pnames
+
+
+# ---------------------------------------------------------------------------
+# ServiceStats: latency split under one lock
+# ---------------------------------------------------------------------------
+
+def test_stats_latency_split_and_quantiles():
+    from repro.serve import ServiceStats
+    st = ServiceStats()
+    for i in range(1, 101):
+        st.record_latency(i / 1000, queue_wait=i / 4000, inflight=i / 2000)
+    d = st.as_dict()
+    assert d["p50_ms"] == pytest.approx(
+        float(np.quantile(np.arange(1, 101) / 1000, 0.5)) * 1e3)
+    assert d["queue_wait_p50_ms"] == pytest.approx(d["p50_ms"] / 4)
+    assert d["inflight_p50_ms"] == pytest.approx(d["p50_ms"] / 2)
+    assert d["queue_wait_p99_ms"] <= d["p99_ms"]
+    assert len(st.latencies) == len(st.queue_waits) == len(st.inflights)
+
+
+def test_stats_concurrent_recording_consistent():
+    from repro.serve import ServiceStats
+    st = ServiceStats()
+
+    def pump():
+        for _ in range(500):
+            st.record_latency(0.001, queue_wait=0.0005, inflight=0.0005)
+
+    ts = [threading.Thread(target=pump) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    # windows are bounded deques, all fed under ONE lock: same length
+    assert len(st.latencies) == len(st.queue_waits) == len(st.inflights)
+    assert st.latency_quantile(0.5) == pytest.approx(0.001)
+
+
+# ---------------------------------------------------------------------------
+# bank gauges + stats line
+# ---------------------------------------------------------------------------
+
+def test_register_bank_and_stats_line(fitted):
+    km, res = fitted
+    svc = ScoringService(km, res, d_a=D_A, d_b=D_B, with_scores=True,
+                         rungs=(16,), provision_copies=3)
+    svc.warm()                            # registers service + bank gauges
+    reg = _metrics.get_registry()
+    snap = reg.snapshot()
+    stocks = {k: v for k, v in snap.items()
+              if k.startswith("repro_bank_stock_copies")}
+    assert stocks and all(v >= 0 for v in stocks.values())
+    line = _metrics.StatsLineLogger(svc, bank=svc.bank).render()
+    assert "bank_stock" in line and "p99" in line
+    arr = FraudDataset.synthesize(n=8, d_a=D_A, d_b=D_B, n_clusters=K,
+                                  seed=5)
+    svc.submit(arr.x_a, arr.x_b)
+    svc.drain()
+    snap2 = reg.snapshot()
+    assert snap2["repro_serve_requests"] >= 1
+    assert snap2["repro_bank_consumed_requests_total"] >= 1

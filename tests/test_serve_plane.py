@@ -88,7 +88,9 @@ def test_stats_as_dict_schema_pin():
         "rows_per_s", "triples_per_request", "bytes_per_request",
         "pad_overhead", "replenish_events", "failed_requests",
         "retried_groups", "shed_requests", "expired_requests",
-        "queue_depth", "max_queue_depth", "p50_ms", "p99_ms"}
+        "queue_depth", "max_queue_depth", "p50_ms", "p99_ms",
+        "queue_wait_p50_ms", "queue_wait_p99_ms",
+        "inflight_p50_ms", "inflight_p99_ms"}
 
 
 def test_latency_percentiles_match_numpy():
