@@ -21,11 +21,11 @@ def main() -> None:
                     help="comma-separated suite names")
     args = ap.parse_args()
 
-    from benchmarks import (fig2_online_offline, fig3_vectorization,
-                            fig4_sparse, kernel_bench, load_bench,
-                            obs_bench, offline_bench, online_offline,
-                            pipeline_bench, q5_fraud, serve_bench,
-                            table1_2, wire_bench)
+    from benchmarks import (chaos_bench, fig2_online_offline,
+                            fig3_vectorization, fig4_sparse, kernel_bench,
+                            load_bench, obs_bench, offline_bench,
+                            online_offline, pipeline_bench, q5_fraud,
+                            serve_bench, table1_2, wire_bench)
 
     suites = {
         "table1_2_runtime_comm": lambda: table1_2.run(quick=args.quick),
@@ -73,6 +73,14 @@ def main() -> None:
         # coverage; persists benchmarks/BENCH_obs.json + the sample
         # Perfetto trace benchmarks/trace_sample.json
         "obs": lambda: obs_bench.run(quick=args.quick),
+        # `--only chaos --quick` is the self-healing smoke: a 3-cell
+        # slice of the kill-point x victim x fault-mix matrix under the
+        # supervisor (kill A mid-iteration, kill B at publish, sever the
+        # resume handshake), every cell asserted byte-exact against the
+        # unkilled run; full mode sweeps the 18-cell rotating matrix;
+        # persisted to benchmarks/BENCH_chaos.json with MTTR and
+        # retry-amplification columns
+        "chaos": lambda: chaos_bench.run(quick=args.quick),
     }
     derived_fns = {
         "table1_2_runtime_comm": table1_2.derived,
@@ -88,6 +96,7 @@ def main() -> None:
         "wire": wire_bench.derived,
         "load": load_bench.derived,
         "obs": obs_bench.derived,
+        "chaos": chaos_bench.derived,
     }
     if args.only:
         keep = set(args.only.split(","))

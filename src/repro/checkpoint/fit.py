@@ -30,8 +30,16 @@ import shutil
 
 import numpy as np
 
+from repro.checkpoint.store import fsync_path, fsync_tree
+from repro.core import faultpoints as _fp
 from repro.core.triples import _key_from_str, _key_to_str
 from repro.obs import trace as _trace
+
+
+class FingerprintMismatch(ValueError):
+    """Checkpoint was written under a different (cfg, data-shape)
+    fingerprint. A config error, not disk damage — recovery must refuse
+    loudly instead of falling back to an older step."""
 
 
 @dataclasses.dataclass
@@ -131,12 +139,15 @@ class FitCheckpointer:
         np.savez(os.path.join(tmp, "state.npz"), **arrays)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        fsync_tree(tmp)                     # payload durable before publish
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)               # atomic publish
+        fsync_path(self.dir)                # the rename itself durable
         self._gc()
         if self.after_save is not None:
             self.after_save(state, final)
+        _fp.probe("fit.publish")            # chaos kill-point: post-publish
         return final
 
     def _gc(self) -> None:
@@ -154,8 +165,28 @@ class FitCheckpointer:
         return sorted(out)
 
     def latest(self) -> FitState | None:
-        steps = self.all_steps()
-        return self.load(steps[-1]) if steps else None
+        """Newest LOADABLE step: a published step whose arrays turn out
+        torn on disk (pre-fsync writer + machine crash) is skipped with a
+        warning and the previous step is recovered instead. Fingerprint
+        mismatches are NOT skipped — that's a config error, not damage."""
+        for s in reversed(self.all_steps()):
+            try:
+                return self.load(s)
+            except FingerprintMismatch:
+                raise                   # config error: refuse loudly
+            except Exception as e:      # torn npz/manifest: fall back
+                import warnings
+                warnings.warn(f"checkpoint step {s} unreadable ({e}); "
+                              "falling back to the previous step")
+        return None
+
+    def step_at_or_before(self, step: int) -> int | None:
+        """Largest published step ≤ `step` — what the resume negotiation
+        loads after both parties agree on `min(step)` (a party may hold a
+        NEWER published step than the agreement; it must rewind to one
+        the peer also witnessed). None == no such step: start fresh."""
+        ok = [s for s in self.all_steps() if s <= int(step)]
+        return max(ok) if ok else None
 
     def load(self, step: int) -> FitState:
         path = self._path(step)
@@ -163,7 +194,7 @@ class FitCheckpointer:
             manifest = json.load(f)
         if self.fingerprint and manifest["fingerprint"] \
                 and manifest["fingerprint"] != self.fingerprint:
-            raise ValueError(
+            raise FingerprintMismatch(
                 f"checkpoint fingerprint {manifest['fingerprint']} does not "
                 f"match this fit's config fingerprint {self.fingerprint} — "
                 "refusing to resume a different (cfg, data-shape) run")

@@ -40,6 +40,7 @@ import os
 
 import numpy as np
 
+from repro.checkpoint.store import fsync_path
 from repro.core.triples import TripleBank, _key_from_str, _key_to_str
 from repro.obs import trace as _trace
 
@@ -69,7 +70,9 @@ class ServeCheckpointer:
     def save_bank(self, bank: TripleBank) -> None:
         tmp = self.bank_path + ".tmp"
         bank.save(tmp)
+        fsync_path(tmp)                          # payload durable first
         os.replace(tmp, self.bank_path)          # atomic publish
+        fsync_path(self.dir)
 
     def load_bank(self, **kw) -> TripleBank:
         return TripleBank.load(self.bank_path, **kw)
@@ -111,7 +114,10 @@ class ServeCheckpointer:
         with open(tmp, "wb") as f:
             np.savez(f, manifest=np.frombuffer(
                 json.dumps(manifest).encode(), np.uint8), **arrays)
+            f.flush()
+            os.fsync(f.fileno())                 # payload durable first
         os.replace(tmp, final)                   # atomic publish
+        fsync_path(self.journal_dir)
         self.recorded += len(metas)
         if self.after_record is not None:
             self.after_record(self.recorded, final)

@@ -28,6 +28,33 @@ def _flatten(tree):
     return {jax.tree_util.keystr(path): leaf for path, leaf in flat}, treedef
 
 
+def fsync_path(path: str) -> None:
+    """fsync one file or directory (directory fsync persists the entry
+    names themselves — rename atomicity is only durable once the parent
+    directory is synced)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return                       # non-POSIX / disappeared: best effort
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def fsync_tree(directory: str) -> None:
+    """fsync every regular file under `directory`, then the directory.
+    Called on the `.tmp` staging dir BEFORE the atomic rename: without
+    it, the rename can land in the journal while the payload pages are
+    still dirty in the page cache — a crash then publishes a step whose
+    arrays are torn on disk. After the tree sync, rename + parent-dir
+    sync makes the publish itself durable."""
+    for root, _dirs, files in os.walk(directory):
+        for name in files:
+            fsync_path(os.path.join(root, name))
+        fsync_path(root)
+
+
 def config_fingerprint(cfg) -> str:
     return hashlib.sha256(repr(cfg).encode()).hexdigest()[:16]
 
@@ -67,9 +94,11 @@ class CheckpointStore:
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        fsync_tree(tmp)                     # payload durable before publish
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)               # atomic publish
+        fsync_path(self.dir)                # the rename itself durable
         self._gc()
         return final
 

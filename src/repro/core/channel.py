@@ -201,6 +201,7 @@ T_BLOB = 2         # payload: u32 json_len + json meta + npz raw
 T_HEARTBEAT = 3    # liveness probe, empty payload both ways
 T_BYE = 4          # orderly shutdown of the responder loop
 T_SCORE = 5        # scoring request: blob of {rid, deadline_s} + x_a/x_b
+T_RESUME = 6       # resume negotiation: JSON {op, inc, step, fp} both ways
 RESP_BIT = 0x80
 
 # optional trace-id header extension: a frame whose ftype carries
@@ -233,6 +234,12 @@ class WireError(RuntimeError):
 
 class WireTimeout(WireError):
     """A per-op deadline expired before the peer answered."""
+
+
+class ResumeMismatch(WireError):
+    """Resume negotiation rejected: the two parties' config fingerprints
+    disagree, so no common checkpoint step can be bit-exact. Terminal —
+    restarting won't help; the supervisor must NOT respawn on it."""
 
 
 def _crc(ftype: int, seq: int, payload) -> int:
@@ -804,12 +811,22 @@ class ReliableChannel:
     triggers `Transport.reconnect()` and a resend. Because the responder
     dedups by sequence number (answering a replayed request from its
     response cache), redelivery is safe: drops, duplicates, and corrupt
-    frames all collapse to 'resend until the response lands'."""
+    frames all collapse to 'resend until the response lands'.
+
+    `reconnect_wait_s` is the *park budget* for supervised deployments:
+    when the connection tears (peer crashed and is being restarted), up
+    to that much additional time per request is spent parked — redial
+    attempts inside the park window consume neither `max_retries` nor
+    the original deadline, so a peer that takes seconds to respawn and
+    re-import its runtime does not kill the survivor. The park window is
+    bounded: once spent, normal retry/deadline accounting resumes, so
+    total peer silence is still capped at deadline + park budget."""
 
     def __init__(self, transport: Transport, *, deadline_s: float = 30.0,
                  try_timeout_s: float = 0.5, max_retries: int = 10,
                  backoff_s: float = 0.02, backoff_max_s: float = 0.5,
-                 jitter_seed: int = 7, auth_key: bytes | None = None):
+                 jitter_seed: int = 7, auth_key: bytes | None = None,
+                 reconnect_wait_s: float = 0.0):
         self.t = transport
         self.auth_key = auth_key
         self.deadline_s = float(deadline_s)
@@ -817,15 +834,23 @@ class ReliableChannel:
         self.max_retries = int(max_retries)
         self.backoff_s = float(backoff_s)
         self.backoff_max_s = float(backoff_max_s)
+        self.reconnect_wait_s = float(reconnect_wait_s)
         self._jitter = np.random.default_rng(jitter_seed)
         self._seq = 0
         self.retries = 0
         self.crc_drops = 0
         self.reconnects = 0
+        self.parked_s = 0.0
         reg = _metrics.get_registry()
         self._m_retries = reg.counter("repro_wire_retries_total")
         self._m_crc_drops = reg.counter("repro_wire_resp_drops_total")
         self._m_reconnects = reg.counter("repro_wire_reconnects_total")
+        self._h_rtt = reg.histogram(
+            "repro_wire_request_seconds",
+            buckets=_metrics.log_buckets(1e-5, 30.0))
+        self._h_backoff = reg.histogram(
+            "repro_wire_backoff_seconds",
+            buckets=_metrics.log_buckets(1e-3, 10.0))
 
     def request(self, ftype: int, payload: bytes = b"", *,
                 deadline_s: float | None = None,
@@ -842,17 +867,23 @@ class ReliableChannel:
         frame = encode_frame(ftype, seq, payload, key=self.auth_key,
                              trace_id=trace_id)
         want = ftype | RESP_BIT
-        deadline = time.monotonic() + (self.deadline_s if deadline_s is None
-                                       else float(deadline_s))
+        t0 = time.monotonic()
+        deadline = t0 + (self.deadline_s if deadline_s is None
+                         else float(deadline_s))
         attempt = 0
+        park_until = None    # set on first sever when a park budget exists
         while True:
-            if time.monotonic() >= deadline:
+            now = time.monotonic()
+            if now >= deadline and (park_until is None
+                                    or now >= park_until):
                 raise WireTimeout(
                     f"request seq={seq} ftype={ftype} deadline expired "
-                    f"after {attempt} tries")
+                    f"after {attempt} tries"
+                    + (f" (incl. {self.reconnect_wait_s}s park)"
+                       if park_until is not None else ""))
             try:
                 self.t.send_frame(frame)
-                limit = min(deadline,
+                limit = min(max(deadline, park_until or 0.0),
                             time.monotonic() + self.try_timeout_s)
                 while True:
                     remaining = limit - time.monotonic()
@@ -870,12 +901,31 @@ class ReliableChannel:
                         self._m_crc_drops.inc()
                         continue
                     if ft == want and rseq == seq:
+                        self._h_rtt.observe(time.monotonic() - t0)
                         return rpayload
                     # stale duplicate response of an earlier seq: ignore
             except ConnectionError:
                 self.reconnects += 1
                 self._m_reconnects.inc()
                 self.t.reconnect()
+                if self.reconnect_wait_s > 0.0:
+                    now = time.monotonic()
+                    if park_until is None:
+                        park_until = now + self.reconnect_wait_s
+                        _WIRE_LOG.warning(
+                            "peer connection lost on seq %d: parking up "
+                            "to %.1fs for a restart", seq,
+                            self.reconnect_wait_s)
+                    if now < park_until:
+                        # parked: wait out the peer restart without
+                        # charging the retry budget; deadline extends to
+                        # the park window (bounded), not forever
+                        pause = min(self.backoff_max_s, 0.2) \
+                            * (0.5 + float(self._jitter.random()))
+                        self.parked_s += pause
+                        _trace.instant("wire.park", seq=seq)
+                        time.sleep(pause)
+                        continue
             attempt += 1
             self.retries += 1
             self._m_retries.inc()
@@ -885,7 +935,9 @@ class ReliableChannel:
                     f"request seq={seq} ftype={ftype} failed after "
                     f"{attempt} tries (retries exhausted)")
             base = min(self.backoff_max_s, self.backoff_s * (2 ** (attempt - 1)))
-            time.sleep(base * (0.5 + float(self._jitter.random())))
+            pause = base * (0.5 + float(self._jitter.random()))
+            self._h_backoff.observe(pause)
+            time.sleep(pause)
 
 
 class Responder:
@@ -898,7 +950,15 @@ class Responder:
     CRC-corrupt frames are discarded (the engine resends); with an
     `auth_key`, tampered or unkeyed frames are dropped the same way.
     Silence beyond `idle_timeout_s` raises `WireTimeout` — the engine's
-    heartbeats are what keep a long offline phase alive."""
+    heartbeats are what keep a long offline phase alive.
+
+    Incarnation reset: a restarted engine begins a fresh sequence space
+    at 0, which the stale-duplicate rule would silently drop forever. Its
+    first request is therefore a `T_RESUME` carrying an incarnation nonce;
+    when the nonce differs from the last one seen, the dedup window is
+    reset BEFORE the seq checks — old-incarnation responses can never be
+    replayed to the new incarnation, and the new sequence space starts
+    clean. Same-incarnation duplicates still replay from the cache."""
 
     def __init__(self, transport: Transport, handler, *,
                  idle_timeout_s: float = 120.0,
@@ -912,8 +972,10 @@ class Responder:
         self.dedup_replays = 0
         self.reconnects = 0
         self.served = 0
+        self.incarnation_resets = 0
         self._last_seq = -1
         self._last_resp: bytes | None = None
+        self._incarnation: str | None = None
         reg = _metrics.get_registry()
         self._m_crc_drops = reg.counter("repro_responder_crc_drops_total")
         self._m_dedup = reg.counter("repro_responder_dedup_replays_total")
@@ -959,6 +1021,20 @@ class Responder:
                 continue
             if ftype & RESP_BIT:
                 continue                           # echo of our own class
+            if ftype == T_RESUME:
+                inc = _resume_incarnation(payload)
+                if inc is not None and inc != self._incarnation:
+                    # a (re)started engine announced itself: reset the
+                    # dedup window so its fresh seq space isn't mistaken
+                    # for stale duplicates of the previous incarnation
+                    if self._incarnation is not None:
+                        self.incarnation_resets += 1
+                        _WIRE_LOG.warning(
+                            "peer incarnation changed (%s -> %s): "
+                            "resetting dedup window at seq %d",
+                            self._incarnation, inc, self._last_seq)
+                    self._incarnation = inc
+                    self._last_seq, self._last_resp = -1, None
             if seq == self._last_seq:
                 self.dedup_replays += 1
                 self._m_dedup.inc()
@@ -987,6 +1063,109 @@ class Responder:
             self._reply(resp)
             if ftype == T_BYE:
                 return
+
+
+# ===========================================================================
+# Resume negotiation — T_RESUME payload helpers + peer progress marker
+# ===========================================================================
+
+def _resume_incarnation(payload: bytes) -> str | None:
+    """Best-effort incarnation nonce from a T_RESUME payload (the dedup
+    reset must work even when the handler later rejects the message)."""
+    try:
+        v = json.loads(payload.decode())
+        inc = v.get("inc")
+        return str(inc) if inc is not None else None
+    except Exception:
+        return None
+
+
+class PeerProgress:
+    """The data party's durable record of fit progress: the latest
+    checkpoint step the engine *published* (announced via a T_RESUME
+    `publish` message after each atomic checkpoint rename) plus the
+    config fingerprint it was published under.
+
+    This is party B's half of the resume negotiation: on an engine
+    (re)start the `hello` answers with (step, fingerprint) so both sides
+    can agree on `min(step)`. B lagging behind A (engine died between
+    rename and notify) is safe — the agreed step is then merely older,
+    and resuming from an older published step is still bit-exact.
+
+    With a `path` the marker is persisted atomically (tmp + fsync +
+    `os.replace`) so it survives B's own crashes; without one it lives
+    in memory (single-process tests)."""
+
+    def __init__(self, path: str | None = None):
+        import os
+        self._os = os
+        self.path = path
+        self.step = -1                      # -1 == nothing published yet
+        self.fingerprint: str | None = None
+        if path is not None and os.path.exists(path):
+            try:
+                with open(path, "r", encoding="utf-8") as f:
+                    d = json.load(f)
+                self.step = int(d.get("step", -1))
+                self.fingerprint = d.get("fingerprint") or None
+            except (OSError, ValueError):
+                _WIRE_LOG.warning("unreadable progress marker %s; "
+                                  "starting from scratch", path)
+
+    def update(self, step: int, fingerprint: str | None) -> None:
+        step = int(step)
+        if step < self.step:
+            return                          # never move backwards
+        self.step = step
+        if fingerprint:
+            self.fingerprint = fingerprint
+        if self.path is None:
+            return
+        os = self._os
+        tmp = self.path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump({"step": self.step,
+                       "fingerprint": self.fingerprint}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+        _fsync_dir(os.path.dirname(os.path.abspath(self.path)))
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so a just-renamed entry survives power loss."""
+    import os
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return                              # e.g. non-POSIX; best effort
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def handle_resume(meta: dict, progress: PeerProgress) -> dict:
+    """Responder-side T_RESUME logic, shared by `serve_peer` and tests.
+
+    `hello` (engine (re)start): reject with a typed error when both
+    sides hold fingerprints that disagree — no common step can be
+    bit-exact, and restarting won't fix a config mismatch; otherwise
+    answer our recorded (step, fingerprint). `publish`: record the
+    engine's newly published checkpoint step."""
+    op = meta.get("op")
+    fp = meta.get("fp") or None
+    if progress.fingerprint and fp and fp != progress.fingerprint:
+        return {"error": "fingerprint-mismatch",
+                "ours": progress.fingerprint, "theirs": fp}
+    if op == "publish":
+        progress.update(int(meta.get("step", -1)), fp)
+        return {"ok": 1}
+    # hello: bind our fingerprint on first contact so a future restart
+    # of the engine under a different config is rejected
+    if fp and progress.fingerprint is None:
+        progress.update(progress.step, fp)
+    return {"step": progress.step, "fp": progress.fingerprint}
 
 
 # ===========================================================================
@@ -1023,11 +1202,50 @@ class WireSession:
     bandwidth. `send_arrays` moves real tensors (input upload, result
     download); `heartbeat` probes liveness."""
 
-    def __init__(self, channel: ReliableChannel):
+    def __init__(self, channel: ReliableChannel,
+                 incarnation: str | None = None):
         self.chan = channel
         self.payload_bytes = 0        # protocol bytes shipped (both ways)
         self.rounds = 0
         self.blobs = 0
+        self.incarnation = incarnation
+
+    # -- resume negotiation ---------------------------------------------
+    def _resume_request(self, body: dict,
+                        deadline_s: float | None = None) -> dict:
+        payload = json.dumps(body, sort_keys=True).encode()
+        resp = self.chan.request(T_RESUME, payload, deadline_s=deadline_s)
+        try:
+            meta = json.loads(resp.decode()) if resp else {}
+        except ValueError as e:
+            raise WireError(f"malformed resume response: {e}") from e
+        if meta.get("error") == "fingerprint-mismatch":
+            raise ResumeMismatch(
+                f"peer rejected resume: its fingerprint "
+                f"{meta.get('ours')} != ours {body.get('fp')}")
+        return meta
+
+    def negotiate_resume(self, *, step: int, fingerprint: str | None,
+                         deadline_s: float | None = None) -> int:
+        """The (re)connect handshake (DESIGN.md §16): announce this
+        incarnation + our latest published checkpoint step + config
+        fingerprint; the peer answers with its recorded step. Returns
+        the agreed resume step `min(ours, theirs)` (-1 == fresh start).
+        Raises `ResumeMismatch` when the fingerprints disagree."""
+        meta = self._resume_request(
+            {"op": "hello", "inc": self.incarnation,
+             "step": int(step), "fp": fingerprint},
+            deadline_s=deadline_s)
+        peer_step = int(meta.get("step", -1))
+        return min(int(step), peer_step)
+
+    def notify_publish(self, step: int, fingerprint: str | None) -> None:
+        """Tell the peer a checkpoint step was atomically published, so
+        its progress marker advances. Rides the reliable channel like any
+        request; dying before OR after this notify is safe (the peer just
+        lags, and min(step) resumes from the older published step)."""
+        self._resume_request({"op": "publish", "inc": self.incarnation,
+                              "step": int(step), "fp": fingerprint})
 
     def exchange(self, nbytes: int, rounds: int = 1) -> int:
         with _trace.span("wire.exchange", nbytes=int(nbytes),
@@ -1071,15 +1289,22 @@ class WireSession:
 
 def serve_peer(transport: Transport, *, on_blob=None,
                idle_timeout_s: float = 120.0,
-               auth_key: bytes | None = None) -> Responder:
+               auth_key: bytes | None = None,
+               progress: PeerProgress | None = None) -> Responder:
     """Run the data-party (responder) loop until the engine says BYE.
 
     EXCHANGE requests are answered with the requested echo half; BLOB
     requests go to `on_blob(meta, arrays) -> (meta, arrays) | None`;
-    heartbeats are acked empty. Returns the `Responder` (for its dedup /
-    drop counters) once the engine closes the session."""
+    RESUME requests run the negotiation against `progress` (one is
+    created in-memory when not given); heartbeats are acked empty.
+    Returns the `Responder` (for its dedup / drop counters) once the
+    engine closes the session."""
+    from repro.core import faultpoints as _fp
+
+    prog = progress if progress is not None else PeerProgress()
 
     def handler(ftype: int, payload: bytes) -> bytes:
+        _fp.probe("wire.serve")
         if ftype == T_EXCHANGE:
             (b_len,) = struct.unpack_from(">I", payload)
             return bytes(b_len)
@@ -1088,6 +1313,13 @@ def serve_peer(transport: Transport, *, on_blob=None,
             out = on_blob(meta, arrays) if on_blob is not None else None
             out_meta, out_arrays = out if out is not None else ({}, None)
             return _pack_blob(out_meta, out_arrays)
+        if ftype == T_RESUME:
+            try:
+                meta = json.loads(payload.decode())
+            except ValueError:
+                meta = {}
+            return json.dumps(handle_resume(meta, prog),
+                              sort_keys=True).encode()
         return b""                                 # heartbeat / bye
 
     r = Responder(transport, handler, idle_timeout_s=idle_timeout_s,

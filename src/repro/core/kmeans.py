@@ -32,6 +32,7 @@ from typing import Literal
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faultpoints as _fp
 from repro.core import protocol as P
 from repro.core import ring
 from repro.core.channel import CommLog, NetModel
@@ -41,7 +42,14 @@ from repro.core.sparse import CSRMatrix, secure_sparse_matmul
 from repro.core.triples import (BankSlotDealer, PlanningDealer, PooledDealer,
                                 SlotDealer, StreamingPooledDealer, TriplePlan,
                                 TrustedDealer, serve_seed)
+from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
+
+
+def _h_iter_seconds():
+    return _metrics.get_registry().histogram(
+        "repro_fit_iteration_seconds",
+        buckets=_metrics.log_buckets(1e-3, 100.0))
 
 
 @dataclasses.dataclass
@@ -200,17 +208,20 @@ class SecureKMeans:
     # ------------------------------------------------------------------ #
     def fit(self, x_a: np.ndarray, x_b: np.ndarray, *,
             dealer=None, wire=None, checkpoint=None,
-            resume: bool = False) -> KMeansResult:
+            resume: bool = False,
+            resume_step: int | None = None) -> KMeansResult:
         with _trace.span("fit", rows=int(np.asarray(x_a).shape[0]),
                          k=self.cfg.k, iters=self.cfg.iters,
                          sparse=self.cfg.sparse,
                          wired=wire is not None):
             return self._fit(x_a, x_b, dealer=dealer, wire=wire,
-                             checkpoint=checkpoint, resume=resume)
+                             checkpoint=checkpoint, resume=resume,
+                             resume_step=resume_step)
 
     def _fit(self, x_a: np.ndarray, x_b: np.ndarray, *,
              dealer=None, wire=None, checkpoint=None,
-             resume: bool = False) -> KMeansResult:
+             resume: bool = False,
+             resume_step: int | None = None) -> KMeansResult:
         """Jointly cluster the two parties' data. `dealer` (optional)
         supplies the fit's correlated randomness from an EXTERNAL provider —
         pass a `TripleBank.dealer(key)` view over a bank provisioned with
@@ -231,7 +242,11 @@ class SecureKMeans:
         `resume=True` restores the latest checkpoint (fingerprint-checked
         against this cfg + data shapes) and continues — finishing with
         shares, dealer counters, and CommLog tallies bit-identical to an
-        uninterrupted run (test-enforced; DESIGN.md §13)."""
+        uninterrupted run (test-enforced; DESIGN.md §13). `resume_step`
+        (the resume negotiation's agreed `min(step)`, DESIGN.md §16)
+        instead restores the largest PUBLISHED step ≤ that value — a
+        party holding a newer step than its peer witnessed rewinds to the
+        common one; no such step means a fresh start (also bit-exact)."""
         cfg = self.cfg
         rng = np.random.default_rng(cfg.seed)
         ctx = P.make_ctx(cfg.seed, backend=cfg.backend, wire=wire)
@@ -255,12 +270,16 @@ class SecureKMeans:
             # checkpoint then fails the fingerprint check at load
             fp = self._fit_fingerprint(x_a.shape, x_b.shape)
             checkpoint.fingerprint = checkpoint.fingerprint or fp
-        if resume:
+        if resume or resume_step is not None:
             if checkpoint is None:
                 raise ValueError(
                     "fit(resume=True) needs checkpoint=FitCheckpointer(...)"
                     " to restore from")
-            st = checkpoint.latest()
+            if resume_step is not None:
+                s = checkpoint.step_at_or_before(int(resume_step))
+                st = checkpoint.load(s) if s is not None else None
+            else:
+                st = checkpoint.latest()
         if st is not None:
             if st.iteration >= cfg.iters:
                 raise ValueError(
@@ -371,9 +390,11 @@ class SecureKMeans:
 
         t_start = time.perf_counter()
         dealer_s_pre = ctx.dealer.dealer_seconds
+        h_iter = _h_iter_seconds()
         it = it0
         try:
             for it in range(it0 + 1, cfg.iters + 1):
+                t_iter = time.perf_counter()
                 mu_old = mu
                 if fast is not None:
                     # TWO launches per iteration (S1: distances+argmin, S3:
@@ -387,6 +408,7 @@ class SecureKMeans:
                         csr_at, csr_bt = fast
                     he1 = he3 = []
                     hx = None
+                    _fp.probe("fit.exchange1")
                     if cfg.sparse:
                         # scratch log (Ctx.fork): the launched programs' shape-
                         # determined traffic (incl. Protocol 2's) is replayed
@@ -400,15 +422,18 @@ class SecureKMeans:
                         c0, c1 = progs.s1(dev_a, dev_b, mu.s0, mu.s1,
                                           *he1, *flat1)
                     c = AShare(c0, c1)
+                    _fp.probe("fit.mid_s1")
                     if cfg.sparse:
                         hx.tag = "S3"
                         with _trace.span("fit.s2_callback", iter=it):
                             he3 = self._s3_he_inputs(hx, csr_at, csr_bt, c)
+                    _fp.probe("fit.s2_callback")
                     with _trace.span("fit.s3_launch", iter=it):
                         flat3 = materialize(progs.s3_requests, ctx.dealer)
                         mu0, mu1 = progs.s3(dev_a, dev_b, mu.s0, mu.s1,
                                             c0, c1, *he3, *flat3)
                     mu = AShare(mu0, mu1)
+                    _fp.probe("fit.s3_partial")
                     if hx is not None:
                         ctx.add_he_seconds(hx.he_seconds)
                     # per-iteration traffic is shape-determined; replay the
@@ -443,6 +468,7 @@ class SecureKMeans:
                     self._save_fit_ckpt(
                         ckpt, ctx, it, 0, mu,
                         {k: c * it for k, c in iter_counts.items()})
+                h_iter.observe(time.perf_counter() - t_iter)
             jnp.asarray(mu.s0).block_until_ready()
             wall = time.perf_counter() - t_start
         finally:
@@ -581,10 +607,12 @@ class SecureKMeans:
         plan_s = time.perf_counter() - t0
 
         t_start = time.perf_counter()
+        h_iter = _h_iter_seconds()
         it = it0
         c_parts = [None] * len(batches)
         try:
             for it in range(it0 + 1, cfg.iters + 1):
+                t_iter = time.perf_counter()
                 mu_old = mu
                 base = (it - 1) * spi
                 start_b = b0 if it == it0 + 1 else 0
@@ -620,6 +648,7 @@ class SecureKMeans:
                                           on_done=on_done)
                          for t, b in enumerate(batches) if t >= start_b]
                 run_pipeline(tasks, pipeline=cfg.pipeline)
+                _fp.probe("fit.finalize")
                 fin_view = dealer.acquire(base + 2 * len(batches))
                 flat_f = K.materialize_offline(fin_prog.requests, fin_view)
                 mu0, mu1 = fin_prog.fn(mu.s0, mu.s1, acc[0], acc[1],
@@ -637,6 +666,7 @@ class SecureKMeans:
                     # finalize, so this cut is canonical on BOTH executors
                     self._save_fit_ckpt(ckpt, ctx, it, 0, mu,
                                         slots_advance(it * spi))
+                h_iter.observe(time.perf_counter() - t_iter)
             jnp.asarray(mu.s0).block_until_ready()
             wall = time.perf_counter() - t_start
         finally:
@@ -681,6 +711,7 @@ class SecureKMeans:
             ctx.add_he_seconds(hx.he_seconds)
 
         def pre():
+            _fp.probe("fit.exchange1")
             view = dealer.acquire(slot0)
             he1 = []
             if cfg.sparse:
@@ -696,9 +727,11 @@ class SecureKMeans:
             he1, flat1 = prep
             c0, c1 = progs.s1(b["dev_a"], b["dev_b"], mu.s0, mu.s1,
                               *he1, *flat1)
+            _fp.probe("fit.mid_s1")
             return AShare(c0, c1)
 
         def mid(prep, c):
+            _fp.probe("fit.s2_callback")
             view = dealer.acquire(slot0 + 1)
             he3 = []
             if cfg.sparse:
@@ -710,6 +743,7 @@ class SecureKMeans:
             return he3, flat3
 
         def post(prep, c, m):
+            _fp.probe("fit.s3_partial")
             he3, flat3 = m
             n0, n1, d0, d1 = progs.s3p(b["dev_a"], b["dev_b"], c.s0, c.s1,
                                        *he3, *flat3)

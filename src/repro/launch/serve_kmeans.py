@@ -27,6 +27,14 @@ rerun the same command and it resumes from the journal);
 response journals (the chaos harness' kill switch). `--max-queue`,
 `--deadline-s` and `--low-water`/`--high-water` configure admission,
 deadlines and the background `BankReplenisher`.
+
+`--supervised` (DESIGN.md §16) wraps wire-server mode in the restart
+supervisor: the parent pins the serve/metrics ports, respawns the server
+on crashes (bounded restarts, backoff, crash-loop detection), strips
+crash-simulation flags after incarnation 0, and treats the `/health`
+endpoint (or the "SERVING" line) as readiness. Combined with
+`--serve-checkpoint-dir`, a crash-looping server still answers every
+admitted request id exactly once.
 """
 from __future__ import annotations
 
@@ -64,10 +72,14 @@ def serve(*, n_train: int = 2000, d_a: int = 18, d_b: int = 24, k: int = 5,
           fit_from_bank: bool = False, provision_workers: int = 1,
           checkpoint_dir: str | None = None, resume: bool = False,
           checkpoint_every: int = 1, seed: int = 0,
-          trace_out: str | None = None, metrics_port: int | None = None,
+          trace_out: str | None = None,
+          trace_rotate: int | None = None, trace_sample: float = 1.0,
+          metrics_port: int | None = None,
           stats_interval: float = 0.0, verbose: bool = True) -> dict:
     if trace_out:
-        _trace.configure(enabled=True, process="serve_kmeans")
+        _trace.configure(enabled=True, process="serve_kmeans",
+                         rotate_spans=trace_rotate,
+                         sample_rate=trace_sample)
     ds = FraudDataset.synthesize(n=n_train, d_a=d_a, d_b=d_b,
                                  n_clusters=k, seed=seed)
     km = SecureKMeans(KMeansConfig(k=k, iters=iters, seed=seed,
@@ -183,7 +195,9 @@ def serve_wire(*, port: int = 0, auth_key: str | None = None,
                n_train: int = 400, d_a: int = 6, d_b: int = 6, k: int = 3,
                iters: int = 2, rungs=(16, 64), provision_copies: int = 8,
                provision_workers: int = 1, seed: int = 0,
-               trace_out: str | None = None, metrics_port: int | None = None,
+               trace_out: str | None = None,
+               trace_rotate: int | None = None, trace_sample: float = 1.0,
+               metrics_port: int | None = None,
                stats_interval: float = 0.0) -> None:
     """Wire-server mode: fit (deterministic — a restart refits the same
     model from the same seed), warm, listen, serve until BYE. The serving
@@ -194,7 +208,9 @@ def serve_wire(*, port: int = 0, auth_key: str | None = None,
     from repro.serve import ScoringServer
 
     if trace_out:
-        _trace.configure(enabled=True, process="server")
+        _trace.configure(enabled=True, process="server",
+                         rotate_spans=trace_rotate,
+                         sample_rate=trace_sample)
     ds = FraudDataset.synthesize(n=n_train, d_a=d_a, d_b=d_b,
                                  n_clusters=k, seed=seed)
     km = SecureKMeans(KMeansConfig(k=k, iters=iters, seed=seed,
@@ -225,12 +241,15 @@ def serve_wire(*, port: int = 0, auth_key: str | None = None,
                          provision_workers=provision_workers,
                          max_queue=max_queue, default_deadline_s=deadline_s,
                          checkpointer=ckpt, replenisher=repl)
-    svc.warm()
+    # start the exposition BEFORE warm() so a supervisor probing /health
+    # sees STARTING during bank load + journal replay, READY only after
     mserver = None
     if metrics_port is not None:
-        mserver = _metrics.MetricsServer(port=metrics_port)
+        mserver = _metrics.MetricsServer(port=metrics_port,
+                                         health_cb=lambda: svc.health)
         mserver.start()
         print(f"METRICS {mserver.port}", flush=True)
+    svc.warm()
     slog = None
     if stats_interval > 0:
         slog = _metrics.StatsLineLogger(svc, bank=svc.bank,
@@ -258,8 +277,89 @@ def serve_wire(*, port: int = 0, auth_key: str | None = None,
         _finish_trace(trace_out)
 
 
+_RUNBOOK = """\
+ops runbook (self-healing serving, DESIGN.md §16)
+-------------------------------------------------
+health states on http://HOST:METRICS_PORT/health —
+  STARTING  warm() in progress: bank loading, journal replaying,
+            programs compiling. /health answers 503; wait.
+  READY     serving. /health answers 200; the supervisor marks the
+            incarnation ready and the MTTR clock stops.
+  DEGRADED  still serving, but the drain loop or the BankReplenisher
+            has swallowed errors (or the daemon died). Check
+            repro_serve_* + repro_replenisher_* gauges, then restart
+            at a quiet moment — the journal makes restarts safe.
+  DRAINING  stop() is flushing the queue. New work should go elsewhere.
+
+restart decision table —
+  exit 0    clean (client sent BYE / idle timeout): do not restart.
+  exit 4    ResumeMismatch: config/data fingerprint drifted between the
+            parties. Restarting CANNOT help — fix the config, or move
+            --serve-checkpoint-dir / --checkpoint-dir aside to accept a
+            fresh run.
+  exit 17   injected/simulated crash (chaos harness): restart; with
+            --serve-checkpoint-dir the journal replays and every
+            admitted request id is answered exactly once.
+  other     crash: restart with the SAME command line. --supervised
+            does this for you (bounded restarts, exponential backoff,
+            crash-loop detection after 3 fast deaths).
+
+what survives a crash —
+  bank.npz              provision-time snapshot, never rewritten.
+  journal/batch_*.npz   published responses + cumulative consumed
+                        counts; replayed verbatim on restart.
+  Anything not journaled is re-scored BIT-EXACT after bank realignment.
+"""
+
+
+def run_supervised(argv: list[str]) -> int:
+    """Wrap wire-server mode in the restart supervisor: pin the ports so
+    every incarnation listens at the same address, strip crash-simulation
+    flags after incarnation 0, respawn per the RestartPolicy, and exit
+    with the child's terminal returncode."""
+    from repro.launch.supervisor import (RestartPolicy, SupervisedChild,
+                                         child_env, free_port, python_argv)
+
+    def _flag(name, default=None):
+        return argv[argv.index(name) + 1] if name in argv else default
+
+    def _pin(name, value):
+        if name in argv:
+            argv[argv.index(name) + 1] = str(value)
+        else:
+            argv.extend([name, str(value)])
+
+    if _flag("--serve-port") in (None, "0"):
+        _pin("--serve-port", free_port())
+    if _flag("--metrics-port") == "0":
+        _pin("--metrics-port", free_port())
+    metrics_port = _flag("--metrics-port")
+    health_url = (f"http://127.0.0.1:{metrics_port}/health"
+                  if metrics_port else None)
+
+    def argv_for(incarnation: int) -> list[str]:
+        child = list(argv)
+        if incarnation > 0 and "--die-after-responses" in child:
+            i = child.index("--die-after-responses")
+            del child[i:i + 2]      # the crash switch fires once, not forever
+        return python_argv("repro.launch.serve_kmeans", *child)
+
+    child = SupervisedChild(
+        "serve", argv_for, policy=RestartPolicy(),
+        terminal_codes=(0, 4), env=child_env(),
+        ready_pattern=r"^SERVING ", health_url=health_url,
+        on_line=lambda line: print(line, flush=True))
+    child.start()
+    child.wait()
+    print(f"SUPERVISOR terminal: {child.terminal_reason} "
+          f"(rc={child.returncode}, restarts={child.restarts})", flush=True)
+    return child.returncode if child.returncode is not None else 1
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=_RUNBOOK)
     ap.add_argument("--n-train", type=int, default=2000)
     ap.add_argument("--d-a", type=int, default=18)
     ap.add_argument("--d-b", type=int, default=24)
@@ -326,9 +426,19 @@ def main() -> None:
     ap.add_argument("--idle-timeout", type=float, default=120.0,
                     help="wire mode: give up after this much client "
                          "silence")
+    ap.add_argument("--supervised", action="store_true",
+                    help="wire mode: run the server under the restart "
+                         "supervisor (pin ports, respawn on crash, strip "
+                         "--die-after-responses after incarnation 0)")
     ap.add_argument("--trace-out", default=None,
                     help="enable span tracing and export a Chrome-trace / "
                          "Perfetto JSON timeline here on exit")
+    ap.add_argument("--trace-rotate", type=int, default=None,
+                    help="keep only the newest N spans per category "
+                         "(bounded-memory tracing for long-lived servers)")
+    ap.add_argument("--trace-sample", type=float, default=1.0,
+                    help="record ~this fraction of spans (deterministic "
+                         "counter sampling; 1.0 = everything)")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve the Prometheus text exposition on this "
                          "port (0 = ephemeral, printed as "
@@ -337,6 +447,12 @@ def main() -> None:
                     help="log a one-line stats summary (latency quantiles "
                          "+ bank_stock) every this many seconds")
     args = ap.parse_args()
+    if args.supervised:
+        import sys
+        if args.serve_port is None:
+            ap.error("--supervised requires wire mode (--serve-port)")
+        argv = [a for a in sys.argv[1:] if a != "--supervised"]
+        raise SystemExit(run_supervised(argv))
     if args.serve_port is not None:
         serve_wire(port=args.serve_port, auth_key=args.auth_key,
                    checkpoint_dir=args.serve_checkpoint_dir,
@@ -350,6 +466,8 @@ def main() -> None:
                    provision_copies=args.provision_copies or 8,
                    provision_workers=args.provision_workers,
                    seed=args.seed, trace_out=args.trace_out,
+                   trace_rotate=args.trace_rotate,
+                   trace_sample=args.trace_sample,
                    metrics_port=args.metrics_port,
                    stats_interval=args.stats_interval)
         return
@@ -365,7 +483,8 @@ def main() -> None:
           provision_workers=args.provision_workers,
           checkpoint_dir=args.checkpoint_dir, resume=args.resume,
           checkpoint_every=args.checkpoint_every, seed=args.seed,
-          trace_out=args.trace_out, metrics_port=args.metrics_port,
+          trace_out=args.trace_out, trace_rotate=args.trace_rotate,
+          trace_sample=args.trace_sample, metrics_port=args.metrics_port,
           stats_interval=args.stats_interval)
 
 

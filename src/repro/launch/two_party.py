@@ -21,6 +21,18 @@ combos (tests/test_wire.py).
 checkpoint publishes (requires --checkpoint-dir) — the crash half of the
 checkpoint/resume acceptance test; rerunning with --resume (fresh B)
 finishes bit-exact against an uninterrupted run.
+
+Self-healing mode (DESIGN.md §16): `--auto-resume` makes party A
+negotiate the resume step with B on every start — it announces a fresh
+incarnation nonce (resetting B's dedup window so the new sequence space
+isn't mistaken for stale duplicates), exchanges latest published
+checkpoint step + config fingerprint, and resumes from `min(step)` with
+no operator action; `--state-dir` gives B a durable progress marker so
+the negotiation survives B's own crashes; `--peer-wait S` parks either
+side through a supervised peer restart instead of dying. `--die-at
+point[:nth]` arms the chaos kill-points (core/faultpoints.py) and
+`--fault-*` inject deterministic wire faults — together they are the
+levers `benchmarks/chaos_bench.py` sweeps under `launch/supervisor.py`.
 """
 from __future__ import annotations
 
@@ -28,12 +40,15 @@ import argparse
 import json
 import os
 import sys
+import time
 
 import numpy as np
 
-from repro.core.channel import (ReliableChannel, SocketTransport,
-                                WireSession, WireTimeout, serve_peer,
-                                session_key)
+from repro.core import faultpoints
+from repro.core.channel import (FaultyTransport, PeerProgress,
+                                ReliableChannel, ResumeMismatch,
+                                SocketTransport, WireSession, WireTimeout,
+                                serve_peer, session_key)
 from repro.core.kmeans import KMeansConfig, SecureKMeans
 from repro.obs import trace as _trace
 
@@ -76,10 +91,51 @@ def _auth(args) -> bytes | None:
     return session_key(args.auth_key) if args.auth_key else None
 
 
+def _wrap_faults(t, args):
+    """Apply the CLI's deterministic fault schedule to a transport.
+    FaultyTransport delegates `.stats` to the inner transport, so the
+    wire accounting below keeps reading the same counters."""
+    sever = tuple(int(s) for s in
+                  (args.fault_sever_at or "").split(",") if s.strip())
+    if not (args.fault_drop or args.fault_dup or args.fault_corrupt
+            or sever):
+        return t
+    return FaultyTransport(t, seed=args.fault_seed, drop=args.fault_drop,
+                           dup=args.fault_dup, corrupt=args.fault_corrupt,
+                           sever_at=sever)
+
+
+def _wire_stats_line(role: str, t, extra: dict | None = None) -> None:
+    """One machine-parsable line the chaos bench totals across
+    incarnations (the DYING line carries the same dict for killed ones)."""
+    d = {"role": role, "frames_sent": int(t.stats.frames_sent),
+         "frames_recv": int(t.stats.frames_recv),
+         "wire_bytes_sent": int(t.stats.wire_bytes_sent),
+         "reconnects": int(t.stats.reconnects)}
+    d.update(extra or {})
+    print("WIRE_STATS " + json.dumps(d, sort_keys=True), flush=True)
+
+
 def _party_b(args) -> None:
     _trace_setup(args)
+    if args.die_at:
+        faultpoints.arm(args.die_at)
     t = SocketTransport("connect", host=args.host, port=args.port,
                         io_timeout_s=args.io_timeout)
+    ft = _wrap_faults(t, args)
+    faultpoints.set_reporter(lambda: {
+        "role": "B", "frames_sent": int(t.stats.frames_sent),
+        "frames_recv": int(t.stats.frames_recv),
+        "wire_bytes_sent": int(t.stats.wire_bytes_sent)})
+
+    progress = None
+    if args.state_dir:
+        os.makedirs(args.state_dir, exist_ok=True)
+        progress = PeerProgress(os.path.join(args.state_dir,
+                                             "peer_progress.json"))
+        if progress.step >= 0:
+            print(f"B: resuming with recorded step {progress.step}",
+                  flush=True)
 
     def on_blob(meta, arrays):
         if meta.get("op") != "get_slice":
@@ -89,29 +145,54 @@ def _party_b(args) -> None:
         _, x_b = split_data(x, meta["partition"])
         return {"op": "slice"}, {"x_b": x_b}
 
+    # the idle budget doubles as the bounded reconnect-wait: while the
+    # supervisor restarts a crashed engine, B parks in its reconnect loop
+    # and only gives up once TOTAL silence exceeds the budget
+    park = args.peer_wait if args.peer_wait else args.io_timeout
     try:
-        stats = serve_peer(t, on_blob=on_blob,
-                           idle_timeout_s=args.io_timeout,
-                           auth_key=_auth(args))
+        stats = serve_peer(ft, on_blob=on_blob,
+                           idle_timeout_s=max(args.io_timeout, park),
+                           auth_key=_auth(args), progress=progress)
     except WireTimeout as e:
         # engine crashed or unreachable past the idle budget: exit with a
         # clear diagnostic (its checkpoint-resume relaunches a fresh B)
         print(f"B: giving up — {e}", flush=True)
-        t.close()
+        ft.close()
         raise SystemExit(3)
     print(f"B: served {stats.served} requests, "
           f"{stats.dedup_replays} dedup replays", flush=True)
-    t.close()
+    _wire_stats_line("B", t, {"served": int(stats.served),
+                              "incarnation_resets":
+                              int(stats.incarnation_resets)})
+    ft.close()
     _trace_finish(args)
 
 
 def _party_a(args) -> None:
     _trace_setup(args)
+    if args.die_at:
+        faultpoints.arm(args.die_at)
     t = SocketTransport("listen", host=args.host, port=args.port,
                         io_timeout_s=args.io_timeout)
     print(f"LISTENING {t.port}", flush=True)
-    ws = WireSession(ReliableChannel(t, deadline_s=args.io_timeout,
-                                     auth_key=_auth(args)))
+    ft = _wrap_faults(t, args)
+    chan = ReliableChannel(ft, deadline_s=args.io_timeout,
+                           auth_key=_auth(args),
+                           reconnect_wait_s=args.peer_wait)
+    # the incarnation nonce distinguishes THIS process from any earlier
+    # one on the same port: B resets its dedup window when it changes
+    inc = f"{os.getpid()}-{time.time_ns()}"
+    ws = WireSession(chan, incarnation=inc)
+    faultpoints.set_reporter(lambda: {
+        "role": "A", "frames_sent": int(t.stats.frames_sent),
+        "frames_recv": int(t.stats.frames_recv),
+        "wire_bytes_sent": int(t.stats.wire_bytes_sent),
+        "retries": int(chan.retries), "reconnects": int(chan.reconnects)})
+
+    if args.auto_resume:
+        # announce the incarnation FIRST: a restarted engine's sequence
+        # space restarts at 0, which B would stale-drop until the reset
+        ws.negotiate_resume(step=-1, fingerprint=None)
 
     x = make_data(args.n, args.d, args.k, args.seed, args.sparse_frac)
     x_a, x_b_local = split_data(x, args.partition)
@@ -131,10 +212,19 @@ def _party_a(args) -> None:
                        pipeline=not args.no_pipeline, backend="xla")
     km = SecureKMeans(cfg)
     ckpt = None
+    fp = None
     if args.checkpoint_dir:
         from repro.checkpoint.fit import FitCheckpointer
 
+        fp = km._fit_fingerprint(x_a.shape, x_b.shape)
+
         def after_save(state, _path):
+            if args.auto_resume:
+                # tell B the step is published BEFORE any scripted death:
+                # notify-then-die and die-before-notify are both safe (B
+                # lagging only makes the agreed step older), but notifying
+                # eagerly keeps MTTR low — the restart resumes at min()
+                ws.notify_publish(state.step, fp)
             if args.die_at_iter is not None \
                     and state.iteration >= args.die_at_iter \
                     and state.batch == 0:
@@ -144,8 +234,18 @@ def _party_a(args) -> None:
 
         ckpt = FitCheckpointer(args.checkpoint_dir,
                                every=args.checkpoint_every,
+                               fingerprint=fp,
                                after_save=after_save)
-    res = km.fit(x_a, x_b, wire=ws, checkpoint=ckpt, resume=args.resume)
+    resume_step = None
+    if args.auto_resume:
+        if ckpt is None:
+            raise SystemExit("--auto-resume requires --checkpoint-dir")
+        my_step = max(ckpt.all_steps(), default=-1)
+        resume_step = ws.negotiate_resume(step=my_step, fingerprint=fp)
+        print(f"A: negotiated resume step {resume_step} "
+              f"(ours {my_step})", flush=True)
+    res = km.fit(x_a, x_b, wire=ws, checkpoint=ckpt, resume=args.resume,
+                 resume_step=resume_step)
 
     # score a fresh arrival batch over the same session
     arr = make_data(args.predict_n, args.d, args.k, args.seed + 1,
@@ -177,8 +277,10 @@ def _party_a(args) -> None:
     print(f"A: fit+predict done, wire {ws.payload_bytes} payload bytes / "
           f"{ws.rounds} rounds over {t.stats.frames_sent} frames",
           flush=True)
+    _wire_stats_line("A", t, {"retries": int(chan.retries),
+                              "reconnects": int(chan.reconnects)})
     ws.bye()
-    t.close()
+    ft.close()
     _trace_finish(args)
 
 
@@ -216,17 +318,45 @@ def main(argv=None) -> None:
     ap.add_argument("--die-at-iter", type=int, default=None,
                     help="A: os._exit right after this iteration's "
                          "checkpoint publishes (crash simulation)")
+    ap.add_argument("--die-at", default=None,
+                    help="arm chaos kill-points: comma-separated "
+                         "point[:nth] (e.g. fit.mid_s1:4, wire.serve:20); "
+                         "the process hard-exits at the Nth hit")
+    ap.add_argument("--auto-resume", action="store_true",
+                    help="A: negotiate the resume step with B on start "
+                         "(incarnation announce + min(step) agreement); "
+                         "requires --checkpoint-dir")
+    ap.add_argument("--state-dir", default=None,
+                    help="B: durable progress-marker directory for the "
+                         "resume negotiation")
+    ap.add_argument("--peer-wait", type=float, default=0.0,
+                    help="park budget (s): survive a peer crash+restart "
+                         "this long instead of dying (A: per-request "
+                         "reconnect wait; B: extends the idle budget)")
+    ap.add_argument("--fault-drop", type=float, default=0.0)
+    ap.add_argument("--fault-dup", type=float, default=0.0)
+    ap.add_argument("--fault-corrupt", type=float, default=0.0)
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--fault-sever-at", default=None,
+                    help="comma-separated send indices at which to tear "
+                         "the connection down (deterministic)")
     ap.add_argument("--trace-out", default=None,
                     help="enable span tracing; export this role's "
                          "Chrome-trace JSON here on exit (merge A+B "
                          "files with repro.obs.merge_traces)")
     args = ap.parse_args(argv)
-    if args.role == "B":
-        if args.port == 0:
-            ap.error("role B needs A's --port")
-        _party_b(args)
-    else:
-        _party_a(args)
+    try:
+        if args.role == "B":
+            if args.port == 0:
+                ap.error("role B needs A's --port")
+            _party_b(args)
+        else:
+            _party_a(args)
+    except ResumeMismatch as e:
+        # terminal: a config mismatch can't be fixed by restarting, so
+        # the supervisor must NOT respawn on this exit code
+        print(f"{args.role}: RESUME MISMATCH — {e}", flush=True)
+        raise SystemExit(4)
 
 
 if __name__ == "__main__":

@@ -28,6 +28,23 @@ import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 
+def log_buckets(lo: float, hi: float, per_decade: int = 3) -> tuple:
+    """Fixed log-spaced histogram bucket edges from `lo` to at least `hi`
+    with `per_decade` buckets per decade. Deterministic (no data-dependent
+    sizing) so two processes' histograms are mergeable bucket-by-bucket —
+    what the wire-latency / backoff / launch-wall histograms use."""
+    import math
+    if not (lo > 0 and hi > lo):
+        raise ValueError(f"need 0 < lo < hi, got {lo}, {hi}")
+    step = 10.0 ** (1.0 / per_decade)
+    edges, v = [], float(lo)
+    while v < hi * (1.0 + 1e-12):
+        edges.append(round(v, 12))
+        v *= step
+    edges.append(round(v, 12))
+    return tuple(edges)
+
+
 def _fmt_labels(labels: dict) -> str:
     if not labels:
         return ""
@@ -289,38 +306,62 @@ def register_service(svc, registry: MetricsRegistry | None = None) -> None:
 
     for k in keys:
         reg.gauge(f"repro_serve_{k}", fn=_read(k))
+    if hasattr(svc, "health_code"):
+        reg.gauge("repro_serve_health", fn=svc.health_code)
 
 
 # -- exposition server -------------------------------------------------------
 
 class _MetricsHandler(BaseHTTPRequestHandler):
     registry: MetricsRegistry = _REGISTRY
+    health_cb = None        # () -> state string, e.g. "READY"
 
-    def do_GET(self):  # noqa: N802 (stdlib interface)
-        if self.path not in ("/", "/metrics"):
-            self.send_response(404)
-            self.end_headers()
-            return
-        body = self.registry.render_prometheus().encode()
-        self.send_response(200)
+    def _serve(self, status: int, body: bytes) -> None:
+        self.send_response(status)
         self.send_header("Content-Type",
                          "text/plain; version=0.0.4; charset=utf-8")
         self.send_header("Content-Length", str(len(body)))
         self.end_headers()
         self.wfile.write(body)
 
+    def do_GET(self):  # noqa: N802 (stdlib interface)
+        if self.path == "/health":
+            # readiness probe: 200 only when the service reports READY,
+            # 503 otherwise (STARTING/DEGRADED/DRAINING) — what the
+            # supervisor and load balancers gate on. Body is the state.
+            if self.health_cb is None:
+                self._serve(404, b"no health callback registered\n")
+                return
+            try:
+                state = str(self.health_cb())
+            except Exception as e:  # health must never take the server down
+                self._serve(503, f"DEGRADED ({e})\n".encode())
+                return
+            self._serve(200 if state == "READY" else 503,
+                        (state + "\n").encode())
+            return
+        if self.path not in ("/", "/metrics"):
+            self.send_response(404)
+            self.end_headers()
+            return
+        self._serve(200, self.registry.render_prometheus().encode())
+
     def log_message(self, *a):  # silence per-request stderr lines
         pass
 
 
 class MetricsServer:
-    """`GET /metrics` → Prometheus text, on a daemon thread. Port 0 picks
-    a free port (read `.port` after start)."""
+    """`GET /metrics` → Prometheus text, `GET /health` → readiness state
+    (200 iff READY), on a daemon thread. Port 0 picks a free port (read
+    `.port` after start)."""
 
     def __init__(self, port: int = 0,
-                 registry: MetricsRegistry | None = None):
+                 registry: MetricsRegistry | None = None,
+                 health_cb=None):
         handler = type("Handler", (_MetricsHandler,),
-                       {"registry": registry or _REGISTRY})
+                       {"registry": registry or _REGISTRY,
+                        "health_cb": staticmethod(health_cb)
+                        if health_cb is not None else None})
         self._httpd = ThreadingHTTPServer(("127.0.0.1", port), handler)
         self._httpd.daemon_threads = True
         self.port = self._httpd.server_address[1]

@@ -30,7 +30,7 @@ import json
 import secrets
 import threading
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 
 TRACE_ID_BYTES = 8
 
@@ -114,10 +114,25 @@ class Tracer:
     `process` labels this tracer's pid lane in the exported JSON — set it
     to "client" / "server" / "party_a" so merged multi-process timelines
     stay readable. Spans inherit the thread's ambient trace id
-    (`set_current_trace`) unless the call passes its own ``trace=``."""
+    (`set_current_trace`) unless the call passes its own ``trace=``.
+
+    Long-lived servers bound the tracer two ways (both leave the DISABLED
+    fast path untouched — still one attribute check, no clock read):
+
+    * `rotate_spans=N` keeps only the newest N events **per category**
+      (the span name's first dot-component: ``serve.request`` and
+      ``serve.drain`` share the "serve" ring) instead of the flat
+      `max_events` drop-newest list — a week-old fit span can't starve
+      today's serve spans out of the buffer. Evictions count in
+      `rotated_out`.
+    * `sample_rate=r` records ~every ``round(1/r)``-th event per category
+      (deterministic counter sampling, not RNG — reruns trace the same
+      spans). Skips count in `sampled_out`."""
 
     def __init__(self, enabled: bool = False, process: str = "repro",
-                 max_events: int = 1_000_000):
+                 max_events: int = 1_000_000,
+                 rotate_spans: int | None = None,
+                 sample_rate: float = 1.0):
         self.enabled = bool(enabled)
         self.process = str(process)
         self.max_events = int(max_events)
@@ -125,6 +140,30 @@ class Tracer:
         self._events: list[dict] = []
         self._threads: dict[int, str] = {}
         self._lock = threading.Lock()
+        self.configure_bounds(rotate_spans=rotate_spans,
+                              sample_rate=sample_rate)
+
+    def configure_bounds(self, rotate_spans: int | None = None,
+                         sample_rate: float | None = None) -> None:
+        """(Re)apply the bounded-memory knobs. Resets the rotation rings
+        and sampling counters — call before tracing, not mid-flight."""
+        if rotate_spans is not None and int(rotate_spans) < 1:
+            raise ValueError("rotate_spans must be >= 1 (or None)")
+        self.rotate_spans = None if rotate_spans is None \
+            else int(rotate_spans)
+        rate = 1.0 if sample_rate is None else float(sample_rate)
+        if not 0.0 < rate <= 1.0:
+            raise ValueError(f"sample_rate must be in (0, 1], got {rate}")
+        self.sample_rate = rate
+        self._sample_every = max(1, round(1.0 / rate))
+        self._sample_n: dict[str, int] = {}
+        self.sampled_out = 0
+        self.rotated_out = 0
+        self._rings: dict[str, deque] = {}
+
+    @staticmethod
+    def _category(name: str) -> str:
+        return name.split(".", 1)[0]
 
     # -- recording --------------------------------------------------------
     def span(self, name: str, **args):
@@ -170,43 +209,71 @@ class Tracer:
         else:
             ev["ph"] = "X"
             ev["dur"] = dur_us
+        cat = self._category(name)
         with self._lock:
-            if len(self._events) >= self.max_events:
-                self.dropped += 1
-                return
-            self._events.append(ev)
+            if self._sample_every > 1:
+                n = self._sample_n.get(cat, 0)
+                self._sample_n[cat] = n + 1
+                if n % self._sample_every:
+                    self.sampled_out += 1
+                    return
+            if self.rotate_spans is not None:
+                ring = self._rings.get(cat)
+                if ring is None:
+                    ring = self._rings[cat] = deque(maxlen=self.rotate_spans)
+                if len(ring) == self.rotate_spans:
+                    self.rotated_out += 1
+                ring.append(ev)
+            else:
+                if len(self._events) >= self.max_events:
+                    self.dropped += 1
+                    return
+                self._events.append(ev)
             self._threads.setdefault(th.ident, th.name)
+
+    def _all_events(self) -> list[dict]:
+        """Every retained event (flat list + rotation rings), ts-ordered.
+        Caller must hold `_lock`."""
+        evs = list(self._events)
+        for ring in self._rings.values():
+            evs.extend(ring)
+        evs.sort(key=lambda e: e["ts"])
+        return evs
 
     # -- queries ----------------------------------------------------------
     def events(self) -> list[dict]:
         with self._lock:
-            return [dict(e) for e in self._events]
+            return [dict(e) for e in self._all_events()]
 
     def span_counts(self) -> dict:
-        """{span name: count} over everything recorded so far."""
+        """{span name: count} over everything retained so far."""
         out: dict[str, int] = defaultdict(int)
         with self._lock:
-            for e in self._events:
+            for e in self._all_events():
                 out[e["name"]] += 1
         return dict(out)
 
     def spans_for_trace(self, trace_id: str) -> list[dict]:
         with self._lock:
-            return [dict(e) for e in self._events
+            return [dict(e) for e in self._all_events()
                     if e["args"].get("trace") == trace_id]
 
     def reset(self) -> None:
         with self._lock:
             self._events.clear()
             self._threads.clear()
+            self._rings.clear()
+            self._sample_n.clear()
             self.dropped = 0
+            self.rotated_out = 0
+            self.sampled_out = 0
 
     # -- export -----------------------------------------------------------
     def chrome_events(self, pid: int = 1) -> list[dict]:
         """The Chrome-trace event list: metadata rows naming the process
         and thread lanes, then every recorded span."""
         with self._lock:
-            events = [dict(e) for e in self._events]
+            events = [dict(e) for e in self._all_events()]
             threads = dict(self._threads)
         out = [{"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
                 "args": {"name": self.process}}]
@@ -233,7 +300,7 @@ class Tracer:
         mean — the terminal's flame graph."""
         agg: dict[str, list] = defaultdict(lambda: [0, 0])
         with self._lock:
-            for e in self._events:
+            for e in self._all_events():
                 a = agg[e["name"]]
                 a[0] += 1
                 a[1] += e.get("dur", 0)
@@ -249,6 +316,12 @@ class Tracer:
         if self.dropped:
             lines.append(f"(+{self.dropped} events dropped past "
                          f"max_events={self.max_events})")
+        if self.rotated_out:
+            lines.append(f"(+{self.rotated_out} events rotated out past "
+                         f"rotate_spans={self.rotate_spans} per category)")
+        if self.sampled_out:
+            lines.append(f"(+{self.sampled_out} events skipped at "
+                         f"sample_rate={self.sample_rate})")
         return "\n".join(lines)
 
 
@@ -262,14 +335,24 @@ def get_tracer() -> Tracer:
 
 
 def configure(enabled: bool | None = None, process: str | None = None,
-              max_events: int | None = None) -> Tracer:
-    """Adjust the global tracer in place (None = leave unchanged)."""
+              max_events: int | None = None,
+              rotate_spans: int | None = None,
+              sample_rate: float | None = None) -> Tracer:
+    """Adjust the global tracer in place (None = leave unchanged; passing
+    either bounded-memory knob resets the rotation rings + sample
+    counters)."""
     if enabled is not None:
         _TRACER.enabled = bool(enabled)
     if process is not None:
         _TRACER.process = str(process)
     if max_events is not None:
         _TRACER.max_events = int(max_events)
+    if rotate_spans is not None or sample_rate is not None:
+        _TRACER.configure_bounds(
+            rotate_spans=rotate_spans if rotate_spans is not None
+            else _TRACER.rotate_spans,
+            sample_rate=sample_rate if sample_rate is not None
+            else _TRACER.sample_rate)
     return _TRACER
 
 

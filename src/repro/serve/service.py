@@ -302,6 +302,8 @@ class ScoringService:
         self._done: dict[int, ScoringResponse] = {}
         self._thread: threading.Thread | None = None
         self._running = False
+        self._draining = False
+        self._closed = False
         self.loop_errors = 0
         self.last_loop_error: BaseException | None = None
         self.checkpointer = checkpointer
@@ -640,17 +642,49 @@ class ScoringService:
         exits. No-op if the loop isn't running."""
         if self._thread is None:
             return
-        with self._cond:
-            self._running = False
-            self._cond.notify_all()
-        self._thread.join(timeout=60.0)
-        self._thread = None
+        self._draining = True
+        try:
+            with self._cond:
+                self._running = False
+                self._cond.notify_all()
+            self._thread.join(timeout=60.0)
+            self._thread = None
+        finally:
+            self._draining = False
+
+    # -- health ------------------------------------------------------------
+    HEALTH_CODES = {"STARTING": 0, "READY": 1, "DEGRADED": 2, "DRAINING": 3}
+
+    @property
+    def health(self) -> str:
+        """Health state for the supervisor / `/health` endpoint
+        (DESIGN.md §16): STARTING until `warm()` finished (bank loaded,
+        journal replayed, programs compiled), DRAINING while `stop()` is
+        flushing the queue, DEGRADED when the serving loop or the
+        replenisher daemon has swallowed errors or the replenisher died
+        under us, READY otherwise. Only READY answers HTTP 200."""
+        if self._draining or self._closed:
+            return "DRAINING"
+        if not self._warmed:
+            return "STARTING"
+        if self.loop_errors > 0:
+            return "DEGRADED"
+        r = self.replenisher
+        if r is not None and (r.errors > 0 or (self._warmed
+                                               and not r.running)):
+            return "DEGRADED"
+        return "READY"
+
+    def health_code(self) -> int:
+        """Numeric encoding of `health` for the metrics gauge."""
+        return self.HEALTH_CODES[self.health]
 
     def close(self) -> None:
         """Stop the serving loop and the replenisher daemon."""
         self.stop()
         if self.replenisher is not None:
             self.replenisher.stop()
+        self._closed = True
 
     def response(self, rid: int,
                  timeout: float | None = None) -> ScoringResponse | None:

@@ -1,0 +1,172 @@
+"""Crash-durability tests: fsync'd publishes and torn-file recovery
+(DESIGN.md §16 satellite).
+
+The atomic-rename publish protocol is only crash-safe if the payload is
+durable BEFORE the rename and the rename itself is durable after — both
+now enforced with fsync in `checkpoint/store.py`, `checkpoint/fit.py`
+and `checkpoint/serve.py`. A machine crash can still tear a file that
+was *published by an older, pre-fsync writer*; recovery must skip the
+torn step with a warning and fall back to the previous one, while
+fingerprint mismatches keep failing loudly (config error, not damage).
+"""
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.fit import FitCheckpointer, FitState
+from repro.checkpoint.serve import ServeCheckpointer
+from repro.checkpoint.store import CheckpointStore, fsync_path, fsync_tree
+from repro.core.kmeans import KMeansConfig, SecureKMeans
+
+from test_wire import _assert_same_fit, _blobs, _split
+
+
+def _fit_with_checkpoints(tmp_path, iters=3):
+    x = _blobs(48, 4, 2, seed=5)
+    a, b = _split(x, "vertical")
+    cfg = KMeansConfig(k=2, iters=iters, seed=5, backend="xla")
+    d = str(tmp_path / "ck")
+    ck = FitCheckpointer(d, every=1, keep=0)
+    res = SecureKMeans(cfg).fit(a, b, checkpoint=ck)
+    return cfg, a, b, d, ck, res
+
+
+# ---------------------------------------------------------------------------
+# fsync helpers
+# ---------------------------------------------------------------------------
+
+
+def test_fsync_path_file_dir_and_missing(tmp_path):
+    f = tmp_path / "x.bin"
+    f.write_bytes(b"abc")
+    fsync_path(str(f))                       # file
+    fsync_path(str(tmp_path))                # directory
+    fsync_path(str(tmp_path / "missing"))    # best-effort no-raise
+
+
+def test_fsync_tree_walks_nested(tmp_path):
+    (tmp_path / "a" / "b").mkdir(parents=True)
+    (tmp_path / "a" / "b" / "f.txt").write_text("hi")
+    (tmp_path / "a" / "g.txt").write_text("ho")
+    fsync_tree(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# FitCheckpointer: torn-step fallback + step_at_or_before
+# ---------------------------------------------------------------------------
+
+
+def test_torn_newest_step_recovers_previous(tmp_path):
+    cfg, a, b, d, ck, _ = _fit_with_checkpoints(tmp_path)
+    steps = ck.all_steps()
+    assert len(steps) >= 2
+    # tear the newest step's arrays, as a pre-fsync writer + power loss
+    # would: published name, garbage payload
+    torn = os.path.join(d, f"step_{steps[-1]:010d}", "state.npz")
+    with open(torn, "wb") as f:
+        f.write(b"\x00" * 16)
+    with pytest.warns(UserWarning, match="unreadable"):
+        st = ck.latest()
+    assert st is not None and st.step == steps[-2]
+
+
+def test_every_step_torn_means_fresh_start(tmp_path):
+    cfg, a, b, d, ck, _ = _fit_with_checkpoints(tmp_path)
+    for s in ck.all_steps():
+        with open(os.path.join(d, f"step_{s:010d}", "state.npz"),
+                  "wb") as f:
+            f.write(b"junk")
+    with pytest.warns(UserWarning):
+        assert ck.latest() is None
+
+
+def test_torn_manifest_also_skipped(tmp_path):
+    cfg, a, b, d, ck, _ = _fit_with_checkpoints(tmp_path)
+    steps = ck.all_steps()
+    with open(os.path.join(d, f"step_{steps[-1]:010d}", "manifest.json"),
+              "w") as f:
+        f.write("{half")
+    with pytest.warns(UserWarning, match="unreadable"):
+        st = ck.latest()
+    assert st.step == steps[-2]
+
+
+def test_fingerprint_mismatch_still_fails_loudly(tmp_path):
+    cfg, a, b, d, ck, _ = _fit_with_checkpoints(tmp_path)
+    ck2 = FitCheckpointer(d, fingerprint="some-other-config")
+    with pytest.raises(ValueError, match="fingerprint"):
+        ck2.latest()
+
+
+def test_resume_after_torn_step_is_bit_exact(tmp_path):
+    """The whole point: tearing the newest step only costs recompute —
+    the fit resumed from the fallback step equals the clean fit."""
+    cfg, a, b, d, ck, ref = _fit_with_checkpoints(tmp_path)
+    steps = ck.all_steps()
+    with open(os.path.join(d, f"step_{steps[-1]:010d}", "state.npz"),
+              "wb") as f:
+        f.write(b"\x00")
+    with pytest.warns(UserWarning):
+        res = SecureKMeans(cfg).fit(a, b, checkpoint=FitCheckpointer(d),
+                                    resume=True)
+    _assert_same_fit(ref, res)
+
+
+def test_step_at_or_before(tmp_path):
+    cfg, a, b, d, ck, _ = _fit_with_checkpoints(tmp_path)
+    steps = ck.all_steps()                   # [1_000_000, 2_000_000]
+    assert ck.step_at_or_before(steps[-1]) == steps[-1]
+    assert ck.step_at_or_before(steps[-1] + 5) == steps[-1]
+    assert ck.step_at_or_before(steps[0] + 1) == steps[0]
+    assert ck.step_at_or_before(steps[0] - 1) is None
+    assert ck.step_at_or_before(-1) is None
+
+
+def test_torn_tmp_dir_is_ignored_and_recycled(tmp_path):
+    """A writer killed mid-save leaves step_X.tmp; it must never count
+    as published, and the next save of the same step must clobber it."""
+    d = str(tmp_path / "ck")
+    ck = FitCheckpointer(d, every=1)
+    tmp = os.path.join(d, "step_0001000000.tmp")
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        f.write("{half-written")
+    assert ck.all_steps() == []
+    assert ck.latest() is None
+    st = FitState(iteration=1, batch=0,
+                  mu0=np.zeros((2, 2), np.uint64),
+                  mu1=np.zeros((2, 2), np.uint64),
+                  counters={"n_matmul": 0, "n_mul": 0, "n_bin": 0},
+                  comm={}, advance={})
+    ck.save(st)
+    assert ck.all_steps() == [1_000_000]
+    assert not os.path.exists(tmp)
+    assert ck.load(1_000_000).iteration == 1
+
+
+# ---------------------------------------------------------------------------
+# CheckpointStore + ServeCheckpointer publish durability
+# ---------------------------------------------------------------------------
+
+
+def test_store_save_still_atomic_with_fsync(tmp_path):
+    store = CheckpointStore(str(tmp_path / "st"), keep=2)
+    tree = {"w": np.arange(6.0).reshape(2, 3)}
+    p = store.save(3, tree)
+    assert os.path.isdir(p) and not p.endswith(".tmp")
+    got = store.restore(3, {"w": np.zeros((2, 3))})
+    np.testing.assert_array_equal(got["w"], tree["w"])
+
+
+def test_serve_journal_tmp_straggler_ignored(tmp_path):
+    ck = ServeCheckpointer(str(tmp_path / "sck"))
+    straggler = os.path.join(ck.journal_dir, "batch_00000007.npz.tmp")
+    with open(straggler, "wb") as f:
+        f.write(b"half a journal batch")
+    responses, consumed = ck.load_journal()
+    assert responses == {} and consumed == {}
+    # and the straggler's batch number is not skipped into
+    assert ck._next_batch() == 0

@@ -394,3 +394,194 @@ def test_register_bank_and_stats_line(fitted):
     snap2 = reg.snapshot()
     assert snap2["repro_serve_requests"] >= 1
     assert snap2["repro_bank_consumed_requests_total"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# bounded-memory tracing: rotation + sampling (DESIGN.md §16 satellite)
+# ---------------------------------------------------------------------------
+
+def test_rotate_spans_keeps_newest_n_per_category():
+    t = _trace.Tracer(enabled=True, rotate_spans=2)
+    for i in range(5):
+        with t.span("fit.iter", i=i):
+            pass
+    for i in range(3):
+        with t.span("serve.request", i=i):
+            pass
+    evs = t.events()
+    fit = [e["args"]["i"] for e in evs if e["name"] == "fit.iter"]
+    srv = [e["args"]["i"] for e in evs if e["name"] == "serve.request"]
+    assert fit == [3, 4]                 # newest 2, old fit spans evicted
+    assert srv == [1, 2]                 # per-category: serve has its own 2
+    assert t.rotated_out == 3 + 1
+    # rotation shows up in every aggregate view
+    assert t.span_counts() == {"fit.iter": 2, "serve.request": 2}
+    assert "rotated out" in t.flame_summary()
+
+
+def test_sample_rate_is_deterministic_counter_not_rng():
+    a = _trace.Tracer(enabled=True, sample_rate=0.25)
+    b = _trace.Tracer(enabled=True, sample_rate=0.25)
+    for t in (a, b):
+        for i in range(16):
+            with t.span("wire.request", i=i):
+                pass
+    ia = [e["args"]["i"] for e in a.events()]
+    ib = [e["args"]["i"] for e in b.events()]
+    assert ia == ib == [0, 4, 8, 12]     # every 4th, from the first
+    assert a.sampled_out == 12
+
+
+def test_sampling_counters_are_per_category():
+    t = _trace.Tracer(enabled=True, sample_rate=0.5)
+    with t.span("fit.a"):
+        pass
+    with t.span("serve.b"):
+        pass                             # different category: own counter
+    assert t.span_counts() == {"fit.a": 1, "serve.b": 1}
+
+
+def test_bounds_validation():
+    with pytest.raises(ValueError):
+        _trace.Tracer(rotate_spans=0)
+    with pytest.raises(ValueError):
+        _trace.Tracer(sample_rate=0.0)
+    with pytest.raises(ValueError):
+        _trace.Tracer(sample_rate=1.5)
+
+
+def test_disabled_noop_path_unchanged_by_bounds():
+    """Pin: rotation/sampling must not touch the disabled fast path —
+    span() still returns the ONE shared no-op object, and nothing is
+    recorded or counted."""
+    t = _trace.Tracer(enabled=False, rotate_spans=4, sample_rate=0.1)
+    s1 = t.span("a")
+    s2 = t.span("b", x=1)
+    assert s1 is s2 is _trace._NOOP
+    with s1:
+        pass
+    t.instant("c")
+    assert t.events() == [] and t.sampled_out == 0 and t.rotated_out == 0
+
+
+def test_configure_global_bounds_roundtrip(global_tracer):
+    _trace.configure(rotate_spans=3, sample_rate=1.0)
+    try:
+        for i in range(7):
+            with _trace.span("fit.x", i=i):
+                pass
+        assert [e["args"]["i"] for e in global_tracer.events()
+                if e["name"] == "fit.x"] == [4, 5, 6]
+    finally:
+        global_tracer.configure_bounds()  # restore unbounded defaults
+
+
+# ---------------------------------------------------------------------------
+# latency histograms: fixed log-spaced buckets (DESIGN.md §16 satellite)
+# ---------------------------------------------------------------------------
+
+def test_log_buckets_fixed_edges():
+    edges = _metrics.log_buckets(1e-3, 10.0, per_decade=3)
+    assert edges[0] == pytest.approx(1e-3)
+    assert 10.0 in edges
+    ratios = [edges[i + 1] / edges[i] for i in range(len(edges) - 1)]
+    assert all(r == pytest.approx(10 ** (1 / 3), rel=1e-6) for r in ratios)
+    # identical every call — dashboards can rely on stable bucket labels
+    assert _metrics.log_buckets(1e-3, 10.0, per_decade=3) == edges
+    with pytest.raises(ValueError):
+        _metrics.log_buckets(0.0, 1.0)
+    with pytest.raises(ValueError):
+        _metrics.log_buckets(2.0, 1.0)
+
+
+def _hist_count(snap, name):
+    h = snap.get(name)
+    return 0 if h is None else h["count"]
+
+
+def test_wire_rtt_and_backoff_histograms_record():
+    from repro.core.channel import ReliableChannel, serve_peer
+    reg = _metrics.get_registry()
+    before = reg.snapshot()
+    ta, tb = LoopbackTransport.pair()
+    th = threading.Thread(target=serve_peer, args=(tb,),
+                          kwargs={"idle_timeout_s": 30.0}, daemon=True)
+    th.start()
+    from repro.core.channel import WireSession
+    ws = WireSession(ReliableChannel(ta, deadline_s=10.0))
+    ws.exchange(64, 2)
+    ws.bye()
+    th.join(timeout=10)
+    after = reg.snapshot()
+    d_rtt = _hist_count(after, "repro_wire_request_seconds") - \
+        _hist_count(before, "repro_wire_request_seconds")
+    assert d_rtt >= 3                    # 2 exchange rounds + bye
+    # fixed log-spaced edges are what render in the exposition
+    text = reg.render_prometheus()
+    assert 'repro_wire_request_seconds_bucket{le="1e-05"}' in text or \
+        'repro_wire_request_seconds_bucket{le="1.0"}' in text
+
+
+def test_fit_iteration_histogram_records_per_iteration():
+    reg = _metrics.get_registry()
+    before = _hist_count(reg.snapshot(), "repro_fit_iteration_seconds")
+    ds = FraudDataset.synthesize(n=96, d_a=D_A, d_b=D_B, n_clusters=K,
+                                 seed=2)
+    km = SecureKMeans(KMeansConfig(k=K, iters=3, seed=2, offline="pooled"))
+    km.fit(ds.x_a, ds.x_b)
+    after = _hist_count(reg.snapshot(), "repro_fit_iteration_seconds")
+    assert after - before == 3
+
+
+# ---------------------------------------------------------------------------
+# /health endpoint (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def _get(url):
+    try:
+        with urllib.request.urlopen(url, timeout=5) as r:
+            return r.status, r.read().decode()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode()
+
+
+def test_health_route_reflects_callback_state():
+    state = {"v": "STARTING"}
+    srv = _metrics.MetricsServer(port=0, registry=_metrics.MetricsRegistry(),
+                                 health_cb=lambda: state["v"])
+    srv.start()
+    base = f"http://127.0.0.1:{srv.port}"
+    try:
+        code, body = _get(base + "/health")
+        assert code == 503 and "STARTING" in body
+        state["v"] = "READY"
+        code, body = _get(base + "/health")
+        assert code == 200 and body.strip() == "READY"
+        for s in ("DEGRADED", "DRAINING"):
+            state["v"] = s
+            code, body = _get(base + "/health")
+            assert code == 503 and s in body
+    finally:
+        srv.stop()
+
+
+def test_health_route_404_without_callback_and_cb_error_is_503():
+    srv = _metrics.MetricsServer(port=0, registry=_metrics.MetricsRegistry())
+    srv.start()
+    try:
+        code, _ = _get(f"http://127.0.0.1:{srv.port}/health")
+        assert code == 404
+    finally:
+        srv.stop()
+
+    def boom():
+        raise RuntimeError("probe exploded")
+
+    srv = _metrics.MetricsServer(port=0, registry=_metrics.MetricsRegistry(),
+                                 health_cb=boom)
+    srv.start()
+    try:
+        code, body = _get(f"http://127.0.0.1:{srv.port}/health")
+        assert code == 503 and "DEGRADED" in body
+    finally:
+        srv.stop()

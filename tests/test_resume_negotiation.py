@@ -1,0 +1,240 @@
+"""Resume-negotiation handshake tests (DESIGN.md §16).
+
+Load-bearing properties:
+* `PeerProgress` is a durable, monotone, crash-safe marker: atomic
+  publish, never moves backwards, unreadable files degrade to scratch;
+* `handle_resume` implements the negotiation contract — hello answers
+  the recorded (step, fingerprint) and binds the fingerprint on first
+  contact, publish advances the marker, fingerprint disagreement is a
+  TYPED error (not a step answer);
+* over a real loopback wire, `negotiate_resume` agrees on min(step) and
+  `ResumeMismatch` propagates to the engine;
+* a restarted engine's incarnation announce resets the responder's
+  dedup window, so its fresh seq-0 space is served instead of
+  stale-dropped — and same-incarnation duplicates still replay;
+* two-process regression: party B dying MID-HANDSHAKE (killed at its
+  first served frame — the hello) leaves the surviving engine parked
+  and resumable; a respawned B completes the run.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import pytest
+
+from repro.core.channel import (LoopbackTransport, PeerProgress,
+                                ReliableChannel, ResumeMismatch, WireSession,
+                                handle_resume, serve_peer)
+
+# ---------------------------------------------------------------------------
+# PeerProgress durability
+# ---------------------------------------------------------------------------
+
+
+def test_peer_progress_inmemory_monotone():
+    p = PeerProgress()
+    assert p.step == -1 and p.fingerprint is None
+    p.update(3, "fp1")
+    assert (p.step, p.fingerprint) == (3, "fp1")
+    p.update(1, "fp1")                       # never backwards
+    assert p.step == 3
+    p.update(5, None)                        # step advances, fp sticks
+    assert (p.step, p.fingerprint) == (5, "fp1")
+
+
+def test_peer_progress_durable_roundtrip(tmp_path):
+    path = str(tmp_path / "peer_progress.json")
+    p = PeerProgress(path)
+    p.update(7, "fpX")
+    q = PeerProgress(path)                   # a restarted B
+    assert (q.step, q.fingerprint) == (7, "fpX")
+    assert not os.path.exists(path + ".tmp")
+
+
+def test_peer_progress_unreadable_marker_degrades_to_scratch(tmp_path):
+    path = str(tmp_path / "peer_progress.json")
+    with open(path, "w") as f:
+        f.write("{torn")
+    p = PeerProgress(path)
+    assert p.step == -1 and p.fingerprint is None
+
+
+# ---------------------------------------------------------------------------
+# handle_resume contract
+# ---------------------------------------------------------------------------
+
+
+def test_hello_reports_step_and_binds_fingerprint():
+    p = PeerProgress()
+    out = handle_resume({"op": "hello", "inc": "i0", "step": -1,
+                         "fp": "fpA"}, p)
+    assert out == {"step": -1, "fp": "fpA"}
+    assert p.fingerprint == "fpA"            # bound on first contact
+
+
+def test_publish_advances_then_hello_answers_it():
+    p = PeerProgress()
+    assert handle_resume({"op": "publish", "step": 2_000_000,
+                          "fp": "fpA"}, p) == {"ok": 1}
+    out = handle_resume({"op": "hello", "step": 1_000_000, "fp": "fpA"}, p)
+    assert out["step"] == 2_000_000
+
+
+def test_fingerprint_mismatch_is_typed_error_not_a_step():
+    p = PeerProgress()
+    p.update(4, "fpA")
+    out = handle_resume({"op": "hello", "step": 9, "fp": "fpB"}, p)
+    assert out["error"] == "fingerprint-mismatch"
+    assert out["ours"] == "fpA" and out["theirs"] == "fpB"
+    # the marker did NOT move — a rejected hello has no side effects
+    assert (p.step, p.fingerprint) == (4, "fpA")
+
+
+# ---------------------------------------------------------------------------
+# over the wire: loopback engine <-> serve_peer
+# ---------------------------------------------------------------------------
+
+
+def _served_pair(progress):
+    ta, tb = LoopbackTransport.pair()
+    out = {}
+
+    def run():
+        try:
+            out["responder"] = serve_peer(tb, idle_timeout_s=30.0,
+                                          progress=progress)
+        except Exception as e:               # surfaced by the test join
+            out["error"] = e
+
+    th = threading.Thread(target=run, daemon=True)
+    th.start()
+    return ta, th, out
+
+
+def test_negotiate_resume_agrees_on_min_step():
+    prog = PeerProgress()
+    prog.update(3_000_000, "fpA")
+    ta, th, out = _served_pair(prog)
+    ws = WireSession(ReliableChannel(ta, deadline_s=10.0),
+                     incarnation="inc-1")
+    # engine holds a NEWER published step than B witnessed: rewind to B's
+    agreed = ws.negotiate_resume(step=5_000_000, fingerprint="fpA")
+    assert agreed == 3_000_000
+    # B ahead of the engine (die-before-local-load): engine's step wins
+    prog.update(9_000_000, "fpA")
+    assert ws.negotiate_resume(step=4_000_000,
+                               fingerprint="fpA") == 4_000_000
+    ws.notify_publish(6_000_000, "fpA")
+    assert prog.step == 9_000_000            # publish never rewinds B
+    ws.bye()
+    th.join(timeout=10.0)
+    assert "error" not in out
+
+
+def test_mismatch_raises_resume_mismatch_over_wire():
+    prog = PeerProgress()
+    prog.update(2, "fpA")
+    ta, th, out = _served_pair(prog)
+    ws = WireSession(ReliableChannel(ta, deadline_s=10.0),
+                     incarnation="inc-1")
+    with pytest.raises(ResumeMismatch):
+        ws.negotiate_resume(step=2, fingerprint="fpB")
+    ws.bye()
+    th.join(timeout=10.0)
+
+
+def test_incarnation_announce_resets_dedup_window():
+    """A restarted engine restarts its sequence space at 0; without the
+    incarnation reset the responder would stale-drop every request. The
+    announce must land first and clear the window."""
+    prog = PeerProgress()
+    ta, th, out = _served_pair(prog)
+    ws1 = WireSession(ReliableChannel(ta, deadline_s=10.0),
+                      incarnation="inc-1")
+    ws1.negotiate_resume(step=-1, fingerprint="fpA")    # seq 0
+    ws1.notify_publish(1_000_000, "fpA")                # seq 1
+    ws1.exchange(64, 1)                                 # seq 2
+    # "crash": a fresh channel on the same transport, fresh seq space
+    ws2 = WireSession(ReliableChannel(ta, deadline_s=10.0,
+                                      try_timeout_s=0.2, max_retries=3),
+                      incarnation="inc-2")
+    agreed = ws2.negotiate_resume(step=1_000_000, fingerprint="fpA")
+    assert agreed == 1_000_000
+    ws2.exchange(64, 1)                                 # fresh seq space OK
+    ws2.bye()
+    th.join(timeout=10.0)
+    r = out["responder"]
+    assert r.incarnation_resets == 1
+    assert r.stale_drops == 0
+
+
+def test_same_incarnation_duplicate_hello_replays_from_cache():
+    prog = PeerProgress()
+    ta, th, out = _served_pair(prog)
+    chan = ReliableChannel(ta, deadline_s=10.0)
+    ws = WireSession(chan, incarnation="inc-1")
+    ws.negotiate_resume(step=-1, fingerprint=None)
+    # resend the LAST frame verbatim (same seq, same incarnation):
+    # dedup must replay the cached response, not reset the window
+    from repro.core.channel import T_RESUME, encode_frame
+    body = json.dumps({"op": "hello", "inc": "inc-1", "step": -1,
+                       "fp": None}, sort_keys=True).encode()
+    ta.send_frame(encode_frame(T_RESUME, chan._seq - 1, body))
+    ta.recv_frame(5.0)                       # the replayed response
+    ws.bye()
+    th.join(timeout=10.0)
+    r = out["responder"]
+    assert r.dedup_replays == 1 and r.incarnation_resets == 0
+
+
+# ---------------------------------------------------------------------------
+# two-process regression: B dies during the handshake itself
+# ---------------------------------------------------------------------------
+
+
+def _env():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return env
+
+
+def _spawn(role, port, extra, env):
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.two_party", "--role", role,
+         "--port", str(port)] + list(extra),
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env)
+
+
+def test_peer_death_mid_handshake_leaves_survivor_resumable(tmp_path):
+    """B is killed at its FIRST served frame — A's incarnation hello, the
+    resume handshake itself. A (with a park budget) must survive B's
+    crash window; a respawned B (durable state dir) completes the fit."""
+    env = _env()
+    ck = str(tmp_path / "ck")
+    state = str(tmp_path / "bstate")
+    out_npz = str(tmp_path / "a.npz")
+    a = _spawn("A", 0, ["--out", out_npz, "--checkpoint-dir", ck,
+                        "--auto-resume", "--peer-wait", "60",
+                        "--io-timeout", "60", "--iters", "2"], env)
+    line = a.stdout.readline()
+    assert line.startswith("LISTENING "), line
+    port = int(line.split()[1])
+    b_extra = ["--state-dir", state, "--peer-wait", "60",
+               "--io-timeout", "60"]
+    b1 = _spawn("B", port, b_extra + ["--die-at", "wire.serve:1"], env)
+    b1_out = b1.communicate(timeout=120)[0]
+    assert b1.returncode == 17, b1_out
+    assert "DYING point=wire.serve" in b1_out
+    # A is parked mid-handshake; the respawned B answers the resend
+    b2 = _spawn("B", port, b_extra, env)
+    a_out = a.communicate(timeout=300)[0]
+    b2_out = b2.communicate(timeout=60)[0]
+    assert a.returncode == 0, a_out
+    assert b2.returncode == 0, b2_out
+    assert "A: negotiated resume step -1" in a_out
+    assert os.path.exists(out_npz)

@@ -442,3 +442,121 @@ def test_wire_server_kill_restart_exactly_once(tmp_path):
     res = km.fit(ds.x_a, ds.x_b)
     ref = _one_at_a_time(_service(km, res, provision_copies=16), b)
     _assert_same_responses(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# health-state machine (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def test_health_starting_until_warm_then_ready(fitted):
+    km, res = fitted
+    svc = _service(km, res, provision_copies=2)
+    assert svc.health == "STARTING" and svc.health_code() == 0
+    svc.warm()
+    assert svc.health == "READY" and svc.health_code() == 1
+
+
+def test_health_degraded_on_loop_errors_and_draining_on_close(fitted):
+    km, res = fitted
+    svc = _service(km, res, provision_copies=2)
+    svc.warm()
+    svc.loop_errors = 1
+    assert svc.health == "DEGRADED" and svc.health_code() == 2
+    svc.loop_errors = 0
+    svc.close()
+    assert svc.health == "DRAINING" and svc.health_code() == 3
+
+
+def test_health_degraded_when_replenisher_errors_or_dies(fitted):
+    km, res = fitted
+    svc = _service(km, res, provision_copies=2,
+                   replenisher={"low_water": 0, "high_water": 1,
+                                "poll_s": 0.01})
+    svc.warm()
+    assert svc.replenisher.running and svc.health == "READY"
+    svc.replenisher.errors = 1               # a swallowed top-up failure
+    assert svc.health == "DEGRADED"
+    svc.replenisher.errors = 0
+    svc.replenisher.stop()                   # daemon died under us
+    assert svc.health == "DEGRADED"
+    svc.close()
+    assert svc.health == "DRAINING"
+
+
+def test_health_gauge_registered_on_warm(fitted):
+    from repro.obs import metrics as _metrics
+    km, res = fitted
+    svc = _service(km, res, provision_copies=2)
+    svc.warm()
+    assert _metrics.get_registry().snapshot()["repro_serve_health"] == 1
+
+
+def test_stats_as_dict_keys_unchanged_by_health_machine(fitted):
+    """Pin: the health machine must not leak new keys into the 22-key
+    ServiceStats schema (dashboards + BENCH parsers rely on it)."""
+    km, res = fitted
+    svc = _service(km, res, provision_copies=2)
+    svc.warm()
+    assert len(svc.stats.as_dict()) == 22
+
+
+# ---------------------------------------------------------------------------
+# supervised wire server: crash-looping server, exactly-once answers
+# ---------------------------------------------------------------------------
+
+def test_supervised_server_restarts_and_answers_exactly_once(tmp_path):
+    """`serve_kmeans --supervised`: the supervisor pins the port, the
+    incarnation-0 server dies after its 3rd journaled response, the
+    respawned server (crash switch stripped) replays the journal — and
+    the client's rid-pinned waves get all 6 requests answered exactly
+    once, bit-exact vs the in-process reference."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    ck = str(tmp_path / "ck")
+    args = ["--supervised", "--serve-port", "0",
+            "--n-train", "200", "--d-a", str(D_A), "--d-b", str(D_B),
+            "--k", str(K), "--iters", "2", "--rungs", "16",
+            "--serve-checkpoint-dir", ck, "--provision-copies", "16",
+            "--die-after-responses", "3", "--idle-timeout", "120",
+            "--seed", "0"]
+    sup = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve_kmeans"] + args,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env)
+    port = None
+    try:
+        for line in sup.stdout:
+            m = re.search(r"SERVING (\d+)", line)
+            if m:
+                port = int(m.group(1))
+                break
+        assert port is not None, "supervised server never reached SERVING"
+        b = _batches(6)
+        t = SocketTransport("connect", port=port, io_timeout_s=5.0)
+        client = ScoringClient(t, deadline_s=15.0, try_timeout_s=0.5,
+                               waves=20, retry_wait_s=2.0)
+        got = {}
+        for i, (xa, xb) in enumerate(b):
+            got[i] = client.score(xa, xb, rid=i)
+        client.bye()
+        t.close()
+        out_rest = sup.communicate(timeout=120)[0]
+    finally:
+        if sup.poll() is None:
+            sup.kill()
+            sup.communicate()
+    # the supervisor observed exactly one crash (rc=17) and one restart,
+    # then a clean terminal exit
+    assert sup.returncode == 0, out_rest
+    assert "restart 1 after rc=17" in out_rest
+    assert "SUPERVISOR terminal: clean exit (rc=0, restarts=1)" in out_rest
+    # exactly-once, bit-exact
+    assert sorted(got) == list(range(6))
+    ds = FraudDataset.synthesize(n=200, d_a=D_A, d_b=D_B, n_clusters=K,
+                                 seed=0)
+    km = SecureKMeans(KMeansConfig(k=K, iters=2, seed=0, offline="pooled"))
+    res = km.fit(ds.x_a, ds.x_b)
+    ref = _one_at_a_time(_service(km, res, provision_copies=16), b)
+    _assert_same_responses(got, ref)
